@@ -1,0 +1,244 @@
+"""§Perf hillclimb harness: compile ONE cell under a named variant, print the
+three roofline terms + the op-level byte breakdown. This is the per-iteration
+measurement tool of the hypothesis → change → re-lower → re-analyse loop.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell qwen-decode \
+        --variant baseline|cache_carry
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell granite-train-multi \
+        --variant baseline|grouped_moe
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell nemotron-train-multi \
+        --variant baseline|hier|hier_int8
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import SHAPES, get_model_config, get_parallel_config
+from repro.config.base import TrainConfig
+from repro.launch.dryrun import HBM_BW, ICI_BW, OTN_BW, PEAK_FLOPS
+from repro.launch.hlo_analysis import collective_summary, op_breakdown
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    decode_input_specs, params_and_opt_specs, train_input_specs,
+)
+from repro.models import build_model
+from repro.parallel.compression import compressed_psum
+from repro.parallel.sharding import named
+from repro.train.optimizer import adam_update, clip_by_global_norm
+
+
+def analyse(lowered, multi_pod, model_flops, chips, label):
+    t0 = time.time()
+    compiled = lowered.compile()
+    txt = compiled.as_text()
+    s = collective_summary(txt, multi_pod)
+    fl = s["hlo_dot_flops_per_device"]
+    hb = s["hlo_hbm_bytes_per_device"]
+    t_c = fl / PEAK_FLOPS
+    t_m = hb / HBM_BW
+    t_i = s["intra_pod_bytes_per_device"] / ICI_BW
+    t_x = s["inter_pod_bytes_per_device"] * 256 / OTN_BW if multi_pod else 0.0
+    print(f"\n===== {label} (compile {time.time() - t0:.0f}s) =====")
+    print(f"T_compute={t_c:.4f}s T_memory={t_m:.4f}s "
+          f"T_coll={t_i + t_x:.4f}s (intra={t_i:.4f} inter={t_x:.4f})")
+    print(f"useful_flops_ratio={model_flops / max(chips * fl, 1):.3f} "
+          f"inter_pod_bytes/pod={s['inter_pod_bytes_per_device'] * 256 / 1e9:.2f}GB")
+    print("top ops by HBM bytes:")
+    for op, b in op_breakdown(txt, top=8):
+        print(f"  {op:26s} {b / 1e9:10.2f} GB")
+    try:
+        ma = compiled.memory_analysis()
+        print(f"temp/device={ma.temp_size_in_bytes / 1e9:.2f}GB "
+              f"args={ma.argument_size_in_bytes / 1e9:.2f}GB")
+    except Exception:
+        pass
+    return {"t_compute": t_c, "t_memory": t_m, "t_intra": t_i, "t_inter": t_x}
+
+
+def qwen_decode(variant):
+    arch, shape = "qwen1.5-0.5b", SHAPES["decode_32k"]
+    mc = get_model_config(arch)
+    par = get_parallel_config(arch, multi_pod=False)
+    mesh = make_production_mesh(multi_pod=False)
+    if variant == "cache_carry_tm":
+        mc = dataclasses.replace(mc, decode_k_time_minor=True)
+    model = build_model(mc, remat="none",
+                        decode_cache_in_carry=(variant in
+                                               ("cache_carry",
+                                                "cache_carry_tm")))
+    params_s, params_p, _, _ = params_and_opt_specs(model, par, with_opt=False)
+    cache_s, cache_p, inp_s, inp_p, pos_s = decode_input_specs(mc, par, shape)
+
+    def serve_step(params, caches, inp, pos):
+        caches, logits = model.decode_step(params, caches, inp, pos)
+        return caches, jnp.argmax(logits, -1).astype(jnp.int32)
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(named(mesh, params_p), named(mesh, cache_p),
+                               named(mesh, inp_p), None),
+                 donate_argnums=(1,))
+    with jax.set_mesh(mesh):
+        lowered = fn.lower(params_s, cache_s, inp_s, pos_s)
+    mf = 2.0 * mc.active_param_count() * shape.global_batch
+    return analyse(lowered, False, mf, 256, f"qwen decode_32k [{variant}]")
+
+
+def _train_cell(arch, variant, grouped_moe=False, hier=None):
+    shape = SHAPES["train_4k"]
+    mc = get_model_config(arch)
+    if grouped_moe:
+        mc = dataclasses.replace(mc, moe_group_by_batch=True)
+    par = get_parallel_config(arch, multi_pod=True)
+    mesh = make_production_mesh(multi_pod=True)
+    model = build_model(mc, remat=par.remat)
+    params_s, params_p, opt_s, opt_p = params_and_opt_specs(model, par)
+    tc = TrainConfig(global_batch=shape.global_batch, seq_len=shape.seq_len)
+    batch_s, batch_p = train_input_specs(mc, par, shape)
+
+    if hier is None:
+        def train_step(params, opt_state, batch):
+            (loss, m), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True)(params, batch)
+            grads, gn = clip_by_global_norm(grads, tc.grad_clip)
+            params, opt_state, om = adam_update(params, grads, opt_state, tc)
+            return params, opt_state, {"loss": loss}
+    elif hier in ("vmap", "vmap_int8"):
+        # pure-pjit hierarchical exchange: params stacked [2, ...] and
+        # sharded P("pod", ...) — physically identical to pod replication,
+        # but vmap(grad) over the pod dim keeps per-pod gradients UNREDUCED.
+        # The explicit mean over dim 0 then moves only the (data, model)-
+        # sharded 2D shards across the OTN (reduce-scatter-first ordering).
+        # int8 variant: quantize, collective-permute (flip) the int8
+        # payload, dequant-sum locally — int8 on the wire.
+        compress = hier == "vmap_int8"
+
+        def train_step(params2, opt_state2, batch):
+            b2 = {k: v.reshape(2, v.shape[0] // 2, *v.shape[1:])
+                  for k, v in batch.items()}
+            (loss, m), grads2 = jax.vmap(jax.value_and_grad(
+                model.loss_fn, has_aux=True))(params2, b2)
+            if compress:
+                from repro.parallel.compression import (
+                    dequantize_int8, quantize_int8)
+
+                def exchange(g):
+                    q, scale = jax.vmap(quantize_int8)(g)      # [2,...] int8
+                    qo = jnp.flip(q, 0)                        # pod permute
+                    so = jnp.flip(scale, 0)
+                    mine = jax.vmap(lambda qq, ss: dequantize_int8(
+                        qq, ss, g.shape[1:], jnp.float32))(q, scale)
+                    theirs = jax.vmap(lambda qq, ss: dequantize_int8(
+                        qq, ss, g.shape[1:], jnp.float32))(qo, so)
+                    return ((mine + theirs) / 2.0).astype(g.dtype)
+
+                grads2 = jax.tree.map(exchange, grads2)
+            else:
+                grads2 = jax.tree.map(
+                    lambda g: jnp.broadcast_to(
+                        jnp.mean(g.astype(jnp.float32), axis=0,
+                                 keepdims=True), g.shape).astype(g.dtype),
+                    grads2)
+            grads2, gn = clip_by_global_norm(grads2, tc.grad_clip * 1.41421)
+            params2, opt_state2, om = adam_update(params2, grads2,
+                                                  opt_state2, tc)
+            return params2, opt_state2, {"loss": jnp.mean(loss)}
+
+        # stack every param/opt leaf with a leading pod dim
+        def stack_specs(t):
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((2, *s.shape), s.dtype), t)
+        from repro.train.optimizer import AdamState
+        params_s = stack_specs(params_s)
+        opt_s = AdamState(step=opt_s.step, m=stack_specs(opt_s.m),
+                          v=stack_specs(opt_s.v))
+
+        def stack_pspec(t):
+            return jax.tree.map(lambda s: P("pod", *s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+        params_p = stack_pspec(params_p)
+        opt_p = AdamState(step=P(), m=stack_pspec(opt_p.m),
+                          v=stack_pspec(opt_p.v))
+    else:
+        # geo train step: shard_map over the POD axis only (auto over
+        # data/model). Per-pod grads from the pod-local batch half; the pod
+        # exchange is explicit — psum (hier) or int8 error-feedback
+        # compressed (hier_int8) — so ONLY the (data,model)-sharded gradient
+        # shard crosses the OTN.
+        compress = hier == "int8"
+
+        def pod_step(params, opt_state, batch):
+            def loss_fn(p, b):
+                loss, m = model.loss_fn(p, b)
+                return loss, m
+            (loss, m), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            if compress:
+                flat, tree = jax.tree.flatten(grads)
+                outs = []
+                for g in flat:
+                    err = jnp.zeros_like(g, dtype=jnp.float32)
+                    o, _ = compressed_psum(g, "pod", err)
+                    outs.append(o / 2.0)
+                grads = tree.unflatten(outs)
+            else:
+                grads = jax.tree.map(
+                    lambda g: (jax.lax.psum(g.astype(jnp.float32), "pod")
+                               / 2.0).astype(g.dtype), grads)
+            grads, gn = clip_by_global_norm(grads, tc.grad_clip)
+            params, opt_state, om = adam_update(params, grads, opt_state, tc)
+            return params, opt_state, {"loss": jax.lax.pmean(loss, "pod")}
+
+        # shard_map specs mention ONLY the manual axis ("pod"); the
+        # data/model sharding stays with the outer jit in_shardings (auto).
+        def _rep(tree):
+            return jax.tree.map(lambda s: P(), tree,
+                                is_leaf=lambda x: isinstance(x, P))
+        bspec_pod = jax.tree.map(
+            lambda s: P("pod", *([None] * (len(s) - 1))), batch_p,
+            is_leaf=lambda x: isinstance(x, P))
+        from repro.train.optimizer import AdamState
+        opt_rep = AdamState(step=P(), m=_rep(params_p), v=_rep(params_p))
+        train_step = jax.shard_map(
+            pod_step, mesh=mesh,
+            in_specs=(_rep(params_p), opt_rep, bspec_pod),
+            out_specs=(_rep(params_p), opt_rep, P()),
+            check_vma=False, axis_names={"pod"})
+
+    in_sh = (named(mesh, params_p), named(mesh, opt_p), named(mesh, batch_p))
+    out_sh = (named(mesh, params_p), named(mesh, opt_p), None)
+    fn = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(0, 1))
+    with jax.set_mesh(mesh):
+        lowered = fn.lower(params_s, opt_s, batch_s)
+    mf = 6.0 * mc.active_param_count() * shape.global_batch * shape.seq_len
+    return analyse(lowered, True, mf, 512, f"{arch} train_4k multi [{variant}]")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    choices=["qwen-decode", "granite-train-multi",
+                             "nemotron-train-multi"])
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    if args.cell == "qwen-decode":
+        qwen_decode(args.variant)
+    elif args.cell == "granite-train-multi":
+        _train_cell("granite-moe-1b-a400m", args.variant,
+                    grouped_moe=(args.variant == "grouped_moe"))
+    else:
+        hier = {"baseline": None, "hier": "vmap", "hier_int8": "vmap_int8",
+                "smap": "psum", "smap_int8": "int8"}[args.variant]
+        _train_cell("nemotron-4-340b", args.variant, hier=hier)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Kernel micro-benchmarks.
+
+On CPU the Pallas kernels run in interpret mode (Python — correctness only,
+not speed), so the MEANINGFUL µs numbers here are the jnp reference paths
+(what the dry-run lowers); kernel rows are labeled interpret-mode.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import attention_ref, ssd_ref
+from repro.models.attention import chunked_causal_attention
+from repro.models.ssm import ssd_chunked
+from repro.models.rglru import rglru_scan
+
+
+def _time(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(full: bool = False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # attention: chunked jnp path (the dry-run path)
+    b, s, hq, hk, d = 1, 1024, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hk, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hk, d), jnp.float32)
+    f = jax.jit(lambda q, k, v: chunked_causal_attention(
+        q, k, v, block_q=256, block_kv=256))
+    rows.append((f"kernelref/chunked_attn/b{b}s{s}h{hq}d{d}",
+                 _time(f, q, k, v), "jnp flash-style (dry-run path)"))
+    fr = jax.jit(attention_ref)
+    rows.append((f"kernelref/naive_attn/b{b}s{s}h{hq}d{d}",
+                 _time(fr, q, k, v), "naive oracle"))
+
+    # ssd
+    b, s, h, p, n = 2, 1024, 8, 64, 64
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[0], (b, s, 1, n)) * 0.3
+    C = jax.random.normal(ks[1], (b, s, 1, n)) * 0.3
+    fs = jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0])
+    rows.append((f"kernelref/ssd_chunked/b{b}s{s}h{h}", _time(fs, x, dt, A, B, C),
+                 "jnp chunked SSD (dry-run path)"))
+    fq = jax.jit(ssd_ref)
+    rows.append((f"kernelref/ssd_sequential/b{b}s{s}h{h}",
+                 _time(fq, x, dt, A, B, C), "sequential oracle"))
+
+    # rglru associative scan
+    from repro.models.rglru import init_rglru_block
+    from repro.config import get_model_config
+    cfg = get_model_config("recurrentgemma-2b", smoke=True)
+    pr = init_rglru_block(jax.random.PRNGKey(1), cfg)
+    xw = jax.random.normal(key, (2, 1024, cfg.rglru_width), jnp.float32)
+    fg = jax.jit(lambda x: rglru_scan(pr, x)[0])
+    rows.append((f"kernelref/rglru_assoc_scan/s1024w{cfg.rglru_width}",
+                 _time(fg, xw), "jnp associative scan (dry-run path)"))
+
+    if full:
+        from repro.kernels.flash_attention import flash_attention_fwd
+        t0 = time.time()
+        flash_attention_fwd(q[:, :256], k[:, :256], v[:, :256],
+                            block_q=128, block_kv=128, interpret=True)
+        rows.append(("kernel/flash_attention_interpret/s256",
+                     (time.time() - t0) * 1e6,
+                     "Pallas interpret mode (correctness only)"))
+    return rows

@@ -1,0 +1,85 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b / 1e12:.2f}TB"
+    if b >= 1e9:
+        return f"{b / 1e9:.2f}GB"
+    if b >= 1e6:
+        return f"{b / 1e6:.1f}MB"
+    return f"{b / 1e3:.0f}KB"
+
+
+def load(dirname):
+    cells = [json.load(open(f)) for f in sorted(glob.glob(
+        os.path.join(dirname, "*.json")))]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    cells.sort(key=lambda c: (c["arch"], order.get(c["shape"], 9), c["mesh"]))
+    return cells
+
+
+def dryrun_table(cells):
+    print("| arch | shape | mesh | status | compile | params/dev | temp/dev |"
+          " HLO flops/dev | HBM bytes/dev | coll bytes/dev (inter-pod) |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        st = c.get("status", "?")
+        if st != "OK":
+            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | {st} |"
+                  " - | - | - | - | - | - |")
+            continue
+        arg = c.get("argument_size_in_bytes", 0)
+        tmp = c.get("temp_size_in_bytes", 0)
+        fl = c.get("hlo_dot_flops_per_device", 0)
+        hb = c.get("hlo_hbm_bytes_per_device", 0)
+        cb = c.get("collective_bytes_per_device", 0)
+        ip = c.get("inter_pod_bytes_per_device", 0)
+        print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | OK | "
+              f"{c.get('compile_s', 0):.0f}s | {fmt_bytes(arg)} | "
+              f"{fmt_bytes(tmp)} | {fl:.2e} | {fmt_bytes(hb)} | "
+              f"{fmt_bytes(cb)} ({fmt_bytes(ip)}) |")
+
+
+def roofline_table(cells):
+    print("| arch | shape | mesh | T_comp | T_mem | T_coll(intra+inter) |"
+          " dominant | roofline frac | useful |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        if c.get("status") != "OK":
+            continue
+        rf = c["roofline"]
+        tc, tm, tl = rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"]
+        b = max(tc, tm, tl)
+        print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | {tc:.3f}s | "
+              f"{tm:.3f}s | {tl:.3f}s ({rf['t_coll_intra_s']:.3f}+"
+              f"{rf['t_coll_inter_s']:.3f}) | {rf['dominant']} | "
+              f"{tc / b if b else 0:.3f} | {rf['useful_flops_ratio']:.2f} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--which", default="both",
+                    choices=["dryrun", "roofline", "both"])
+    args = ap.parse_args()
+    cells = load(args.dir)
+    if args.which in ("dryrun", "both"):
+        dryrun_table(cells)
+        print()
+    if args.which in ("roofline", "both"):
+        roofline_table(cells)
+
+
+if __name__ == "__main__":
+    main()

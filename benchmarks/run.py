@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV. Default = reduced grids (minutes on
+CPU); ``--full`` = the paper's complete grids.
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig3b,fig3cd,fig3e,sweeps,roofline,kernels")
+    args = ap.parse_args()
+
+    from benchmarks import figures, kernels_bench, roofline
+
+    suites = {
+        "fig3b": lambda: figures.fig3b_throughput(args.full),
+        "fig3cd": lambda: figures.fig3cd_buffer_pause(args.full),
+        "fig3e": lambda: figures.fig3e_fct(args.full),
+        "sweeps": lambda: figures.sweeps(args.full),
+        "kernels": lambda: kernels_bench.run(args.full),
+        "roofline": lambda: roofline.run(args.full),
+    }
+    selected = (args.only.split(",") if args.only else list(suites))
+
+    print("name,us_per_call,derived")
+    for name in selected:
+        for row in suites[name]():
+            n, us, derived = row
+            print(f"{n},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: the paper's mechanism in 60 lines.
+
+Runs the fluid simulator on the paper's dual-AI-DC topology at 100 km and
+compares conventional DCQCN RDMA against MatchRDMA on the three headline
+metrics (throughput, destination-OTN buffer, pause ratio).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.config.base import NetConfig
+from repro.netsim import run_experiment, throughput_workload
+
+
+def main():
+    cfg = NetConfig(distance_km=100.0)       # 500 µs one-way over the OTN
+    workload = throughput_workload(msg_size=1 << 20, concurrency=1,
+                                   num_flows=4)
+    print(f"dual AI-DC, {cfg.num_otn_links}x{cfg.link_gbps:.0f}G OTN, "
+          f"{cfg.distance_km:.0f} km, 4 inter-DC flows, 1 MB messages\n")
+    print(f"{'scheme':12s} {'throughput':>12s} {'peak dst-OTN buf':>18s} "
+          f"{'pause ratio':>12s}")
+    for scheme in ("dcqcn", "pseudo_ack", "themis", "matchrdma"):
+        r = run_experiment(cfg, workload, scheme, 100_000.0)
+        print(f"{scheme:12s} {r['throughput_gbps']:9.1f} Gbps "
+              f"{r['peak_buffer_mb']:15.1f} MB {r['pause_ratio']:12.3f}")
+    print("\nMatchRDMA: distance-insensitive throughput (budget-gated "
+          "pseudo-ACKs keep the sender window open), small destination "
+          "buffer and near-zero pause (source injection is rate-matched to "
+          "the destination's measured forwarding capability).")
+
+
+if __name__ == "__main__":
+    main()

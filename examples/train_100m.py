@@ -1,0 +1,48 @@
+"""End-to-end training driver: train a ~100M-param model for a few hundred
+steps on the synthetic Markov stream, with checkpointing + fault tolerance.
+
+The config is a scaled-down qwen1.5 family member (~100M params with the
+full 151936 vocab); loss must drop well below the unigram floor.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+
+from repro.config import get_model_config, register
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)  # ~20 s/step on 1 CPU core
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    # a ~100M-param member of the qwen1.5 family (vocab dominates)
+    base = get_model_config("qwen1.5-0.5b")
+    cfg100 = dataclasses.replace(
+        base, name="qwen1.5-100m", num_layers=6, d_model=512, num_heads=8,
+        num_kv_heads=8, d_ff=1408)
+    print(f"params: {cfg100.param_count() / 1e6:.1f}M")
+    register(cfg100, cfg100)  # expose to --arch lookup
+
+    train_mod.main([
+        "--arch", "qwen1.5-100m", "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--lr", "1e-3", "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "100", "--log-every", "25",
+    ])
+
+
+if __name__ == "__main__":
+    main()

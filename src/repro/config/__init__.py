@@ -1,0 +1,17 @@
+from repro.config.base import (
+    ATTN, LOCAL_ATTN, SSD, RGLRU,
+    MLP_SWIGLU, MLP_RELU2, MLP_GELU, MLP_MOE, MLP_NONE,
+    ModelConfig, NetConfig, ParallelConfig, RunConfig, ShapeSpec,
+    SHAPES, shape_applicable,
+)
+from repro.config.registry import (
+    get_model_config, get_parallel_config, list_archs, register,
+)
+
+__all__ = [
+    "ATTN", "LOCAL_ATTN", "SSD", "RGLRU",
+    "MLP_SWIGLU", "MLP_RELU2", "MLP_GELU", "MLP_MOE", "MLP_NONE",
+    "ModelConfig", "NetConfig", "ParallelConfig", "RunConfig", "ShapeSpec",
+    "SHAPES", "shape_applicable",
+    "get_model_config", "get_parallel_config", "list_archs", "register",
+]

@@ -1,0 +1,62 @@
+"""--arch registry: maps arch ids to (full ModelConfig, smoke ModelConfig).
+
+Each module in ``repro.configs`` registers itself on import via
+``register(full=..., smoke=..., parallel_overrides=...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, Optional
+
+from repro.config.base import ModelConfig, ParallelConfig
+
+_FULL: Dict[str, ModelConfig] = {}
+_SMOKE: Dict[str, ModelConfig] = {}
+_PAR_OVERRIDES: Dict[str, dict] = {}
+
+_ARCH_MODULES = {
+    "musicgen-large": "repro.configs.musicgen_large",
+    "qwen1.5-0.5b": "repro.configs.qwen1_5_0_5b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3_5_moe",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+}
+
+
+def register(full: ModelConfig, smoke: ModelConfig, parallel_overrides: Optional[dict] = None) -> None:
+    _FULL[full.name] = full
+    _SMOKE[full.name] = smoke
+    _PAR_OVERRIDES[full.name] = dict(parallel_overrides or {})
+
+
+def _ensure(name: str) -> None:
+    if name not in _FULL:
+        mod = _ARCH_MODULES.get(name)
+        if mod is None:
+            raise KeyError(
+                f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+        importlib.import_module(mod)
+
+
+def list_archs() -> list:
+    return sorted(_ARCH_MODULES)
+
+
+def get_model_config(name: str, smoke: bool = False) -> ModelConfig:
+    _ensure(name)
+    return (_SMOKE if smoke else _FULL)[name]
+
+
+def get_parallel_config(name: str, multi_pod: bool = False, **extra) -> ParallelConfig:
+    """Production ParallelConfig for an arch (its registered overrides + extras)."""
+    _ensure(name)
+    kw = dict(_PAR_OVERRIDES[name])
+    kw.update(extra)
+    kw["multi_pod"] = multi_pod
+    return ParallelConfig(**kw)

@@ -1,0 +1,5 @@
+"""Per-architecture configs (assigned pool) + the paper's netsim experiment grid.
+
+Import any module to register its arch; ``repro.config.get_model_config``
+does this lazily by id.
+"""

@@ -1,0 +1,150 @@
+"""Rate-budget generation + inter-OTN signalling (the middle segment).
+
+The destination OTN turns the slot-weighted rate estimate into a budget
+(headroom-scaled, floored, CNP-tightened) and ships it to the source OTN on
+a small high-priority control subchannel modeled as a lossless delay line
+(one-way propagation D + ``control_proc_slots`` slots of processing).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import NetConfig
+from repro.core.estimator import RateEstimate
+
+
+class BudgetState(NamedTuple):
+    budget: jax.Array            # bytes/s — current budget at the DESTINATION
+    tighten: jax.Array           # multiplicative reactive tightening in (0,1]
+    slots_clear: jax.Array       # consecutive clear slots since last raise
+    cap_ewma: jax.Array          # sticky EWMA of measured forwarding capability
+    have_cap: jax.Array          # 1.0 once capability has ever been measured
+
+
+def ctrl_window_slots(cfg: NetConfig) -> int:
+    """The control-uncertainty window τ (Eq. 1) in slots: a budget raise is
+    only observable after src<-budget (D) + effect->dst (D) + one slot."""
+    import math
+    return max(int(math.ceil(2.0 * cfg.one_way_delay_us / cfg.slot_us)) + 1, 4)
+
+
+def init_budget(cfg: NetConfig) -> BudgetState:
+    """Proactive initial budget: a conservative fraction of the destination
+    DC's drain capability (learned at flow setup), NOT the OTN line rate —
+    the source must never out-run the destination on a stale assumption."""
+    start = cfg.dst_dc_gbps * 1e9 / 8.0 * 0.25
+    return BudgetState(budget=jnp.float32(start), tighten=jnp.float32(1.0),
+                       slots_clear=jnp.float32(0.0),
+                       cap_ewma=jnp.float32(0.0), have_cap=jnp.float32(0.0))
+
+
+def update_budget(state: BudgetState, est: RateEstimate, cnp_in_slot: jax.Array,
+                  cong_recent: jax.Array, cfg: NetConfig,
+                  ctrl_slots: int = 1) -> BudgetState:
+    """Per-slot budget update at the destination OTN.
+
+    Two regimes (the rate-*matched* principle):
+      * destination constrained (congestion within the last control window):
+        budget = headroom · slot-weighted-estimate · tighten — source
+        injection is matched to what the destination demonstrably forwards;
+      * destination clear: multiplicative open-up (×2) paced at one raise per
+        control window τ — raising faster than the loop delay means raising
+        blind, and every blind raise costs a τ-window of excess in-flight
+        bytes at the destination buffer (Eq. 1).
+    ``tighten`` decays multiplicatively on CNP-heavy slots (reactive path)
+    and recovers slowly when clear.
+    """
+    cap = cfg.otn_capacity_gbps * 1e9 / 8.0
+    floor = cfg.budget_floor_mbps * 1e6 / 8.0
+    congested = cnp_in_slot > cfg.cnp_freq_thresh
+    tighten = jnp.where(congested,
+                        jnp.maximum(state.tighten * 0.95, 0.7),
+                        jnp.minimum(state.tighten * 1.02, 1.0))
+
+    # sticky EWMA capability: fold in fresh busy-slot measurements, keep the
+    # last known value otherwise (ring rotation must not amnesia the budget).
+    fresh = est.have_capability > 0
+    cap_ewma = jnp.where(
+        fresh,
+        jnp.where(state.have_cap > 0,
+                  0.8 * state.cap_ewma + 0.2 * est.capability,
+                  est.capability),
+        state.cap_ewma)
+    have_cap = jnp.maximum(state.have_cap, est.have_capability)
+
+    # match to demonstrated forwarding CAPABILITY, never to self-throttled
+    # egress; fall back to the plain slot-weighted estimate early on.
+    cap_rate = jnp.where(have_cap > 0, cap_ewma, est.rate)
+    matched = cfg.budget_headroom * cap_rate * tighten
+
+    constrained = cong_recent > 0.02
+    slots_clear = jnp.where(constrained, 0.0, state.slots_clear + 1.0)
+    raise_now = slots_clear >= ctrl_slots
+    # a full clear control window at the current rate is itself capability
+    # evidence: the destination absorbed the recent egress cleanly. Ratchet
+    # the capability up to it so the probe ceiling cannot deadlock below the
+    # true forwarding capability.
+    cap_ewma = jnp.where(raise_now & (have_cap > 0),
+                         jnp.maximum(cap_ewma, est.rate), cap_ewma)
+    # gentle probe once capability is known; ×2 slow-start before — but never
+    # blind-probe above 1.1× the destination's own egress-port speed (known
+    # at flow setup): that bound is physical.
+    declared = cfg.dst_dc_gbps * 1e9 / 8.0
+    ceiling = jnp.minimum(
+        1.1 * jnp.where(have_cap > 0, cap_ewma, declared), cap)
+    factor = jnp.where(have_cap > 0, cfg.budget_probe, 2.0)
+    open_up = jnp.where(raise_now,
+                        jnp.minimum(state.budget * factor, ceiling),
+                        state.budget)
+    slots_clear = jnp.where(raise_now, 0.0, slots_clear)
+
+    budget = jnp.clip(jnp.where(constrained, matched, open_up), floor, cap)
+    return BudgetState(budget=budget, tighten=tighten,
+                       slots_clear=slots_clear,
+                       cap_ewma=cap_ewma, have_cap=have_cap)
+
+
+class ControlChannel(NamedTuple):
+    """Delay line carrying (budget, congestion summary) DST -> SRC."""
+    line_budget: jax.Array       # [Dline]
+    line_summary: jax.Array      # [Dline]
+    idx: jax.Array               # scalar int32
+
+
+def init_channel(delay_steps: int, cfg: NetConfig) -> ControlChannel:
+    start = cfg.dst_dc_gbps * 1e9 / 8.0 * 0.25
+    d = max(delay_steps, 1)
+    return ControlChannel(
+        line_budget=jnp.full((d,), start, jnp.float32),
+        line_summary=jnp.zeros((d,), jnp.float32),
+        idx=jnp.int32(0),
+    )
+
+
+def channel_send_recv(chan: ControlChannel, budget: jax.Array,
+                      summary: jax.Array):
+    """Push this step's (budget, summary); pop the D-delayed values.
+
+    Returns (new_channel, budget_at_src, summary_at_src).
+    """
+    d = chan.line_budget.shape[0]
+    out_b = chan.line_budget[chan.idx]
+    out_s = chan.line_summary[chan.idx]
+    new = ControlChannel(
+        line_budget=chan.line_budget.at[chan.idx].set(budget),
+        line_summary=chan.line_summary.at[chan.idx].set(summary),
+        idx=jnp.mod(chan.idx + 1, d),
+    )
+    return new, out_b, out_s
+
+
+def fair_share(budget_total: jax.Array, active: jax.Array) -> jax.Array:
+    """Split the aggregate budget among active inter-DC flows.
+
+    active: [F] 0/1 mask. Max-min fair for equal demands = equal split.
+    """
+    n = jnp.maximum(active.sum(), 1.0)
+    return budget_total / n * active

@@ -1,0 +1,119 @@
+"""DCQCN rate machine (vectorized over flows) + the source-OTN proxy variant.
+
+The same pure-JAX DCQCN implementation serves three roles:
+  * at the SENDER for the DCQCN-like / pseudo-ACK / THEMIS-like baselines
+    (CNPs arrive after the full return path);
+  * at the SOURCE OTN for MatchRDMA's congestion-control *proxying* — the
+    machine reacts to the destination OTN's congestion summaries arriving on
+    the control subchannel (delay D instead of 2D + intra-DC);
+  * in unit tests, standalone.
+
+State follows Zhu et al. (SIGCOMM'15): per-flow current rate Rc, target Rt,
+alpha; an alpha-update timer; rate-increase timer + byte counter driving
+fast-recovery / additive / hyper increase stages.
+
+THEMIS-like fairness variant: increase scaled ∝ flow RTT, decrease attenuated
+for long-RTT flows (addresses congestion-induced unfairness between feedback
+loops of different lengths — ref 14).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import NetConfig
+
+_F = 5  # fast-recovery stage count
+
+
+class DcqcnState(NamedTuple):
+    rc: jax.Array           # [F] current rate (bytes/s)
+    rt: jax.Array           # [F] target rate
+    alpha: jax.Array        # [F]
+    t_alpha: jax.Array      # [F] µs since last alpha update
+    t_rate: jax.Array       # [F] µs since last rate-increase event
+    bytes_ctr: jax.Array    # [F] bytes since last byte-counter event
+    stage_t: jax.Array      # [F] timer stages since last cut
+    stage_b: jax.Array      # [F] byte stages since last cut
+
+
+def init_dcqcn(num_flows: int, line_rate: float) -> DcqcnState:
+    z = jnp.zeros((num_flows,), jnp.float32)
+    return DcqcnState(
+        rc=jnp.full((num_flows,), line_rate, jnp.float32),
+        rt=jnp.full((num_flows,), line_rate, jnp.float32),
+        alpha=jnp.full((num_flows,), 1.0, jnp.float32),
+        t_alpha=z, t_rate=z, bytes_ctr=z,
+        stage_t=z, stage_b=z,
+    )
+
+
+def step_dcqcn(
+    state: DcqcnState,
+    cnp: jax.Array,            # [F] 0/1 — CNP arrived this step
+    sent_bytes: jax.Array,     # [F] bytes sent this step
+    cfg: NetConfig,
+    *,
+    rtt_scale: jax.Array = None,   # [F] THEMIS fairness factor (None = 1)
+) -> DcqcnState:
+    dt = cfg.dt_us
+    g = cfg.dcqcn_g
+    rai = cfg.dcqcn_rai_mbps * 1e6 / 8.0
+    rhai = cfg.dcqcn_hai_mbps * 1e6 / 8.0
+    rmin = cfg.min_rate_mbps * 1e6 / 8.0
+    if rtt_scale is None:
+        rtt_scale = jnp.ones_like(state.rc)
+
+    cut = cnp > 0
+    # --- rate cut on CNP (THEMIS: attenuate for long-RTT flows) ---
+    alpha_eff = state.alpha / rtt_scale
+    rc_cut = jnp.maximum(state.rc * (1.0 - alpha_eff / 2.0), rmin)
+    rt_cut = state.rc
+    alpha_cut = (1.0 - g) * state.alpha + g
+
+    # --- alpha decay timer ---
+    t_alpha = state.t_alpha + dt
+    alpha_dec = t_alpha >= cfg.dcqcn_alpha_timer_us
+    alpha_no = jnp.where(alpha_dec, (1.0 - g) * state.alpha, state.alpha)
+    t_alpha_no = jnp.where(alpha_dec, 0.0, t_alpha)
+
+    # --- rate increase events (timer and byte counter) ---
+    t_rate = state.t_rate + dt
+    bytes_ctr = state.bytes_ctr + sent_bytes
+    timer_fire = t_rate >= cfg.dcqcn_rate_timer_us
+    byte_fire = bytes_ctr >= cfg.dcqcn_bytes_counter_mb * 1e6
+    fire = timer_fire | byte_fire
+    stage_t = jnp.where(timer_fire, state.stage_t + 1, state.stage_t)
+    stage_b = jnp.where(byte_fire, state.stage_b + 1, state.stage_b)
+    max_stage = jnp.maximum(stage_t, stage_b)
+
+    hyper = (stage_t > _F) & (stage_b > _F)
+    additive = (max_stage > _F) & ~hyper
+    inc = jnp.where(hyper, rhai, jnp.where(additive, rai, 0.0)) * rtt_scale
+    rt_inc = jnp.where(fire, state.rt + inc, state.rt)
+    rc_inc = jnp.where(fire, 0.5 * (state.rc + rt_inc), state.rc)
+
+    # --- merge: cut dominates ---
+    rc = jnp.where(cut, rc_cut, rc_inc)
+    rt = jnp.where(cut, rt_cut, rt_inc)
+    alpha = jnp.where(cut, alpha_cut, alpha_no)
+    return DcqcnState(
+        rc=jnp.clip(rc, rmin, None),
+        rt=rt,
+        alpha=jnp.clip(alpha, 0.0, 1.0),
+        t_alpha=jnp.where(cut, 0.0, t_alpha_no),
+        t_rate=jnp.where(cut | fire, 0.0, t_rate),
+        bytes_ctr=jnp.where(cut | byte_fire, 0.0, bytes_ctr),
+        stage_t=jnp.where(cut, 0.0, stage_t),
+        stage_b=jnp.where(cut, 0.0, stage_b),
+    )
+
+
+def themis_rtt_scale(rtt_us: jax.Array, rtt_ref_us: float = 10.0,
+                     cap: float = 4.0) -> jax.Array:
+    """RTT-aware fairness factor (sqrt-damped, clipped): long-haul flows
+    increase faster / cut softer so they are not starved by short-loop
+    flows — without inverting the unfairness."""
+    return jnp.clip(jnp.sqrt(rtt_us / rtt_ref_us), 1.0, cap)

@@ -1,0 +1,114 @@
+"""Communication-aware slot-weighted rate estimation (Fig. 2(e), right half).
+
+From the slot ring the destination OTN:
+  1. groups consecutive slots into windows of ``slots_per_window``;
+  2. classifies each window as a *stable recurrent rate window* (low
+     coefficient of variation, no congestion flags) or *jitter-dominated*;
+  3. estimates the future sustainable inter-DC rate as a weighted mean —
+     stable windows weighted ``stable_weight``, jittery ones
+     ``jitter_weight`` (conservative), congested slots additionally
+     tightened;
+  4. optionally applies the LLM-periodicity predictor: if the most recent
+     window closely matches the window one iteration-period ago, the rates
+     observed *after* that historical window are used as the forecast
+     (communication-aware anticipation of the next comm phase).
+
+All pure functions over SlotRing — used inside the netsim scan and unit-
+testable standalone.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import NetConfig
+from repro.core.slots import SlotRing, ordered_history
+
+_EPS = 1e-9
+
+
+class RateEstimate(NamedTuple):
+    rate: jax.Array          # bytes/s — the slot-weighted estimate
+    stable_frac: jax.Array   # fraction of windows classified stable
+    recurrent: jax.Array     # 1.0 if the periodic predictor fired
+    capability: jax.Array    # bytes/s — busy-slot forwarding-capability est.
+    have_capability: jax.Array  # 1.0 once any busy slot has been observed
+
+
+def window_stats(rates: jax.Array, congested: jax.Array, busy: jax.Array,
+                 valid: jax.Array, slots_per_window: int):
+    """Reshape oldest-first history into windows; per-window mean/CV/flags."""
+    r = rates.shape[0]
+    nw = r // slots_per_window
+    cut = nw * slots_per_window
+    rw = rates[:cut].reshape(nw, slots_per_window)
+    cw = congested[:cut].reshape(nw, slots_per_window)
+    bw = busy[:cut].reshape(nw, slots_per_window)
+    vw = valid[:cut].reshape(nw, slots_per_window)
+    w_valid = vw.min(axis=1)                                  # window fully valid
+    mean = rw.mean(axis=1)
+    std = rw.std(axis=1)
+    cv = std / jnp.maximum(mean, _EPS)
+    cong = cw.max(axis=1)
+    busy_frac = bw.mean(axis=1)
+    return mean, cv, cong, busy_frac, w_valid
+
+
+def slot_weighted_estimate(ring: SlotRing, cfg: NetConfig) -> RateEstimate:
+    rates, congested, busy, valid = ordered_history(ring)
+    mean, cv, cong, busy_frac, w_valid = window_stats(
+        rates, congested, busy, valid, cfg.slots_per_window)
+    stable = ((cv < cfg.stable_cv_thresh) & (cong < 0.5)).astype(jnp.float32)
+    w = jnp.where(stable > 0, cfg.stable_weight, cfg.jitter_weight) * w_valid
+    # recency weighting: newer windows count more (linear ramp 0.5 .. 1.0)
+    nw = mean.shape[0]
+    recency = 0.5 + 0.5 * (jnp.arange(nw) + 1) / nw
+    w = w * recency
+    est = jnp.sum(w * mean) / jnp.maximum(jnp.sum(w), _EPS)
+    stable_frac = (jnp.sum(stable * w_valid)
+                   / jnp.maximum(jnp.sum(w_valid), _EPS))
+
+    # forwarding-capability estimate: rates observed while BACKLOGGED are the
+    # destination's demonstrated drain capability; clear slots only lower-
+    # bound it (egress == demand there). Stability weighting still applies.
+    wcap = w * busy_frac
+    have_cap = (jnp.sum(wcap) > _EPS).astype(jnp.float32)
+    cap = jnp.sum(wcap * mean) / jnp.maximum(jnp.sum(wcap), _EPS)
+    return RateEstimate(rate=est, stable_frac=stable_frac,
+                        recurrent=jnp.float32(0.0),
+                        capability=cap, have_capability=have_cap)
+
+
+def periodic_estimate(ring: SlotRing, cfg: NetConfig,
+                      period_slots: int) -> RateEstimate:
+    """Seasonal forecast keyed to the LLM iteration period.
+
+    If the latest ``slots_per_window`` slots match the same-phase window one
+    period earlier (relative L1 distance < stable_cv_thresh), forecast the
+    rates that FOLLOWED that historical window; else fall back to the
+    slot-weighted estimate.
+    """
+    base = slot_weighted_estimate(ring, cfg)
+    rates, congested, busy, valid = ordered_history(ring)
+    r = rates.shape[0]
+    spw = cfg.slots_per_window
+    if r < period_slots + 2 * spw or period_slots <= spw:
+        return base
+
+    cur = jax.lax.dynamic_slice_in_dim(rates, r - spw, spw)
+    hist = jax.lax.dynamic_slice_in_dim(rates, r - spw - period_slots, spw)
+    nxt = jax.lax.dynamic_slice_in_dim(rates, r - period_slots, spw)
+    cur_valid = jax.lax.dynamic_slice_in_dim(valid, r - spw - period_slots, spw)
+
+    denom = jnp.maximum(jnp.abs(cur).mean(), _EPS)
+    rel = jnp.abs(cur - hist).mean() / denom
+    match = (rel < cfg.stable_cv_thresh) & (cur_valid.min() > 0)
+    forecast = nxt.mean()
+    # blend: recurrent forecast replaces the base estimate when it fires
+    rate = jnp.where(match, forecast, base.rate)
+    return RateEstimate(rate=rate, stable_frac=base.stable_frac,
+                        recurrent=match.astype(jnp.float32),
+                        capability=base.capability,
+                        have_capability=base.have_capability)

@@ -1,0 +1,159 @@
+"""The composed MatchRDMA controller — three coordinated segments (Fig. 2(a)).
+
+  SOURCE-SIDE LOOP      budget-gated pseudo-ACK (pseudo_ack.py) +
+                        congestion-control proxy (cc_proxy.py driven by the
+                        destination's congestion summaries).
+  INTER-OTN LOOP        control subchannel carrying (budget, summary)
+                        DST -> SRC with one-way delay D (budget.py).
+  DESTINATION-SIDE LOOP slot observations (slots.py) -> slot-weighted /
+                        periodic rate estimation (estimator.py) -> budget
+                        generation (budget.py).
+
+``MatchRdmaState`` is a pytree carried through the netsim lax.scan;
+``matchrdma_slot_update`` runs once per slot boundary, the cheap per-step
+parts (pseudo-ACK gating, proxy CC) run every fluid step inside netsim.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import NetConfig
+from repro.core.budget import (
+    BudgetState, ControlChannel, channel_send_recv, ctrl_window_slots,
+    init_budget, init_channel, update_budget,
+)
+from repro.core.estimator import periodic_estimate, slot_weighted_estimate
+from repro.core.pseudo_ack import PseudoAckState, init_pseudo_ack
+from repro.core.slots import SlotObs, SlotRing, init_ring, push_slot
+
+
+class MatchRdmaState(NamedTuple):
+    ring: SlotRing               # destination slot history
+    budget: BudgetState          # destination budget state
+    chan: ControlChannel         # DST -> SRC control subchannel
+    budget_at_src: jax.Array     # scalar — budget currently known at source
+    summary_at_src: jax.Array    # scalar — congestion summary at source
+    pseudo: PseudoAckState       # source pseudo-ACK bookkeeping
+    # per-slot accumulators (reset at slot boundary)
+    acc_egress: jax.Array        # bytes forwarded this slot
+    acc_cnp: jax.Array           # CNPs this slot
+    acc_ack_delay: jax.Array     # summed ack-delay observations
+    acc_ack_n: jax.Array         # count of ack-delay observations
+    acc_queue: jax.Array         # summed local-queue occupancy samples
+    acc_paused: jax.Array        # steps this slot with egress PFC-paused
+
+
+def init_matchrdma(cfg: NetConfig, num_flows: int,
+                   history_slots: int = 0) -> MatchRdmaState:
+    if history_slots <= 0:
+        # cover at least two control windows of history (τ-aware estimation)
+        spw = cfg.slots_per_window
+        want = max(64, 2 * ctrl_window_slots(cfg))
+        history_slots = ((want + spw - 1) // spw) * spw
+    delay_steps = max(int(round(cfg.one_way_delay_us / cfg.dt_us)), 1)
+    delay_steps += int(cfg.control_proc_slots * cfg.slot_us / cfg.dt_us)
+    st = MatchRdmaState(
+        ring=init_ring(history_slots),
+        budget=init_budget(cfg),
+        chan=init_channel(delay_steps, cfg),
+        budget_at_src=init_budget(cfg).budget,
+        summary_at_src=jnp.float32(0.0),
+        pseudo=init_pseudo_ack(num_flows),
+        acc_egress=jnp.float32(0.0),
+        acc_cnp=jnp.float32(0.0),
+        acc_ack_delay=jnp.float32(0.0),
+        acc_ack_n=jnp.float32(0.0),
+        acc_queue=jnp.float32(0.0),
+        acc_paused=jnp.float32(0.0),
+    )
+    return st
+
+
+def accumulate_step(state: MatchRdmaState, egress_bytes: jax.Array,
+                    cnp_count: jax.Array, ack_delay_us: jax.Array,
+                    ack_n: jax.Array, queue_bytes: jax.Array,
+                    egress_paused: jax.Array = None) -> MatchRdmaState:
+    """Cheap per-fluid-step accumulation at the destination OTN."""
+    if egress_paused is None:
+        egress_paused = jnp.float32(0.0)
+    return state._replace(
+        acc_egress=state.acc_egress + egress_bytes,
+        acc_cnp=state.acc_cnp + cnp_count,
+        acc_ack_delay=state.acc_ack_delay + ack_delay_us,
+        acc_ack_n=state.acc_ack_n + ack_n,
+        acc_queue=state.acc_queue + queue_bytes,
+        acc_paused=state.acc_paused + egress_paused,
+    )
+
+
+def step_channel(state: MatchRdmaState, summary: jax.Array = None) -> MatchRdmaState:
+    """Advance the control subchannel by one fluid step (every step).
+
+    ``summary`` is the concise congestion summary shipped with the budget.
+    It reflects the destination OTN's OWN overload (queue backlog) — leaf /
+    intra-DC congestion is already folded into the budget via the capability
+    estimate; feeding it to the proxy as well would double-control."""
+    if summary is None:
+        summary = (state.acc_cnp > 0).astype(jnp.float32)
+    chan, b_src, s_src = channel_send_recv(
+        state.chan, state.budget.budget, summary.astype(jnp.float32))
+    return state._replace(chan=chan, budget_at_src=b_src,
+                          summary_at_src=s_src)
+
+
+def slot_update(state: MatchRdmaState, cfg: NetConfig,
+                period_slots: int = 0) -> MatchRdmaState:
+    """Run at each slot boundary: classify, estimate, regenerate budget."""
+    slot_s = cfg.slot_us * 1e-6
+    steps_per_slot = max(int(round(cfg.slot_us / cfg.dt_us)), 1)
+    # pause-corrected egress rate: bytes / UNPAUSED time. Egress while the
+    # egress port is PFC-paused says nothing about forwarding capability.
+    paused_frac = state.acc_paused / steps_per_slot
+    unpaused_s = slot_s * jnp.maximum(1.0 - paused_frac, 1e-3)
+    mean_queue = state.acc_queue / steps_per_slot
+    obs = SlotObs(
+        egress_rate=state.acc_egress / unpaused_s,
+        ack_delay_us=state.acc_ack_delay / jnp.maximum(state.acc_ack_n, 1.0),
+        cnp_count=state.acc_cnp,
+        local_queue=mean_queue,
+    )
+    # capability is only measurable when backlogged AND mostly unpaused
+    busy = ((mean_queue > cfg.queue_thresh_kb * 1024.0)
+            & (paused_frac < 0.9)).astype(jnp.float32)
+    ring = push_slot(state.ring, obs, cfg, busy=busy)
+    if period_slots > 0:
+        est = periodic_estimate(ring, cfg, period_slots)
+    else:
+        est = slot_weighted_estimate(ring, cfg)
+    # fraction of the last control window flagged congested
+    # (drives match vs open-up)
+    from repro.core.slots import ordered_history
+    ctrl_slots = ctrl_window_slots(cfg)
+    _, congested_hist, _, valid = ordered_history(ring)
+    n_recent = min(max(ctrl_slots, 4 * cfg.slots_per_window),
+                   congested_hist.shape[0])
+    recent = congested_hist[-n_recent:]
+    recent_valid = valid[-n_recent:]
+    cong_recent = (jnp.sum(recent * recent_valid)
+                   / jnp.maximum(jnp.sum(recent_valid), 1.0))
+    budget = update_budget(state.budget, est, state.acc_cnp, cong_recent, cfg,
+                           ctrl_slots=ctrl_slots)
+    return state._replace(
+        ring=ring, budget=budget,
+        acc_egress=jnp.float32(0.0), acc_cnp=jnp.float32(0.0),
+        acc_ack_delay=jnp.float32(0.0), acc_ack_n=jnp.float32(0.0),
+        acc_queue=jnp.float32(0.0), acc_paused=jnp.float32(0.0),
+    )
+
+
+def maybe_slot_update(state: MatchRdmaState, cfg: NetConfig, step_idx: jax.Array,
+                      period_slots: int = 0) -> MatchRdmaState:
+    """Branchless slot update: applied when step_idx hits a slot boundary."""
+    steps_per_slot = max(int(round(cfg.slot_us / cfg.dt_us)), 1)
+    at_boundary = jnp.mod(step_idx + 1, steps_per_slot) == 0
+    updated = slot_update(state, cfg, period_slots)
+    return jax.tree.map(
+        lambda a, b: jnp.where(at_boundary, a, b), updated, state)

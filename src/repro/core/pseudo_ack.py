@@ -1,0 +1,53 @@
+"""Budget-gated pseudo-ACK generation at the source OTN (Fig. 2(c)/(d)).
+
+The source OTN tracks, per RDMA connection (identified by the RoCE header
+fields — QPN + PSN, Fig. 2(d)), the bytes it has accepted from the sender
+(``accepted``) and the bytes it has pseudo-ACKed back (``packed``). Credits
+accrue at the flow's budget share; each step the OTN releases
+
+    new_packs = min(accepted - packed, credits)
+
+so the sender's ACK-clocked window advances at source-local latency but
+never faster than the destination-sustainable budget. The ungated variant
+(credits = ∞) is the NTT pseudo-ACK baseline [ref 10].
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PseudoAckState(NamedTuple):
+    packed: jax.Array        # [F] bytes pseudo-ACKed so far
+    credits: jax.Array       # [F] byte credits (token bucket)
+
+
+def init_pseudo_ack(num_flows: int) -> PseudoAckState:
+    return PseudoAckState(
+        packed=jnp.zeros((num_flows,), jnp.float32),
+        credits=jnp.zeros((num_flows,), jnp.float32),
+    )
+
+
+def step_pseudo_ack(state: PseudoAckState, accepted: jax.Array,
+                    budget_share: jax.Array, dt_s: float,
+                    gated: bool, max_burst_s: float = 2e-3):
+    """One step. accepted: [F] cumulative bytes accepted at source OTN;
+    budget_share: [F] bytes/s. Returns (new_state, pseudo_acked_cum [F]).
+
+    Credits are capped at ``max_burst_s`` worth of budget so a long idle
+    phase cannot bank an unbounded burst (the paper's budget is a *rate*).
+    """
+    backlog = jnp.maximum(accepted - state.packed, 0.0)
+    if gated:
+        credits = jnp.minimum(state.credits + budget_share * dt_s,
+                              budget_share * max_burst_s)
+        release = jnp.minimum(backlog, credits)
+        credits = credits - release
+    else:
+        credits = state.credits
+        release = backlog
+    packed = state.packed + release
+    return PseudoAckState(packed=packed, credits=credits), packed

@@ -1,0 +1,81 @@
+"""Reservoir model of destination-OTN buffer stress — Eq. (1) of the paper.
+
+Two coupled reservoirs linked by a long-haul pipe with one-way delay D.
+Arrivals at the destination OTN are the D-delayed source output process;
+the destination forwards into the receiving AI-DC at r_out(t). The minimum
+runtime buffer is governed by the accumulated rate mismatch over the
+control-uncertainty window τ:
+
+    B_req >= sup_t ∫_t^{t+τ} ( r_in(u) - r_out(u) )⁺ du            (Eq. 1)
+
+These are pure-jnp utilities used by tests (the bound must hold against the
+simulated queue), by the estimator (to size headroom), and by the roofline
+step-time model (to size the OTN buffer a training step needs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rate_mismatch_integral(r_in: jax.Array, r_out: jax.Array, dt: float,
+                           tau_steps: int) -> jax.Array:
+    """∫_t^{t+τ} (r_in - r_out)⁺ du for every t, via a cumulative-sum window.
+
+    r_in, r_out: [T] rates (bytes/s) on a common grid of step dt (s).
+    Returns [T] array; entries within τ of the end use the truncated window.
+    """
+    excess = jnp.maximum(r_in - r_out, 0.0) * dt              # bytes per step
+    cs = jnp.concatenate([jnp.zeros(1), jnp.cumsum(excess)])  # [T+1]
+    t = excess.shape[0]
+    idx_hi = jnp.minimum(jnp.arange(t) + tau_steps, t)
+    return cs[idx_hi] - cs[jnp.arange(t)]
+
+
+def required_buffer(r_in: jax.Array, r_out: jax.Array, dt: float,
+                    tau_steps: int) -> jax.Array:
+    """B_req = sup_t of the windowed mismatch integral (Eq. 1)."""
+    return jnp.max(rate_mismatch_integral(r_in, r_out, dt, tau_steps))
+
+
+def queue_trajectory(r_in: jax.Array, r_out_cap: jax.Array, dt: float,
+                     q0: float = 0.0) -> jax.Array:
+    """Lindley recursion: q_{t+1} = (q_t + (r_in - r_out_cap)·dt)⁺.
+
+    ``r_out_cap`` is the *capacity* of the drain (the realized drain is
+    min(capacity, backlog/dt + arrivals)). Returns the queue series [T].
+    """
+    def step(q, rr):
+        ri, ro = rr
+        q_new = jnp.maximum(q + (ri - ro) * dt, 0.0)
+        return q_new, q_new
+
+    _, qs = jax.lax.scan(step, jnp.float32(q0), (r_in, r_out_cap))
+    return qs
+
+
+def control_uncertainty_window_us(one_way_delay_us: float,
+                                  proc_delay_us: float = 0.0,
+                                  slot_us: float = 0.0) -> float:
+    """τ for the segmented scheme: budget feedback takes one OTN-to-OTN
+    propagation (D) + control processing + up to one slot of estimation lag.
+
+    For *end-to-end* control (DCQCN baseline), τ ≈ 2·D + receiver processing
+    — twice as large, which is exactly why the paper's segmented control
+    shrinks B_req.
+    """
+    return one_way_delay_us + proc_delay_us + slot_us
+
+
+def buffer_bound_e2e_vs_segmented(peak_rate: float, matched_rate: float,
+                                  one_way_delay_us: float, slot_us: float):
+    """Analytic comparison used in EXPERIMENTS.md: worst-case B_req when the
+    drain drops to ``matched_rate`` while the source still injects
+    ``peak_rate`` for a full control window.
+
+    Returns (B_e2e, B_segmented) in bytes. peak/matched in bytes/s.
+    """
+    tau_e2e = 2.0 * one_way_delay_us * 1e-6
+    tau_seg = (one_way_delay_us + slot_us) * 1e-6
+    excess = max(peak_rate - matched_rate, 0.0)
+    return excess * tau_e2e, excess * tau_seg

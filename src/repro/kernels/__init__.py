@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the training substrate's compute hot-spots.
+
+MatchRDMA itself is control-plane (no kernel warranted — see DESIGN.md §2);
+these accelerate the model side: flash attention, the Mamba2 SSD scan, and
+the RG-LRU recurrence. Validated in interpret mode against ref.py oracles.
+"""
+from repro.kernels.ops import flash_attention, rglru_recurrence, ssd_scan
+
+__all__ = ["flash_attention", "rglru_recurrence", "ssd_scan"]

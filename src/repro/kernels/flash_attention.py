@@ -1,0 +1,130 @@
+"""Pallas TPU flash attention (forward): blockwise causal GQA with online
+softmax, explicit VMEM BlockSpecs.
+
+Layout: q [BH, S, D] (batch*q-heads flattened), k/v [BKV, S, D]. The grid is
+(bh, q_block, kv_block) with kv minor-most: on TPU the minor grid dimension
+executes sequentially on a core, so the (m, l, acc) running state lives in
+VMEM scratch across kv steps and the output block is written once at the
+last kv step. Causal block-skipping: kv blocks strictly above the diagonal
+are masked out (their contribution is exactly zero; the multiplicative
+rescale trick keeps the online softmax exact).
+
+MXU alignment: block sizes default to 512x512 tiles with D padded by the
+caller to a multiple of 128 (head_dim 64/128/256 all satisfy lane tiling
+after the standard (8,128) float32 / (16,128) bf16 packing).
+
+Validated in interpret mode against repro.kernels.ref.attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                scale: float, block_q: int, block_kv: int, softcap: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    # reset running state at the first kv block
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: kv blocks strictly past the diagonal contribute nothing
+    @pl.when(kj * block_kv <= qi * block_q + (block_q - 1))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                   # [Bq, D]
+        k = k_ref[0].astype(jnp.float32)                   # [Bk, D]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        k_pos = kj * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv",
+                                             "softcap", "interpret"))
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        block_q: int = 512, block_kv: int = 512,
+                        softcap: float = 0.0,
+                        interpret: bool = True) -> jax.Array:
+    """q: [B, S, Hq, D]; k, v: [B, S, Hk, D]. Returns [B, S, Hq, D].
+
+    ``interpret=True`` executes the kernel body in Python on CPU (the only
+    mode available in this container); on TPU pass interpret=False.
+    """
+    b, s, hq, d = q.shape
+    hk = k.shape[2]
+    g = hq // hk
+    scale = d ** -0.5
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0
+
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * hq, s, d)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * hk, s, d)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * hk, s, d)
+
+    nq = s // block_q
+    nk = s // block_kv
+    grid = (b * hq, nq, nk)
+
+    def q_index(bh, qi, kj):
+        return (bh, qi, 0)
+
+    def kv_index(bh, qi, kj):
+        return ((bh // hq) * hk + (bh % hq) // g, kj, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale, block_q=block_q,
+                          block_kv=block_kv, softcap=softcap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_index),
+            pl.BlockSpec((1, block_kv, d), kv_index),
+            pl.BlockSpec((1, block_kv, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_index),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return jnp.moveaxis(out.reshape(b, hq, s, d), 1, 2)

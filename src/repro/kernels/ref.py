@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These intentionally use the most direct formulation (materialized scores,
+step-by-step recurrences) — slow, obviously-correct references that the
+kernel test sweeps assert against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  softcap: float = 0.0, window: int = 0) -> jax.Array:
+    """Naive causal GQA attention. q [B,S,Hq,D]; k,v [B,S,Hk,D]."""
+    b, s, hq, d = q.shape
+    hk = k.shape[2]
+    g = hq // hk
+    qg = q.reshape(b, s, hk, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * d ** -0.5
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = i >= j
+    if window:
+        mask = mask & (i - j < window)
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, s, hq, d).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array) -> jax.Array:
+    """Step-by-step SSD recurrence (O(S) sequential — the ground truth).
+
+    x [b,s,h,p]; dt [b,s,h]; A [h] (<0); B,C [b,s,g,n]. Returns y [b,s,h,p].
+    h_t = h_{t-1} * exp(dt_t A) + dt_t * B_t ⊗ x_t ;  y_t = C_t · h_t
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp           # [b,h,p], [b,h], [b,h,n], [b,h,n]
+        decay = jnp.exp(dtt * Af[None, :])[..., None, None]
+        upd = (dtt[..., None] * Bt)[..., :, None] * xt[:, :, None, :]
+        state = state * decay + upd      # [b,h,n,p]
+        y = jnp.einsum("bhn,bhnp->bhp", Ct, state)
+        return state, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def rglru_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Step-by-step diagonal linear recurrence h_t = a_t h_{t-1} + b_t.
+
+    a, b: [B, S, W] (precomputed gates). Returns h [B, S, W] in f32.
+    """
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, jnp.zeros_like(af[:, 0]),
+                         (jnp.moveaxis(af, 1, 0), jnp.moveaxis(bf, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)

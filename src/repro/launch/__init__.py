@@ -1,0 +1,8 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` must be executed as a script/module (it sets
+XLA_FLAGS before importing jax) — do not import it from library code.
+"""
+from repro.launch.mesh import make_mesh_for, make_production_mesh
+
+__all__ = ["make_mesh_for", "make_production_mesh"]

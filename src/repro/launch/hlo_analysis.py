@@ -1,0 +1,402 @@
+"""Post-optimization HLO analysis: collective bytes per device, classified
+inter-pod vs intra-pod.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but NOT collective
+traffic — we parse the optimized HLO module text:
+
+  * find every all-reduce / all-gather / reduce-scatter / all-to-all /
+    collective-permute (+ async -start variants);
+  * read the participating group size from ``replica_groups`` (both the
+    explicit ``{{0,1},...}`` and the iota ``[groups,size]<=[...]`` forms);
+  * convert to ring-model bytes-on-wire per device;
+  * classify the mesh axes involved BY GROUP SIZE — exact for our meshes:
+    {2, 32, 512} necessarily span the pod (inter-DC) axis, {16, 256} are
+    intra-pod (data/model axes);
+  * multiply collectives inside while bodies by the loop trip count
+    (layer-scan / microbatch scans), recovered from the canonical
+    ``compare(iter, constant(N))`` condition.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|s32|s16|s8|u64|u32|u16|u8|"
+                       r"pred|f8e4m3fn|f8e5m2|c64|c128)\[([0-9,]*)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_COMP_START_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*(\([^()]*\)|[a-z0-9]+\[[0-9,]*\])")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every tensor literal in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Collective:
+    kind: str
+    group_size: int
+    result_bytes: int
+    count: int = 1          # after while-loop multipliers
+
+    def wire_bytes_per_device(self) -> float:
+        g = max(self.group_size, 1)
+        r = self.result_bytes
+        if self.kind == "all-reduce":
+            return 2.0 * r * (g - 1) / g
+        if self.kind == "all-gather":
+            return r * (g - 1) / g
+        if self.kind == "reduce-scatter":
+            return r * (g - 1)          # result is the scattered shard
+        if self.kind == "all-to-all":
+            return r * (g - 1) / g
+        return float(r)                 # collective-permute
+
+
+@dataclass
+class Computation:
+    name: str
+    collectives: List[Collective] = field(default_factory=list)
+    whiles: List[Tuple[str, str]] = field(default_factory=list)  # (body, cond)
+    calls: List[str] = field(default_factory=list)
+    fusion_calls: List[str] = field(default_factory=list)
+    fusion_sites: List[Tuple[str, int]] = field(default_factory=list)
+    max_const: int = 1      # max s32 constant seen (trip-count recovery)
+    dot_flops: float = 0.0  # FLOPs of dot ops defined directly in this comp
+    hbm_bytes: float = 0.0  # operand+result bytes of top-level ops
+    root_dus_update_bytes: int = -1  # >=0 when ROOT is dynamic-update-slice
+    root_op: str = ""       # op kind of the ROOT instruction
+
+
+_OP_NAME_RE = re.compile(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z0-9\-]+)\(")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "while", "conditional", "call", "iota", "partition-id",
+    "replica-id",
+}
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _first_operand_dims(line: str) -> Optional[List[int]]:
+    """Dims of the first operand inside the op's parens."""
+    try:
+        inner = line.split("(", 1)[1]
+    except IndexError:
+        return None
+    m = _SHAPE_RE.search(inner)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+_RHS_RE = re.compile(r"^(\([^=]*?\)|\S+)\s+([a-z0-9\-]+)\(")
+
+
+def _dims_of(shape_str: str) -> Optional[List[int]]:
+    ms = _SHAPE_RE.findall(shape_str)
+    if len(ms) != 1:
+        return None
+    dims = ms[0][1]
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+def parse_hlo_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    symbols: Dict[str, Tuple[int, Optional[List[int]]]] = {}
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        m = _COMP_START_RE.match(stripped)
+        if m and stripped.endswith("{"):
+            cur = Computation(name=m.group(1))
+            comps[cur.name] = cur
+            symbols = {}
+            # header params: name: shape / name: (tuple)
+            header = stripped[: stripped.rfind("->")]
+            for pname, pshape in _PARAM_RE.findall(header):
+                symbols[pname] = (_shape_bytes(pshape), _dims_of(pshape))
+            if stripped.startswith("ENTRY"):
+                entry_name = cur.name
+            continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+
+        dm = _DEF_RE.match(line)
+        opname, result_str, operand_seg = "", "", ""
+        if dm:
+            vname, rhs = dm.group(1), dm.group(2)
+            rm = _RHS_RE.match(rhs)
+            if rm:
+                result_str, opname = rm.group(1), rm.group(2)
+                rest = rhs[rm.end():]
+                operand_seg = rest.split(")", 1)[0]
+                symbols[vname] = (_shape_bytes(result_str),
+                                  _dims_of(result_str))
+
+        operand_names = re.findall(r"%([\w.\-]+)", operand_seg)
+        operand_bytes = sum(symbols.get(n, (0, None))[0]
+                            for n in operand_names)
+
+        # --- dot FLOPs: 2 x result_elems x prod(contracting dims of lhs)
+        if opname == "dot":
+            res_elems = 0
+            for dt, dims in _SHAPE_RE.findall(result_str):
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                res_elems += n
+            lhs_dims = (symbols.get(operand_names[0], (0, None))[1]
+                        if operand_names else None) or []
+            mc = _DOT_CONTRACT_RE.search(line)
+            contract = 1
+            if mc and lhs_dims:
+                for idx in mc.group(1).split(","):
+                    if idx and int(idx) < len(lhs_dims):
+                        contract *= lhs_dims[int(idx)]
+            cur.dot_flops += 2.0 * res_elems * contract
+        # --- HBM bytes. Writes-based model: every produced byte is written
+        # once and its inputs read ~once (2x result). Ops that genuinely
+        # stream large operands (dot, copy, concatenate, collectives) count
+        # operands + result. Slicing ops touch only the slice (in-place DUS
+        # on TPU) — and crucially, while-loop CARRIES passed through fusion
+        # operand lists are NOT re-counted every iteration (they alias in
+        # HBM), which a naive operand+result model inflates by the trip
+        # count. Fusions whose body ROOT is a dynamic-update-slice (scan-ys
+        # writes) are resolved at walk time to the UPDATE bytes, not the
+        # full-buffer result.
+        if dm and stripped.startswith("ROOT"):
+            cur.root_op = opname
+            if opname == "dynamic-update-slice":
+                cur.root_dus_update_bytes = (
+                    symbols.get(operand_names[1], (0, None))[0]
+                    if len(operand_names) > 1 else 0)
+        if opname == "fusion":
+            target = None
+            mfc = _CALLED_RE.search(line)
+            if mfc:
+                target = mfc.group(1)
+            cur.fusion_sites.append((target or "",
+                                     _shape_bytes(result_str)))
+        elif opname == "dynamic-update-slice":
+            upd = (symbols.get(operand_names[1], (0, None))[0]
+                   if len(operand_names) > 1 else 0)
+            cur.hbm_bytes += 2 * upd
+        elif opname == "dynamic-slice":
+            cur.hbm_bytes += 2 * _shape_bytes(result_str)
+        elif opname in ("dot", "convolution", "copy", "concatenate",
+                        "all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute", "gather",
+                        "scatter", "pad", "transpose", "reverse"):
+            cur.hbm_bytes += _shape_bytes(result_str) + operand_bytes
+        elif opname == "convert":
+            # pure dtype casts are a CPU-backend bf16-emulation artifact —
+            # fused/free on the TPU target (DESIGN.md hardware adaptation)
+            pass
+        elif opname and opname not in _SKIP_BYTES_OPS:
+            cur.hbm_bytes += 2 * _shape_bytes(result_str)
+        cm = _COLL_RE.search(line)
+        if cm and "-done" not in line.split("=")[0]:
+            kind = cm.group(1)
+            rbytes = _shape_bytes(result_str) or _shape_bytes(
+                line.split(f" {kind}", 1)[0])
+            gsz = 0
+            me = _GROUPS_EXPL_RE.search(line)
+            if me:
+                gsz = len(me.group(1).split(","))
+            else:
+                mi = _GROUPS_IOTA_RE.search(line)
+                if mi:
+                    gsz = int(mi.group(2))
+            cur.collectives.append(Collective(kind, gsz, rbytes))
+        if " while(" in line:
+            body = cond = None
+            for key, val in re.findall(r"(body|condition)=%?([\w.\-]+)", line):
+                if key == "body":
+                    body = val
+                else:
+                    cond = val
+            if body:
+                cur.whiles.append((body, cond or ""))
+        elif opname in ("fusion", "reduce", "sort", "scatter", "map",
+                        "reduce-window", "select-and-scatter"):
+            # bodies execute in-register: count their dot FLOPs, not bytes
+            for name in _CALLED_RE.findall(line):
+                cur.fusion_calls.append(name)
+        else:
+            for name in _CALLED_RE.findall(line):
+                cur.calls.append(name)
+            mb = _BRANCHES_RE.search(line)
+            if mb:
+                for b in mb.group(1).split(","):
+                    cur.calls.append(b.strip().lstrip("%"))
+        for c in _CONST_RE.findall(line):
+            cur.max_const = max(cur.max_const, int(c))
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def aggregate(comps: Dict[str, Computation]):
+    """Walk from entry with while trip-count multipliers.
+
+    Returns (collectives, dot_flops, hbm_bytes) — all per-device totals for
+    one execution of the entry computation."""
+    entry = comps.get("__entry__")
+    if entry is None:
+        return [], 0.0, 0.0
+    out: List[Collective] = []
+    totals = {"flops": 0.0, "bytes": 0.0}
+    seen_stack = set()
+
+    def walk(comp: Computation, mult: int, count_bytes: bool):
+        if comp.name in seen_stack:    # recursion guard
+            return
+        seen_stack.add(comp.name)
+        totals["flops"] += comp.dot_flops * mult
+        if count_bytes:
+            totals["bytes"] += comp.hbm_bytes * mult
+            # fusion call sites: DUS-rooted bodies (scan-ys writes) touch
+            # only the update slice; convert-rooted bodies are free dtype
+            # casts (CPU bf16 emulation); others 2x their result
+            for target, rbytes in comp.fusion_sites:
+                body = comps.get(target)
+                if body is not None and body.root_dus_update_bytes >= 0:
+                    totals["bytes"] += 2 * body.root_dus_update_bytes * mult
+                elif body is not None and body.root_op == "convert":
+                    pass
+                else:
+                    totals["bytes"] += 2 * rbytes * mult
+        for c in comp.collectives:
+            out.append(Collective(c.kind, c.group_size, c.result_bytes,
+                                  count=mult))
+        for body, cond in comp.whiles:
+            trip = comps[cond].max_const if cond in comps else 1
+            if body in comps:
+                walk(comps[body], mult * max(trip, 1), count_bytes)
+        for name in comp.calls:
+            if name in comps:
+                walk(comps[name], mult, count_bytes)
+        for name in comp.fusion_calls:
+            if name in comps:
+                walk(comps[name], mult, False)
+        seen_stack.discard(comp.name)
+
+    walk(entry, 1, True)
+    return out, totals["flops"], totals["bytes"]
+
+
+def aggregate_collectives(comps: Dict[str, Computation]) -> List[Collective]:
+    return aggregate(comps)[0]
+
+
+# group sizes that necessarily span the pod axis for our (2,16,16) mesh
+_POD_SIZES = {2, 32, 512}
+
+
+def op_breakdown(text: str, top: int = 20) -> list:
+    """Per-op-kind HBM-byte attribution with while multipliers — the
+    profiling view the §Perf hypothesis loop reads ('where do the bytes
+    go'). Returns [(opname, bytes)] sorted descending."""
+    comps = parse_hlo_module(text)
+    # re-attribute bytes per op kind by re-walking with a tracking shim
+    totals: Dict[str, float] = {}
+
+    # parse_hlo_module aggregates per computation; we need per-op detail, so
+    # do a light second pass collecting (comp -> {op: bytes}).
+    comps_parsed = parse_hlo_module(text)
+    entry = comps_parsed.get("__entry__")
+    if entry is None:
+        return []
+    seen = set()
+
+    def walk(comp, mult, count):
+        if comp.name in seen:
+            return
+        seen.add(comp.name)
+        if count:
+            totals["non-fusion"] = (totals.get("non-fusion", 0.0)
+                                    + comp.hbm_bytes * mult)
+            for target, rbytes in comp.fusion_sites:
+                body = comps_parsed.get(target)
+                if body is not None and body.root_dus_update_bytes >= 0:
+                    totals["fusion(dus-root)"] = (
+                        totals.get("fusion(dus-root)", 0.0)
+                        + 2 * body.root_dus_update_bytes * mult)
+                elif body is not None and body.root_op == "convert":
+                    totals["fusion(convert:free)"] = (
+                        totals.get("fusion(convert:free)", 0.0))
+                else:
+                    totals["fusion"] = (totals.get("fusion", 0.0)
+                                        + 2 * rbytes * mult)
+        for body, cond in comp.whiles:
+            trip = comps_parsed[cond].max_const if cond in comps_parsed else 1
+            if body in comps_parsed:
+                walk(comps_parsed[body], mult * max(trip, 1), count)
+        for n in comp.calls:
+            if n in comps_parsed:
+                walk(comps_parsed[n], mult, count)
+        for n in comp.fusion_calls:
+            if n in comps_parsed:
+                walk(comps_parsed[n], mult, False)
+        seen.discard(comp.name)
+
+    walk(entry, 1, True)
+    return sorted(totals.items(), key=lambda kv: -kv[1])[:top]
+
+
+def collective_summary(text: str, multi_pod: bool) -> dict:
+    colls, dot_flops, hbm_bytes = aggregate(parse_hlo_module(text))
+    inter = intra = 0.0
+    by_kind: Dict[str, float] = {}
+    for c in colls:
+        b = c.wire_bytes_per_device() * c.count
+        by_kind[c.kind] = by_kind.get(c.kind, 0.0) + b
+        if multi_pod and c.group_size in _POD_SIZES:
+            inter += b
+        else:
+            intra += b
+    return {
+        "collective_bytes_per_device": inter + intra,
+        "inter_pod_bytes_per_device": inter,
+        "intra_pod_bytes_per_device": intra,
+        "by_kind": by_kind,
+        "num_collectives": len(colls),
+        # trip-count-aware per-device totals (cost_analysis counts while
+        # bodies once; these multiply by loop trip counts)
+        "hlo_dot_flops_per_device": dot_flops,
+        "hlo_hbm_bytes_per_device": hbm_bytes,
+    }

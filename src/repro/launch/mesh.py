@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing never touches jax
+device state. Pod = AI-DC: the "pod" axis is the long-haul OTN boundary that
+MatchRDMA manages; "data" x "model" is the intra-DC 2D layout.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(par, devices=None):
+    """Mesh from a ParallelConfig (tests / small runs pass explicit devices)."""
+    import numpy as np
+    shape = par.mesh_shape()
+    axes = par.axis_names()
+    if devices is not None:
+        from jax.sharding import Mesh
+        arr = np.asarray(devices).reshape(shape)
+        return Mesh(arr, axes,
+                    axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

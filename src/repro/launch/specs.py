@@ -1,0 +1,100 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero allocation. The dry-run lowers directly
+from these.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config.base import ModelConfig, ParallelConfig, ShapeSpec
+from repro.models.model import Model
+from repro.models.transformer import init_caches
+from repro.parallel.sharding import ShardingRules
+from repro.train.optimizer import init_adam
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _batch_axes_or_none(par: ParallelConfig, batch: int):
+    """Batch sharding axes only when the batch divides them (long_500k has
+    global_batch=1 -> replicate)."""
+    axes = par.batch_axes()
+    import numpy as np
+    n = {"pod": par.pods, "data": par.data, "model": par.model}
+    total = 1
+    for a in axes:
+        total *= n[a]
+    return axes if batch % total == 0 else None
+
+
+def train_input_specs(model: ModelConfig, par: ParallelConfig,
+                      shape: ShapeSpec) -> Tuple[Dict[str, Any], Dict[str, P]]:
+    b, s = shape.global_batch, shape.seq_len
+    axes = _batch_axes_or_none(par, b)
+    bspec = P(axes) if axes else P()
+    specs, pspecs = {}, {}
+    if model.embed_inputs:
+        specs["tokens"] = SDS((b, s), jnp.int32)
+        pspecs["tokens"] = P(axes, None) if axes else P(None, None)
+    else:
+        specs["embeds"] = SDS((b, s, model.d_model), jnp.dtype(model.act_dtype))
+        pspecs["embeds"] = P(axes, None, None) if axes else P(None, None, None)
+    specs["labels"] = SDS((b, s), jnp.int32)
+    pspecs["labels"] = P(axes, None) if axes else P(None, None)
+    return specs, pspecs
+
+
+def prefill_input_specs(model: ModelConfig, par: ParallelConfig,
+                        shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    axes = _batch_axes_or_none(par, b)
+    if model.embed_inputs:
+        spec = SDS((b, s), jnp.int32)
+        pspec = P(axes, None) if axes else P(None, None)
+    else:
+        spec = SDS((b, s, model.d_model), jnp.dtype(model.act_dtype))
+        pspec = P(axes, None, None) if axes else P(None, None, None)
+    return spec, pspec
+
+
+def decode_input_specs(model: ModelConfig, par: ParallelConfig,
+                       shape: ShapeSpec):
+    """(cache_specs, cache_pspecs, inp_spec, inp_pspec, pos_spec)."""
+    b, s = shape.global_batch, shape.seq_len
+    axes = _batch_axes_or_none(par, b)
+    rules = ShardingRules(model, par)
+    cache = jax.eval_shape(
+        lambda: init_caches(model, b, s, jnp.dtype(model.act_dtype)))
+    cache_pspecs = rules.cache_tree_specs(cache)
+    if axes is None:
+        # replicate batch dim everywhere
+        cache_pspecs = jax.tree.map(
+            lambda sp: P(*[None if (isinstance(ax, tuple) or ax in ("pod", "data")) else ax
+                           for ax in sp]),
+            cache_pspecs, is_leaf=lambda x: isinstance(x, P))
+    if model.embed_inputs:
+        inp = SDS((b,), jnp.int32)
+        inp_p = P(axes) if axes else P()
+    else:
+        inp = SDS((b, 1, model.d_model), jnp.dtype(model.act_dtype))
+        inp_p = P(axes, None, None) if axes else P(None, None, None)
+    pos = SDS((), jnp.int32)
+    return cache, cache_pspecs, inp, inp_p, pos
+
+
+def params_and_opt_specs(modelobj: Model, par: ParallelConfig,
+                         with_opt: bool = True):
+    """ShapeDtypeStruct trees + PartitionSpec trees for params (+ AdamState)."""
+    params = jax.eval_shape(lambda: modelobj.init(jax.random.PRNGKey(0)))
+    rules = ShardingRules(modelobj.cfg, par)
+    pspecs = rules.params_tree_specs(params)
+    if not with_opt:
+        return params, pspecs, None, None
+    opt = jax.eval_shape(lambda p: init_adam(p, par.opt_state_dtype), params)
+    from repro.train.optimizer import AdamState
+    opt_pspecs = AdamState(step=P(), m=pspecs, v=pspecs)
+    return params, pspecs, opt, opt_pspecs

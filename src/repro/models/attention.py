@@ -1,0 +1,279 @@
+"""Attention: chunked causal GQA (flash-style, never materializes S×S),
+banded local attention, and cached decode paths.
+
+Layout conventions
+  q        [B, S, Hq, Dh]
+  k, v     [B, S, Hk, Dh]       (GQA: Hq = Hk * G)
+  cache    k/v  [B, Smax, Hk, Dh] (rope pre-applied to cached K)
+  local cache   ring buffer [B, W, Hk, Dh]
+
+The chunked path is the numerical oracle for the Pallas flash kernel
+(repro.kernels.flash_attention) — same online-softmax algorithm, pure jnp.
+Query blocks are a static Python loop so each block sees a *static-length*
+KV prefix (exactly-causal FLOPs, O(block²) memory); the KV prefix is
+processed by a lax.scan with f32 running (m, l, acc).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _split_gqa(q: jax.Array, num_kv: int) -> jax.Array:
+    """[B, S, Hq, D] -> [B, S, Hk, G, D]."""
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, num_kv, hq // num_kv, d)
+
+
+def _merge_gqa(o: jax.Array) -> jax.Array:
+    b, s, hk, g, d = o.shape
+    return o.reshape(b, s, hk * g, d)
+
+
+# ---------------------------------------------------------------------------
+# Chunked causal attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def chunked_causal_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_q: int = 1024,
+    block_kv: int = 1024,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Exact causal attention, computed block-by-block with online softmax."""
+    b, s, hq, dh = q.shape
+    hk = k.shape[2]
+    g = hq // hk
+    scale = dh ** -0.5
+
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    if s % block_q or s % block_kv:
+        blk = math.gcd(s, math.gcd(block_q, block_kv))
+        block_q = block_kv = max(blk, 1)
+    nq = s // block_q
+    nk = s // block_kv
+
+    qg = _split_gqa(q, hk)                                   # [b,s,hk,g,dh]
+    kb = k.reshape(b, nk, block_kv, hk, dh)
+    vb = v.reshape(b, nk, block_kv, hk, dh)
+
+    out_blocks = []
+    for i in range(nq):
+        q_i = jax.lax.dynamic_slice_in_dim(qg, i * block_q, block_q, axis=1)
+        # static-length causal prefix for this query block
+        n_pref = (i * block_q) // block_kv + 1               # blocks 0..diag
+        k_pref = kb[:, :n_pref]                              # [b,np,bk,hk,dh]
+        v_pref = vb[:, :n_pref]
+
+        m0 = jnp.full((b, hk, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, hk, g, block_q, dh), jnp.float32)
+
+        q_pos = i * block_q + jnp.arange(block_q)
+
+        def body(carry, inputs, _i=i):
+            m, l, acc = carry
+            j, k_j, v_j = inputs
+            sblk = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                              preferred_element_type=jnp.float32) * scale
+            if softcap > 0:
+                sblk = softcap * jnp.tanh(sblk / softcap)
+            k_pos = j * block_kv + jnp.arange(block_kv)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            sblk = jnp.where(mask, sblk, NEG_INF)
+            m_new = jnp.maximum(m, sblk.max(axis=-1))
+            p = jnp.exp(sblk - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        xs = (jnp.arange(n_pref),
+              jnp.moveaxis(k_pref, 1, 0), jnp.moveaxis(v_pref, 1, 0))
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+        o_i = acc / jnp.maximum(l[..., None], 1e-37)          # [b,hk,g,bq,dh]
+        out_blocks.append(jnp.moveaxis(o_i, 3, 1))            # [b,bq,hk,g,dh]
+
+    o = jnp.concatenate(out_blocks, axis=1)
+    return _merge_gqa(o).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Banded (sliding-window) local attention
+# ---------------------------------------------------------------------------
+
+def local_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Exact sliding-window causal attention: position t attends [t-W+1, t].
+
+    Query block size = W; each block attends its own block and the previous
+    one, masked to the exact band. Memory O(W²) per block.
+    """
+    b, s, hq, dh = q.shape
+    hk = k.shape[2]
+    g = hq // hk
+    scale = dh ** -0.5
+
+    if s <= window:
+        return chunked_causal_attention(q, k, v, block_q=min(1024, s),
+                                        block_kv=min(1024, s), softcap=softcap)
+    w = window
+    if s % w:
+        # pad tail (causal: padded key positions are never attended by real queries)
+        pad = w - s % w
+        zq = jnp.zeros((b, pad, hq, dh), q.dtype)
+        zk = jnp.zeros((b, pad, hk, dh), k.dtype)
+        o = local_attention(jnp.concatenate([q, zq], 1),
+                            jnp.concatenate([k, zk], 1),
+                            jnp.concatenate([v, zk], 1),
+                            window=window, softcap=softcap)
+        return o[:, :s]
+    nb = s // w
+    qg = _split_gqa(q, hk).reshape(b, nb, w, hk, g, dh)
+    kb = k.reshape(b, nb, w, hk, dh)
+    vb = v.reshape(b, nb, w, hk, dh)
+    # previous block (block -1 = zeros, fully masked anyway)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)               # [b,nb,2w,hk,dh]
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+
+    sblk = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qg, k2,
+                      preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        sblk = softcap * jnp.tanh(sblk / softcap)
+    q_pos = jnp.arange(w)[:, None]                           # within-block
+    k_pos = jnp.arange(2 * w)[None, :] - w                   # relative to block start
+    rel = q_pos - k_pos                                      # distance q - k
+    band = (rel >= 0) & (rel < w)
+    first_block = jnp.arange(nb)[:, None, None] == 0
+    valid = band[None] & ~(first_block & (k_pos[None] < 0))
+    sblk = jnp.where(valid[:, None, None], sblk, NEG_INF)
+    p = jax.nn.softmax(sblk, axis=-1)
+    o = jnp.einsum("bnhgqk,bnkhd->bnqhgd", p.astype(v2.dtype), v2)
+    return o.reshape(b, s, hk * g, dh).astype(q.dtype)
+
+
+def decode_attention_tm(
+    q: jax.Array,          # [B, Hq, Dh] (rope applied at pos)
+    k_cache_tm: jax.Array,  # [B, Hk, Dh, Smax]  (time-minor, dot-ready)
+    v_cache: jax.Array,     # [B, Smax, Hk, Dh]
+    pos: jax.Array,
+    *,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Decode against a TIME-MINOR K cache: QK^T contracts Dh with S free —
+    no per-step transpose of the whole cache (EXPERIMENTS.md §Perf Cell A)."""
+    b, hk, dh, smax = k_cache_tm.shape
+    hq = q.shape[1]
+    g = hq // hk
+    scale = dh ** -0.5
+    qg = q.reshape(b, hk, g, dh)
+    s = jnp.einsum("bhgd,bhds->bhgs", qg, k_cache_tm,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = jnp.arange(smax)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(
+    q: jax.Array,          # [B, Hq, Dh] (rope already applied at pos)
+    k_cache: jax.Array,    # [B, Smax, Hk, Dh]
+    v_cache: jax.Array,
+    pos: jax.Array,        # scalar int32: index of the NEW token (already written)
+    *,
+    softcap: float = 0.0,
+) -> jax.Array:
+    b, smax, hk, dh = k_cache.shape
+    hq = q.shape[1]
+    g = hq // hk
+    scale = dh ** -0.5
+    qg = q.reshape(b, hk, g, dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = jnp.arange(smax)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, hq, dh).astype(q.dtype)
+
+
+def decode_local_attention(
+    q: jax.Array,           # [B, Hq, Dh]
+    k_ring: jax.Array,      # [B, W, Hk, Dh] ring buffer (slot = pos % W)
+    v_ring: jax.Array,
+    pos: jax.Array,         # scalar: index of the NEW token (already written)
+    *,
+    softcap: float = 0.0,
+) -> jax.Array:
+    b, w, hk, dh = k_ring.shape
+    hq = q.shape[1]
+    g = hq // hk
+    scale = dh ** -0.5
+    qg = q.reshape(b, hk, g, dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_ring,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    # slot j holds absolute position p = pos - ((pos - j) mod W); valid if p >= 0
+    slots = jnp.arange(w)
+    slot_pos = pos - jnp.mod(pos - slots, w)
+    valid = (slot_pos >= 0)[None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_ring.dtype), v_ring,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Reference (naive) attention — used only by tests as an oracle
+# ---------------------------------------------------------------------------
+
+def naive_causal_attention(q, k, v, *, window: int = 0, softcap: float = 0.0):
+    b, s, hq, dh = q.shape
+    hk = k.shape[2]
+    qg = _split_gqa(q, hk)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * dh ** -0.5
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = i >= j
+    if window:
+        mask = mask & (i - j < window)
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return _merge_gqa(o).astype(q.dtype)

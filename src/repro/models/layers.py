@@ -1,0 +1,143 @@
+"""Basic layers: norms, rotary embeddings, MLPs, embedding/unembedding.
+
+Pure-functional: ``init_*`` builds a param dict, ``apply`` is a free function.
+Mixed precision: params live in ``param_dtype`` (usually bf16); norms, softmax
+and router math run in f32; matmuls run in the activation dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None) -> dict:
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), dtype=_dtype(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype=_dtype(cfg.param_dtype))
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float) -> jax.Array:
+    """RMSNorm / LayerNorm in f32, cast back to input dtype."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D] (or [..., 1, H, D] for decode); positions: [..., S]."""
+    dt = x.dtype
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [d/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, d/2]
+    cos = jnp.cos(ang)[..., :, None, :]                # [..., S, 1, d/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, cfg: ModelConfig, kind: str) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    pd = _dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d ** -0.5
+    scale_out = f ** -0.5
+    if kind == "swiglu":
+        return {
+            "w_gate": (jax.random.normal(k1, (d, f)) * scale_in).astype(pd),
+            "w_up": (jax.random.normal(k2, (d, f)) * scale_in).astype(pd),
+            "w_down": (jax.random.normal(k3, (f, d)) * scale_out).astype(pd),
+        }
+    # relu2 / gelu: classic 2-matrix MLP
+    return {
+        "w_up": (jax.random.normal(k1, (d, f)) * scale_in).astype(pd),
+        "w_down": (jax.random.normal(k2, (f, d)) * scale_out).astype(pd),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, p["w_up"])
+        h = jax.nn.silu(g) * u
+    elif kind == "relu2":
+        h = jnp.einsum("...d,df->...f", x, p["w_up"])
+        h = jnp.square(jax.nn.relu(h))
+    elif kind == "gelu":
+        h = jnp.einsum("...d,df->...f", x, p["w_up"])
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown mlp kind {kind!r}")
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key: jax.Array, cfg: ModelConfig) -> dict:
+    pd = _dtype(cfg.param_dtype)
+    p = {}
+    k1, k2 = jax.random.split(key)
+    if cfg.embed_inputs:
+        p["tok"] = (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(pd)
+    if not cfg.tie_embeddings or not cfg.embed_inputs:
+        p["unembed"] = (jax.random.normal(k2, (cfg.d_model, cfg.vocab_size))
+                        * cfg.d_model ** -0.5).astype(pd)
+    return p
+
+
+def embed_tokens(p: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0)
+    return x.astype(_dtype(cfg.act_dtype))
+
+
+def unembed(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Logits in f32 (loss-side numerics)."""
+    if cfg.tie_embeddings and cfg.embed_inputs:
+        w = p["tok"].T
+    else:
+        w = p["unembed"]
+    logits = jnp.einsum("...d,dv->...v", x.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

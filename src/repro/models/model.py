@@ -1,0 +1,135 @@
+"""Public model API: build_model(cfg) -> Model(init, loss_fn, prefill, decode_step).
+
+Input conventions
+  embed_inputs=True  : batch["tokens"]  [B, S] int32
+  embed_inputs=False : batch["embeds"]  [B, S, d_model] act_dtype
+                       (modality-frontend stub output: EnCodec frames /
+                        ViT patches, see DESIGN.md)
+  batch["labels"] [B, S] int32, -1 = masked.
+
+Loss is computed in sequence chunks so [B, S, vocab] logits are never
+materialized (vocab up to 256k); the unembed matmul happens inside the
+chunk loop in f32, and the logsumexp reduces over the (model-axis-sharded)
+vocab dimension.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import embed_tokens, init_embed, unembed
+from repro.models.transformer import (
+    apply_backbone, init_backbone, init_caches,
+)
+
+LOSS_CHUNK = 512
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def _unembed_weight(params: dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings and cfg.embed_inputs:
+        return params["embed"]["tok"].T
+    return params["embed"]["unembed"]
+
+
+def chunked_ce_loss(x: jax.Array, w_un: jax.Array, labels: jax.Array,
+                    softcap: float = 0.0) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d]; labels [B, S] (-1 = pad). Returns (sum_loss, n_tokens)."""
+    b, s, d = x.shape
+    c = min(LOSS_CHUNK, s)
+    assert s % c == 0
+    nchunks = s // c
+    xc = jnp.moveaxis(x.reshape(b, nchunks, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nchunks, c), 1, 0)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xch, lch = inp
+        logits = jnp.einsum("bcd,dv->bcv", xch.astype(jnp.float32),
+                            w_un.astype(jnp.float32))
+        if softcap > 0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        safe = jnp.maximum(lch, 0)
+        picked = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        mask = (lch >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - picked) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (xc, lc))
+    return tot, cnt
+
+
+def build_model(cfg: ModelConfig, remat: str = "block",
+                decode_cache_in_carry: bool = False) -> Model:
+    act = jnp.dtype(cfg.act_dtype)
+
+    def init(key: jax.Array) -> dict:
+        k1, k2 = jax.random.split(key)
+        return {"embed": init_embed(k1, cfg),
+                "backbone": init_backbone(k2, cfg)}
+
+    def _inputs_to_x(params, batch_or_tok):
+        if cfg.embed_inputs:
+            return embed_tokens(params["embed"], batch_or_tok, cfg)
+        return batch_or_tok.astype(act)
+
+    def loss_fn(params: dict, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, dict]:
+        inp = batch["tokens"] if cfg.embed_inputs else batch["embeds"]
+        x = _inputs_to_x(params, inp)
+        h, aux, _ = apply_backbone(params["backbone"], x, cfg,
+                                   mode="train", remat=remat)
+        tot, cnt = chunked_ce_loss(h, _unembed_weight(params, cfg),
+                                   batch["labels"], cfg.logit_softcap)
+        ce = tot / jnp.maximum(cnt, 1.0)
+        loss = ce
+        if cfg.num_experts:
+            loss = (loss + cfg.router_aux_loss * aux["moe_lb_loss"]
+                    + 1e-3 * aux["moe_z_loss"])
+        metrics = {"loss": loss, "ce": ce, "tokens": cnt, **aux}
+        return loss, metrics
+
+    def init_cache(batch: int, max_len: int) -> dict:
+        return init_caches(cfg, batch, max_len, act)
+
+    def prefill(params: dict, inputs: jax.Array, max_len: int):
+        """inputs: tokens [B,S] or embeds [B,S,d]. Returns (caches, last_logits)."""
+        x = _inputs_to_x(params, inputs)
+        h, _, caches = apply_backbone(params["backbone"], x, cfg,
+                                      mode="prefill", max_len=max_len,
+                                      remat="none")
+        logits = unembed(params["embed"], h[:, -1], cfg)
+        return caches, logits
+
+    def decode_step(params: dict, caches: dict, inp: jax.Array, pos: jax.Array):
+        """inp: token ids [B] (embed_inputs) or embeds [B,1,d]. pos: scalar.
+
+        Returns (new_caches, logits [B, vocab])."""
+        if cfg.embed_inputs:
+            x = _inputs_to_x(params, inp[:, None])
+        else:
+            x = inp.astype(act)
+        h, _, new_caches = apply_backbone(
+            params["backbone"], x, cfg, mode="decode", caches=caches,
+            pos=pos, remat="none",
+            decode_cache_in_carry=decode_cache_in_carry)
+        logits = unembed(params["embed"], h[:, 0], cfg)
+        return new_caches, logits
+
+    return Model(cfg=cfg, init=init, loss_fn=loss_fn, prefill=prefill,
+                 decode_step=decode_step, init_cache=init_cache)

@@ -1,0 +1,133 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (diagonal, per channel):
+    r_t = sigmoid(x_t @ W_a + b_a)            recurrence gate
+    i_t = sigmoid(x_t @ W_x + b_x)            input gate
+    log a_t = -c * softplus(Lambda) * r_t     (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Full block: x -> {linear -> conv1d -> RG-LRU} gated by {linear -> GeLU},
+then output linear. Sequence mode uses jax.lax.associative_scan (parallel,
+O(log S) depth) — this is the oracle for repro.kernels.rglru_scan.
+
+Note: Griffin's gate projections are block-diagonal; we use dense
+projections (a strict superset in capacity) — recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+
+_C = 8.0
+_SQRT_EPS = 1e-6
+
+
+def init_rglru_block(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    sw = w ** -0.5
+    return {
+        "w_x": (jax.random.normal(ks[0], (d, w)) * s).astype(pd),
+        "w_gate": (jax.random.normal(ks[1], (d, w)) * s).astype(pd),
+        "conv_w": (jax.random.normal(ks[2], (cfg.rglru_conv, w)) * 0.1).astype(pd),
+        "conv_b": jnp.zeros((w,), pd),
+        "w_a": (jax.random.normal(ks[3], (w, w)) * sw).astype(pd),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": (jax.random.normal(ks[4], (w, w)) * sw).astype(pd),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # Lambda init so that a ~ U(0.9, 0.999)-ish at r=1
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)).astype(jnp.float32),
+        "w_out": (jax.random.normal(ks[5], (w, d)) * sw).astype(pd),
+    }
+
+
+def _gates(p: dict, x: jax.Array):
+    """x: [..., W] (post-conv). Returns (log_a, gated_input) in f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r                # [..., W] <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a2, _SQRT_EPS))
+    return log_a, beta * (i * xf)
+
+
+def rglru_scan(p: dict, x: jax.Array,
+               h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Sequence mode. x: [B, S, W] (post-conv). Returns (h [B,S,W], h_last)."""
+    log_a, b = _gates(p, x)
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        # fold initial state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p: dict, x_t: jax.Array, h: jax.Array) -> jax.Array:
+    """One decode step. x_t: [B, W] (post-conv); h: [B, W] f32."""
+    log_a, b = _gates(p, x_t)
+    return jnp.exp(log_a) * h.astype(jnp.float32) + b
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+               for i in range(k)) + b[None, None, :]
+
+
+def apply_rglru_block(
+    p: dict,
+    xin: jax.Array,                  # [B, S, d_model]
+    cfg: ModelConfig,
+    *,
+    mode: str = "train",
+    cache: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    gate = jax.nn.gelu(jnp.einsum("...d,dw->...w", xin, p["w_gate"]))
+    xr = jnp.einsum("...d,dw->...w", xin, p["w_x"])
+
+    if mode == "decode":
+        b = xin.shape[0]
+        x_t = xr[:, 0]                                        # [B, W]
+        window = jnp.concatenate([cache["conv"], x_t[:, None]], axis=1)
+        conv_out = (jnp.einsum("bkw,kw->bw", window.astype(jnp.float32),
+                               p["conv_w"].astype(jnp.float32))
+                    + p["conv_b"].astype(jnp.float32)).astype(xin.dtype)
+        h_new = rglru_step(p, conv_out, cache["h"])
+        y = h_new.astype(xin.dtype)[:, None, :]               # [B,1,W]
+        new_cache = {"conv": window[:, 1:], "h": h_new}
+    else:
+        conv_out = _causal_conv(xr, p["conv_w"], p["conv_b"])
+        h, h_last = rglru_scan(p, conv_out)
+        y = h
+        new_cache = None
+        if mode == "prefill":
+            k = cfg.rglru_conv
+            new_cache = {"conv": xr[:, -(k - 1):, :], "h": h_last}
+
+    out = jnp.einsum("...w,wd->...d", y * gate, p["w_out"])
+    return out, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    w = cfg.rglru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.rglru_conv - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }

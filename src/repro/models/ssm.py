@@ -1,0 +1,258 @@
+"""Mamba2 (SSD — state-space duality) block, pure JAX.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060 (ssd_minimal):
+within-chunk quadratic "attention-like" term + inter-chunk linear recurrence
+over states. This is the numerical oracle for the Pallas kernel
+(repro.kernels.ssd_scan) and the path used by the dry-run.
+
+Shapes (h = heads, p = headdim, n = state, g = groups (=1 here)):
+  x   [B, S, h, p]     dt [B, S, h]     A [h] (negative)
+  B,C [B, S, g, n]
+  state H [B, h, n, p]
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import apply_norm
+
+
+# ---------------------------------------------------------------------------
+# Core SSD scan
+# ---------------------------------------------------------------------------
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: [..., T] -> [..., T, T]: out[i,j] = sum_{k=j+1..i} x_k (i>=j), -inf else."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    *,
+    chunk: int,
+    init_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,h,p], final_state [B,h,n,p]). All decays in f32."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    chunk = min(chunk, s)
+    if s % chunk:
+        # pad tail with dt=0 steps: exp(0·A)=1 and dt·B⊗x=0 leave the state
+        # invariant, so the final state is exact; padded outputs are sliced off.
+        pad = chunk - s % chunk
+        padded = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        y, fin = ssd_chunked(padded(x), padded(dt), A, padded(B), padded(C),
+                             chunk=chunk, init_state=init_state)
+        return y[:, :s], fin
+    nc = s // chunk
+    rep = h // g
+
+    dtf = dt.astype(jnp.float32)
+    dA = dtf * A.astype(jnp.float32)[None, None, :]          # [b,s,h] (<0)
+    xdt = (x * dt[..., None].astype(x.dtype))                # input scaled by dt
+
+    # chunked views
+    xc = xdt.reshape(b, nc, chunk, h, p)
+    Bh = jnp.repeat(B, rep, axis=2).reshape(b, nc, chunk, h, n)
+    Ch = jnp.repeat(C, rep, axis=2).reshape(b, nc, chunk, h, n)
+    dAc = dA.reshape(b, nc, chunk, h)
+    dAcs = jnp.cumsum(dAc, axis=2)                           # [b,c,l,h]
+
+    # 1) intra-chunk (quadratic within chunk)
+    L = jnp.exp(_segsum(jnp.moveaxis(dAc, 3, 2)))            # [b,c,h,l,l]
+    Sqk = jnp.einsum("bclhn,bckhn->bchlk", Ch, Bh,
+                     preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bchlk,bckhp->bclhp", (Sqk * L).astype(x.dtype), xc)
+
+    # 2) per-chunk terminal states
+    decay_to_end = jnp.exp(dAcs[:, :, -1:, :] - dAcs)        # [b,c,l,h]
+    states = jnp.einsum("bclhn,bclh,bclhp->bchnp",
+                        Bh.astype(jnp.float32), decay_to_end,
+                        xc.astype(jnp.float32))              # [b,c,h,n,p]
+
+    # 3) inter-chunk recurrence (f32 carry)
+    lam = jnp.exp(dAcs[:, :, -1, :])                         # [b,c,h] chunk decay
+    h0 = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, lm = inp                                         # [b,h,n,p], [b,h]
+        new = carry * lm[:, :, None, None] + st
+        return new, carry                                    # emit state ENTERING the chunk
+
+    final, h_prev = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(lam, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                      # [b,c,h,n,p]
+
+    # 4) inter-chunk contribution to outputs
+    decay_from_start = jnp.exp(dAcs)                         # [b,c,l,h]
+    y_off = jnp.einsum("bclhn,bchnp,bclh->bclhp",
+                       Ch.astype(jnp.float32), h_prev, decay_from_start)
+
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(
+    state: jax.Array,   # [B, h, n, p] f32
+    x_t: jax.Array,     # [B, h, p]
+    dt_t: jax.Array,    # [B, h]
+    A: jax.Array,       # [h]
+    B_t: jax.Array,     # [B, g, n]
+    C_t: jax.Array,     # [B, g, n]
+) -> Tuple[jax.Array, jax.Array]:
+    """One recurrent step: H <- H*exp(dt·A) + dt·B⊗x ; y = C·H."""
+    b, h, n, p = state.shape
+    g = B_t.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B_t, rep, axis=1).astype(jnp.float32)    # [B,h,n]
+    Ch = jnp.repeat(C_t, rep, axis=1).astype(jnp.float32)
+    dtf = dt_t.astype(jnp.float32)
+    dA = jnp.exp(dtf * A.astype(jnp.float32)[None, :])       # [B,h]
+    upd = (dtf[..., None] * Bh)[..., :, None] * x_t.astype(jnp.float32)[:, :, None, :]
+    new_state = state * dA[..., None, None] + upd            # [B,h,n,p]
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+    return new_state, y.astype(x_t.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_headdim
+    g = 1
+    conv_ch = d_in + 2 * g * cfg.ssm_state
+    return d_in, nheads, g, conv_ch
+
+
+def init_ssd_block(key: jax.Array, cfg: ModelConfig) -> dict:
+    """Projections are stored SEPARATELY (w_z, w_x, w_bc, w_dt) rather than
+    as one fused [d, 2*d_in+2gn+h] matrix: mesh-axis partitions of a fused
+    tensor would cut across the z/x/B/C/dt boundaries and force GSPMD
+    reshards. XLA re-fuses the matmuls anyway."""
+    d = cfg.d_model
+    d_in, nheads, g, conv_ch = _dims(cfg)
+    n = cfg.ssm_state
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "w_z": (jax.random.normal(ks[0], (d, d_in)) * s).astype(pd),
+        "w_x": (jax.random.normal(ks[1], (d, d_in)) * s).astype(pd),
+        "w_bc": (jax.random.normal(ks[2], (d, 2 * g * n)) * s).astype(pd),
+        "w_dt": (jax.random.normal(ks[3], (d, nheads)) * s).astype(pd),
+        "conv_x_w": (jax.random.normal(ks[4], (cfg.ssm_conv, d_in)) * 0.1).astype(pd),
+        "conv_x_b": jnp.zeros((d_in,), pd),
+        "conv_bc_w": (jax.random.normal(ks[5], (cfg.ssm_conv, 2 * g * n)) * 0.1).astype(pd),
+        "conv_bc_b": jnp.zeros((2 * g * n,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[3], (nheads,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm_scale": jnp.ones((d_in,), pd),
+        "w_out": (jax.random.normal(ks[0], (d_in, d)) * d_in ** -0.5).astype(pd),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq: xbc [B,S,Ch], w [K,Ch]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def apply_ssd_block(
+    p: dict,
+    xin: jax.Array,                 # [B, S, d_model]
+    cfg: ModelConfig,
+    *,
+    mode: str = "train",            # train | prefill | decode
+    cache: Optional[dict] = None,
+    ) -> Tuple[jax.Array, Optional[dict]]:
+    d_in, nheads, g, conv_ch = _dims(cfg)
+    n = cfg.ssm_state
+    hp = cfg.ssm_headdim
+
+    z = jnp.einsum("...d,de->...e", xin, p["w_z"])
+    xr = jnp.einsum("...d,de->...e", xin, p["w_x"])
+    bc = jnp.einsum("...d,de->...e", xin, p["w_bc"])
+    dt_raw = jnp.einsum("...d,de->...e", xin, p["w_dt"])
+    A = -jnp.exp(p["A_log"])
+
+    if mode == "decode":
+        # xin: [B, 1, d]; cache: {"conv_x", "conv_bc", "ssm": [B,h,n,p] f32}
+        b = xin.shape[0]
+        win_x = jnp.concatenate([cache["conv_x"], xr[:, 0][:, None]], axis=1)
+        win_bc = jnp.concatenate([cache["conv_bc"], bc[:, 0][:, None]], axis=1)
+        cx = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", win_x.astype(jnp.float32),
+                       p["conv_x_w"].astype(jnp.float32))
+            + p["conv_x_b"].astype(jnp.float32)).astype(xin.dtype)
+        cbc = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", win_bc.astype(jnp.float32),
+                       p["conv_bc_w"].astype(jnp.float32))
+            + p["conv_bc_b"].astype(jnp.float32)).astype(xin.dtype)
+        x_t = cx.reshape(b, nheads, hp)
+        B_t, C_t = jnp.split(cbc, 2, axis=-1)
+        B_t = B_t.reshape(b, g, n)
+        C_t = C_t.reshape(b, g, n)
+        dt_t = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                               + p["dt_bias"][None, :])
+        new_state, y = ssd_decode_step(cache["ssm"], x_t, dt_t, A, B_t, C_t)
+        y = y + p["D"].astype(jnp.float32)[None, :, None] * x_t.astype(jnp.float32)
+        y = y.reshape(b, 1, d_in).astype(xin.dtype)
+        new_cache = {"conv_x": win_x[:, 1:], "conv_bc": win_bc[:, 1:],
+                     "ssm": new_state}
+    else:
+        b, s, _ = xin.shape
+        cx = _causal_conv(xr, p["conv_x_w"], p["conv_x_b"])
+        cbc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"])
+        x_ = cx.reshape(b, s, nheads, hp)
+        B_, C_ = jnp.split(cbc, 2, axis=-1)
+        B_ = B_.reshape(b, s, g, n)
+        C_ = C_.reshape(b, s, g, n)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        y, final_state = ssd_chunked(x_, dt, A, B_, C_, chunk=cfg.ssm_chunk)
+        y = (y.astype(jnp.float32)
+             + p["D"][None, None, :, None] * x_.astype(jnp.float32))
+        y = y.reshape(b, s, d_in).astype(xin.dtype)
+        new_cache = None
+        if mode == "prefill":
+            k = cfg.ssm_conv
+            new_cache = {"conv_x": xr[:, -(k - 1):, :],
+                         "conv_bc": bc[:, -(k - 1):, :],
+                         "ssm": final_state}
+
+    # gated RMSNorm (mamba2's RMSNormGated, norm(x * silu(z)))
+    gated = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    normed = apply_norm({"scale": p["norm_scale"]}, gated, "rmsnorm", 1e-5)
+    out = jnp.einsum("...e,ed->...d", normed, p["w_out"])
+    return out, new_cache
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    d_in, nheads, g, conv_ch = _dims(cfg)
+    return {
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, d_in), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * g * cfg.ssm_state),
+                             dtype),
+        "ssm": jnp.zeros((batch, nheads, cfg.ssm_state, cfg.ssm_headdim),
+                         jnp.float32),
+    }

@@ -1,0 +1,376 @@
+"""Unified block-typed decoder-only transformer.
+
+Every assigned architecture is an instance of this module: a repeating
+``block_pattern`` of (mixer, mlp) pairs where mixer ∈ {attn, local_attn,
+ssd, rglru} and mlp ∈ {swiglu, relu2, gelu, moe, none}.
+
+Layers are grouped by pattern repetition and the groups are scanned with
+``jax.lax.scan`` (stacked params, leading axis = n_groups) so the compiled
+HLO contains ONE copy of the pattern body regardless of depth — essential
+for the 96-layer configs. A remainder (num_layers % len(pattern)) is applied
+unrolled. Rematerialization (``jax.checkpoint``) wraps the scan body.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import (
+    ATTN, LOCAL_ATTN, RGLRU, SSD,
+    MLP_MOE, MLP_NONE, ModelConfig,
+)
+from repro.models import attention as attn_lib
+from repro.models.layers import apply_mlp, apply_norm, apply_rope, init_mlp, init_norm
+from repro.models.moe import apply_moe, init_moe
+from repro.models.rglru import apply_rglru_block, init_rglru_block, init_rglru_cache
+from repro.models.ssm import apply_ssd_block, init_ssd_block, init_ssd_cache
+
+AUX_ZERO = {
+    "moe_lb_loss": jnp.float32(0.0),
+    "moe_z_loss": jnp.float32(0.0),
+    "moe_drop_frac": jnp.float32(0.0),
+}
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-block
+# ---------------------------------------------------------------------------
+
+def init_attn(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    hq, hk = cfg.num_heads, cfg.num_kv_heads
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, hq * hd)) * s).astype(pd),
+        "wk": (jax.random.normal(ks[1], (d, hk * hd)) * s).astype(pd),
+        "wv": (jax.random.normal(ks[2], (d, hk * hd)) * s).astype(pd),
+        "wo": (jax.random.normal(ks[3], (hq * hd, d)) * (hq * hd) ** -0.5).astype(pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), pd)
+        p["bk"] = jnp.zeros((hk * hd,), pd)
+        p["bv"] = jnp.zeros((hk * hd,), pd)
+    return p
+
+
+def _qkv(p: dict, x: jax.Array, cfg: ModelConfig):
+    hd = cfg.resolved_head_dim
+    hq, hk = cfg.num_heads, cfg.num_kv_heads
+    q = jnp.einsum("...d,de->...e", x, p["wq"])
+    k = jnp.einsum("...d,de->...e", x, p["wk"])
+    v = jnp.einsum("...d,de->...e", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    shp = x.shape[:-1]
+    return (q.reshape(*shp, hq, hd), k.reshape(*shp, hk, hd),
+            v.reshape(*shp, hk, hd))
+
+
+def apply_attn(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    mixer: str,
+    *,
+    mode: str,
+    cache: Optional[dict],
+    pos: Optional[jax.Array],
+    max_len: int = 0,
+) -> Tuple[jax.Array, Optional[dict]]:
+    hd = cfg.resolved_head_dim
+    local = mixer == LOCAL_ATTN
+    tm = cfg.decode_k_time_minor and not local
+    if mode == "decode":
+        b = x.shape[0]
+        q, k, v = _qkv(p, x[:, 0], cfg)                      # [B,H,hd]
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        q = apply_rope(q[:, None], positions, cfg.rope_theta)[:, 0]
+        k = apply_rope(k[:, None], positions, cfg.rope_theta)[:, 0]
+        slot = jnp.mod(pos, cache["k"].shape[1]) if local else pos
+        if tm:
+            # K cache is [B, Hk, hd, Smax]: write the new column at pos
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k[..., None].astype(cache["k"].dtype),
+                slot, axis=3)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k[:, None].astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v[:, None].astype(cache["v"].dtype), slot, axis=1)
+        if local:
+            o = attn_lib.decode_local_attention(q, k_cache, v_cache, pos)
+        elif tm:
+            o = attn_lib.decode_attention_tm(q, k_cache, v_cache, pos)
+        else:
+            o = attn_lib.decode_attention(q, k_cache, v_cache, pos)
+        o = o[:, None]                                       # [B,1,Hq,hd]
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        b, s, _ = x.shape
+        q, k, v = _qkv(p, x, cfg)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if local:
+            o = attn_lib.local_attention(q, k, v, window=cfg.local_window)
+        else:
+            o = attn_lib.chunked_causal_attention(q, k, v)
+        new_cache = None
+        if mode == "prefill":
+            if local:
+                w = cfg.local_window
+                kk, vv = k[:, -w:], v[:, -w:]
+                if s >= w:
+                    # ring layout: slot = position % w
+                    shift = s % w
+                    kk = jnp.roll(kk, shift, axis=1)
+                    vv = jnp.roll(vv, shift, axis=1)
+                    new_cache = {"k": kk, "v": vv}
+                else:
+                    zk = jnp.zeros((b, w - s, *k.shape[2:]), k.dtype)
+                    new_cache = {"k": jnp.concatenate([kk, zk], 1),
+                                 "v": jnp.concatenate([vv, zk], 1)}
+            else:
+                assert max_len >= s
+                zk = jnp.zeros((b, max_len - s, *k.shape[2:]), k.dtype)
+                if tm:
+                    k_tm = jnp.moveaxis(
+                        jnp.concatenate([k, zk], 1), 1, 3)  # [B,Hk,hd,Smax]
+                    new_cache = {"k": k_tm,
+                                 "v": jnp.concatenate([v, zk], 1)}
+                else:
+                    new_cache = {"k": jnp.concatenate([k, zk], 1),
+                                 "v": jnp.concatenate([v, zk], 1)}
+    o = o.reshape(*o.shape[:2], cfg.num_heads * hd)
+    return jnp.einsum("...e,ed->...d", o, p["wo"]), new_cache
+
+
+def init_attn_cache(cfg: ModelConfig, mixer: str, batch: int, max_len: int,
+                    dtype=jnp.bfloat16) -> dict:
+    hd = cfg.resolved_head_dim
+    length = cfg.local_window if mixer == LOCAL_ATTN else max_len
+    shape = (batch, length, cfg.num_kv_heads, hd)
+    if cfg.decode_k_time_minor and mixer != LOCAL_ATTN:
+        k_shape = (batch, cfg.num_kv_heads, hd, length)      # time-minor
+        return {"k": jnp.zeros(k_shape, dtype), "v": jnp.zeros(shape, dtype)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# One block = mixer + optional MLP, pre-norm residual
+# ---------------------------------------------------------------------------
+
+def init_block(key: jax.Array, cfg: ModelConfig, mixer: str, mlp: str) -> dict:
+    ks = jax.random.split(key, 2)
+    p: Dict[str, Any] = {"norm1": init_norm(cfg)}
+    if mixer in (ATTN, LOCAL_ATTN):
+        p["attn"] = init_attn(ks[0], cfg)
+    elif mixer == SSD:
+        p["ssd"] = init_ssd_block(ks[0], cfg)
+    elif mixer == RGLRU:
+        p["rglru"] = init_rglru_block(ks[0], cfg)
+    else:
+        raise ValueError(mixer)
+    if mlp != MLP_NONE:
+        p["norm2"] = init_norm(cfg)
+        if mlp == MLP_MOE:
+            p["moe"] = init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg, mlp)
+    return p
+
+
+def apply_block(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    mixer: str,
+    mlp: str,
+    *,
+    mode: str,
+    cache: Optional[dict],
+    pos: Optional[jax.Array],
+    max_len: int = 0,
+) -> Tuple[jax.Array, dict, Optional[dict]]:
+    h = apply_norm(p["norm1"], x, cfg.norm, cfg.norm_eps)
+    if mixer in (ATTN, LOCAL_ATTN):
+        mx, new_cache = apply_attn(p["attn"], h, cfg, mixer, mode=mode,
+                                   cache=cache, pos=pos, max_len=max_len)
+    elif mixer == SSD:
+        mx, new_cache = apply_ssd_block(p["ssd"], h, cfg, mode=mode, cache=cache)
+    else:
+        mx, new_cache = apply_rglru_block(p["rglru"], h, cfg, mode=mode, cache=cache)
+    x = x + mx
+
+    aux = dict(AUX_ZERO)
+    if mlp != MLP_NONE:
+        h2 = apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        if mlp == MLP_MOE:
+            y, aux = apply_moe(p["moe"], h2, cfg)
+        else:
+            y = apply_mlp(p["mlp"], h2, mlp)
+        x = x + y
+    return x, aux, new_cache
+
+
+def init_block_cache(cfg: ModelConfig, mixer: str, batch: int, max_len: int,
+                     dtype=jnp.bfloat16) -> Optional[dict]:
+    if mixer in (ATTN, LOCAL_ATTN):
+        return init_attn_cache(cfg, mixer, batch, max_len, dtype)
+    if mixer == SSD:
+        return init_ssd_cache(cfg, batch, dtype)
+    if mixer == RGLRU:
+        return init_rglru_cache(cfg, batch, dtype)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# The stacked / scanned backbone
+# ---------------------------------------------------------------------------
+
+def _pattern(cfg: ModelConfig):
+    pat = cfg.block_pattern or ((ATTN, cfg.default_mlp),)
+    n_groups = cfg.num_layers // len(pat)
+    rem = cfg.num_layers % len(pat)
+    return pat, n_groups, rem
+
+
+def init_backbone(key: jax.Array, cfg: ModelConfig) -> dict:
+    pat, n_groups, rem = _pattern(cfg)
+    keys = jax.random.split(key, cfg.num_layers)
+    # stacked groups: for each pattern position i, stack n_groups block trees
+    groups = []
+    for i, (mixer, mlp) in enumerate(pat):
+        blocks = [init_block(keys[g * len(pat) + i], cfg, mixer, mlp)
+                  for g in range(n_groups)]
+        groups.append(jax.tree.map(lambda *xs: jnp.stack(xs, 0), *blocks))
+    rem_blocks = [
+        init_block(keys[n_groups * len(pat) + j], cfg, *pat[j % len(pat)])
+        for j in range(rem)
+    ]
+    return {"groups": tuple(groups), "rem": tuple(rem_blocks),
+            "final_norm": init_norm(cfg)}
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> dict:
+    """Cache pytree matching the grouped layout (stacked leading n_groups)."""
+    pat, n_groups, rem = _pattern(cfg)
+    groups = []
+    for mixer, _ in pat:
+        one = init_block_cache(cfg, mixer, batch, max_len, dtype)
+        groups.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_groups, *a.shape)).copy() if n_groups else a[None][:0],
+            one))
+    rem_caches = [init_block_cache(cfg, pat[j % len(pat)][0], batch, max_len, dtype)
+                  for j in range(rem)]
+    return {"groups": tuple(groups), "rem": tuple(rem_caches)}
+
+
+def _remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "block": save only block inputs
+
+
+def apply_backbone(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mode: str = "train",
+    caches: Optional[dict] = None,
+    pos: Optional[jax.Array] = None,
+    max_len: int = 0,
+    remat: str = "block",
+    decode_cache_in_carry: bool = False,
+) -> Tuple[jax.Array, dict, Optional[dict]]:
+    """Runs all layers. Returns (hidden, aux, new_caches)."""
+    pat, n_groups, rem = _pattern(cfg)
+
+    def group_fwd(x, aux, group_params, group_caches):
+        new_caches = []
+        for i, (mixer, mlp) in enumerate(pat):
+            c = None if group_caches is None else group_caches[i]
+            x, aux_i, nc = apply_block(
+                group_params[i], x, cfg, mixer, mlp,
+                mode=mode, cache=c, pos=pos, max_len=max_len)
+            aux = {k: aux[k] + aux_i[k] for k in aux}
+            new_caches.append(nc)
+        return x, aux, tuple(new_caches)
+
+    aux = dict(AUX_ZERO)
+    if n_groups > 0:
+        if mode == "train":
+            def body(carry, group_params):
+                x, aux = carry
+                x, aux, _ = group_fwd(x, aux, group_params, None)
+                return (x, aux), None
+            body = _remat_wrap(body, remat)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params["groups"])
+            new_group_caches = None
+        elif mode == "decode":
+            if decode_cache_in_carry:
+                # caches ride in the scan CARRY and are updated in place via
+                # dynamic slicing — the scan-xs/ys path materializes a fresh
+                # stacked cache every step (full-cache copy per token);
+                # the carry aliases (EXPERIMENTS.md §Perf hillclimb 1).
+                def body_c(carry, inp):
+                    x, aux, cch = carry
+                    i, group_params = inp
+                    group_caches = jax.tree.map(
+                        lambda c: jax.lax.dynamic_index_in_dim(
+                            c, i, 0, keepdims=False), cch)
+                    x, aux, ncs = group_fwd(x, aux, group_params, group_caches)
+                    cch = jax.tree.map(
+                        lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                            c, n.astype(c.dtype), i, 0), cch, ncs)
+                    return (x, aux, cch), None
+                n_g = jax.tree.leaves(params["groups"])[0].shape[0]
+                (x, aux, new_group_caches), _ = jax.lax.scan(
+                    body_c, (x, aux, caches["groups"]),
+                    (jnp.arange(n_g), params["groups"]))
+            else:
+                def body_d(carry, inp):
+                    x, aux = carry
+                    group_params, group_caches = inp
+                    x, aux, ncs = group_fwd(x, aux, group_params, group_caches)
+                    return (x, aux), ncs
+                (x, aux), new_group_caches = jax.lax.scan(
+                    body_d, (x, aux), (params["groups"], caches["groups"]))
+        else:  # prefill: caches are produced, not consumed
+            def body_p(carry, group_params):
+                x, aux = carry
+                x, aux, ncs = group_fwd(x, aux, group_params, None)
+                return (x, aux), ncs
+            (x, aux), new_group_caches = jax.lax.scan(
+                body_p, (x, aux), params["groups"])
+    else:
+        new_group_caches = tuple()
+
+    # remainder layers (unrolled)
+    new_rem = []
+    for j, bp in enumerate(params["rem"]):
+        mixer, mlp = pat[j % len(pat)]
+        c = None if (caches is None or mode != "decode") else caches["rem"][j]
+        x, aux_j, nc = apply_block(bp, x, cfg, mixer, mlp, mode=mode,
+                                   cache=c, pos=pos, max_len=max_len)
+        aux = {k: aux[k] + aux_j[k] for k in aux}
+        new_rem.append(nc)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    new_caches = None
+    if mode in ("prefill", "decode"):
+        new_caches = {"groups": new_group_caches, "rem": tuple(new_rem)}
+    return x, aux, new_caches

@@ -1,0 +1,304 @@
+"""Fluid-flow discrete-time simulator of the dual AI-DC leaf-spine-OTN path.
+
+One ``jax.lax.scan`` step = ``dt_us`` of simulated time. Per-flow byte rates
+are integrated through the congestion-relevant queues of Fig. 3(a):
+
+    sender NIC --> [Q_src] source OTN --(pipe: delay D, cap C_otn)-->
+    [Q_dst] destination OTN --> [Q_leaf] destination leaf (shared with
+    intra-DC flows, ECN marking here) --> receiver
+
+Feedback paths:
+  * ACKs:  receiver -> sender, delay D (conventional) / source-OTN pseudo-ACK
+           (NTT baseline, ungated) / budget-gated pseudo-ACK (MatchRDMA).
+  * CNPs:  receiver -> sender, delay D (baselines) / consumed at destination
+           OTN + congestion summary on the control subchannel (MatchRDMA).
+  * PFC:   destination-leaf -> destination OTN (1 step);
+           destination OTN -> source OTN (delay D, the long-haul pause the
+           paper's pause-time-ratio measures);
+           source OTN -> sender NIC (1 step).
+
+Schemes (static compile-time switch):
+  dcqcn      — conventional end-to-end RDMA (DCQCN at the sender).
+  pseudo_ack — NTT GLOBECOM'24: source-OTN pseudo-ACK, ungated; CC still e2e.
+  themis     — e2e with RTT-fairness-corrected DCQCN (ICNP'25-like).
+  matchrdma  — the paper: segmented control + rate matching.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import NetConfig
+from repro.core.budget import fair_share
+from repro.core.cc_proxy import (
+    DcqcnState, init_dcqcn, step_dcqcn, themis_rtt_scale,
+)
+from repro.core.matchrdma import (
+    MatchRdmaState, accumulate_step, init_matchrdma, maybe_slot_update,
+    step_channel,
+)
+from repro.core.pseudo_ack import step_pseudo_ack
+from repro.netsim.queues import drain_proportional, ecn_mark_prob, pfc_hysteresis
+from repro.netsim.workload import Workload
+
+SCHEMES = ("dcqcn", "pseudo_ack", "themis", "matchrdma")
+MTU = 1500.0
+INF = jnp.float32(1e30)
+
+
+class SimState(NamedTuple):
+    sent: jax.Array          # [F] cumulative bytes leaving the sender NIC
+    acked: jax.Array         # [F] cumulative bytes ACKed at the sender
+    delivered: jax.Array     # [F] cumulative bytes delivered to the receiver
+    done_at_us: jax.Array    # [F] completion time (INF = not done)
+    cc: DcqcnState           # [F] DCQCN machine (sender or proxy)
+    cnp_timer: jax.Array     # [F] µs since last CNP emission (receiver side)
+    marked_acc: jax.Array    # [F] marked-byte accumulator (per-packet model)
+    proxy_timer: jax.Array   # [F] µs since last proxy cut (MatchRDMA)
+    proxy_mod: jax.Array     # [F] multiplicative proxy modulation in [0.25, 1]
+    q_src: jax.Array         # [F] source-OTN queue bytes
+    q_dst: jax.Array         # [F] destination-OTN queue bytes
+    q_leaf: jax.Array        # [F] destination-leaf queue bytes
+    pipe: jax.Array          # [Dp, F] in-flight long-haul bytes
+    ack_line: jax.Array      # [Dr, F] ACK return path
+    cnp_line: jax.Array      # [Dr, F] CNP return path
+    pause_line: jax.Array    # [Dr] PFC signal dst-OTN -> src-OTN
+    pause_dst: jax.Array     # scalar: dst OTN asserting long-haul pause
+    mr: MatchRdmaState
+
+
+def _delay_steps(cfg: NetConfig) -> int:
+    return max(int(round(cfg.one_way_delay_us / cfg.dt_us)), 1)
+
+
+def init_state(cfg: NetConfig, wl_arrays: dict, num_flows: int) -> SimState:
+    f = num_flows
+    d = _delay_steps(cfg)
+    z = jnp.zeros((f,), jnp.float32)
+    nic = cfg.nic_gbps * 1e9 / 8.0
+    return SimState(
+        sent=z, acked=z, delivered=z,
+        done_at_us=jnp.full((f,), INF),
+        cc=init_dcqcn(f, nic),
+        cnp_timer=jnp.full((f,), 1e9, jnp.float32),
+        marked_acc=z,
+        proxy_timer=jnp.full((f,), 1e9, jnp.float32),
+        proxy_mod=jnp.ones((f,), jnp.float32),
+        q_src=z, q_dst=z, q_leaf=z,
+        pipe=jnp.zeros((d, f), jnp.float32),
+        ack_line=jnp.zeros((d, f), jnp.float32),
+        cnp_line=jnp.zeros((d, f), jnp.float32),
+        pause_line=jnp.zeros((d,), jnp.float32),
+        pause_dst=jnp.float32(0.0),
+        mr=init_matchrdma(cfg, f),
+    )
+
+
+def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0):
+    """Build the per-step transition. ``wl``: stacked workload arrays."""
+    assert scheme in SCHEMES
+    dt_us = cfg.dt_us
+    dt_s = dt_us * 1e-6
+    d_steps = _delay_steps(cfg)
+    nic = cfg.nic_gbps * 1e9 / 8.0
+    c_otn = cfg.otn_capacity_gbps * 1e9 / 8.0
+    c_leaf = cfg.dst_dc_gbps * 1e9 / 8.0
+    xoff = cfg.pfc_xoff_kb * 1024.0
+    xon = cfg.pfc_xon_kb * 1024.0
+    # OTN nodes are provisioned with BDP-scaled buffers (long-haul headroom)
+    bdp = c_otn * 2.0 * cfg.one_way_delay_us * 1e-6
+    xoff_otn = max(xoff, cfg.otn_buffer_bdp_frac * bdp)
+    xon_otn = xoff_otn / 2.0
+
+    is_inter = jnp.asarray(wl["is_inter"])
+    is_intra = 1.0 - is_inter
+    window = jnp.asarray(wl["window"])
+    total_bytes = jnp.asarray(wl["total_bytes"])
+    start_us = jnp.asarray(wl["start_us"])
+    period_us = jnp.asarray(wl["period_us"])
+    duty = jnp.asarray(wl["duty"])
+    rtt_us = jnp.where(is_inter > 0, 2.0 * d_steps * dt_us + 4.0, 4.0)
+    rtt_scale = themis_rtt_scale(rtt_us) if scheme == "themis" else None
+    pseudo_scheme = scheme in ("pseudo_ack", "matchrdma")
+
+    def step(state: SimState, t: jax.Array):
+        t_us = t.astype(jnp.float32) * dt_us
+        ridx = jnp.mod(t, d_steps)
+
+        # ------------------------------------------------ 1. flow phase
+        started = (t_us >= start_us).astype(jnp.float32)
+        in_period = jnp.where(
+            period_us > 0,
+            (jnp.mod(jnp.maximum(t_us - start_us, 0.0), jnp.maximum(period_us, 1.0))
+             < duty * period_us).astype(jnp.float32),
+            1.0)
+        not_done = (state.delivered < total_bytes).astype(jnp.float32)
+        active = started * in_period * not_done
+
+        # ------------------------------------------------ 2. delayed inputs
+        ack_arr = state.ack_line[ridx]
+        cnp_arr = state.cnp_line[ridx]
+        pause_sig = state.pause_line[ridx]
+        pipe_out = state.pipe[ridx]
+
+        # ------------------------------------------------ 3. ACK accounting
+        if pseudo_scheme:
+            acked_inter = state.mr.pseudo.packed       # previous-step pseudo-ACKs
+        else:
+            acked_inter = state.acked + ack_arr
+        acked = jnp.where(is_inter > 0, acked_inter,
+                          state.delivered)             # intra: ~µs loop
+        acked = jnp.minimum(acked, state.sent)
+
+        # ------------------------------------------------ 4. sender rates
+        win_avail = jnp.maximum(window - (state.sent - acked), 0.0)
+        base_rate = jnp.minimum(win_avail / dt_s, nic)
+        if scheme == "matchrdma":
+            rate = jnp.where(is_inter > 0, base_rate,
+                             jnp.minimum(state.cc.rc, base_rate))
+        else:
+            rate = jnp.minimum(state.cc.rc, base_rate)
+        # src-OTN -> sender PFC (1 step, from last-step queue)
+        src_nic_pause = (jnp.sum(state.q_src) > xoff_otn).astype(jnp.float32)
+        rate = rate * jnp.where(is_inter > 0, 1.0 - src_nic_pause, 1.0)
+        send = rate * active * dt_s                    # bytes this step
+        sent = state.sent + send
+
+        # ------------------------------------------------ 5. source OTN
+        paused_src = pause_sig > 0.5                   # delayed dst PFC
+        cap_src = jnp.where(paused_src, 0.0, c_otn * dt_s)
+        arrivals_src = send * is_inter
+        if scheme == "matchrdma":
+            # proxy shaping: release <= budget share x proxy modulation. The
+            # budget is authoritative; the reactive proxy is a fast bounded
+            # multiplicative brake around it (not a second rate machine).
+            share = fair_share(state.mr.budget_at_src, active * is_inter)
+            per_flow_cap = share * state.proxy_mod * dt_s
+            avail = state.q_src + arrivals_src
+            want = jnp.minimum(avail, per_flow_cap * is_inter)
+            scale = jnp.minimum(1.0, cap_src / jnp.maximum(jnp.sum(want), 1e-9))
+            drained_src = want * scale
+            q_src = avail - drained_src
+        else:
+            q_src, drained_src = drain_proportional(state.q_src, arrivals_src,
+                                                    cap_src)
+        pipe = state.pipe.at[ridx].set(drained_src)    # arrives at t + D
+
+        # ------------------------------------------------ 6. destination OTN
+        leaf_pfc = (jnp.sum(state.q_leaf) > xoff).astype(jnp.float32)
+        cap_dst = c_leaf * dt_s * (1.0 - leaf_pfc)
+        q_dst, drained_dst = drain_proportional(state.q_dst, pipe_out, cap_dst)
+        egress_bytes = jnp.sum(drained_dst)
+        q_dst_tot = jnp.sum(q_dst)
+        pause_dst = pfc_hysteresis(state.pause_dst, q_dst_tot, xoff_otn, xon_otn)
+        pause_line = state.pause_line.at[ridx].set(pause_dst)
+
+        # ------------------------------------------------ 7. destination leaf
+        arrivals_leaf = drained_dst + send * is_intra
+        mark_p = ecn_mark_prob(jnp.sum(state.q_leaf), cfg)
+        q_leaf, drained_leaf = drain_proportional(state.q_leaf, arrivals_leaf,
+                                                  c_leaf * dt_s)
+        delivered = state.delivered + drained_leaf
+        marked_acc = state.marked_acc + drained_leaf * mark_p
+
+        # ------------------------------------------------ 8. CNP generation
+        cnp_timer = state.cnp_timer + dt_us
+        want = marked_acc >= MTU
+        emit = want & (cnp_timer >= cfg.cnp_interval_us)
+        cnp_out = emit.astype(jnp.float32)
+        cnp_timer = jnp.where(emit, 0.0, cnp_timer)
+        marked_acc = jnp.where(emit, 0.0, marked_acc)
+
+        # ------------------------------------------------ 9. return paths
+        ack_line = state.ack_line.at[ridx].set(drained_leaf * is_inter)
+        if scheme == "matchrdma":
+            cnp_line = state.cnp_line.at[ridx].set(jnp.zeros_like(cnp_out))
+        else:
+            cnp_line = state.cnp_line.at[ridx].set(cnp_out * is_inter)
+        # ------------------------------------------------ 10. pseudo-ACK
+        mr = state.mr
+        if pseudo_scheme:
+            share = fair_share(mr.budget_at_src, active * is_inter)
+            pseudo, packed = step_pseudo_ack(
+                mr.pseudo, sent * is_inter, share, dt_s,
+                gated=(scheme == "matchrdma"))
+            mr = mr._replace(pseudo=pseudo)
+
+        # ------------------------------------------------ 11. CC update
+        if scheme == "matchrdma":
+            # proxy brake from the delayed congestion summary, rate-limited:
+            # cut x0.7 (floor 0.25), recover with ~1 ms time constant.
+            proxy_timer = state.proxy_timer + dt_us
+            fire = (mr.summary_at_src > 0.5) & (proxy_timer >= cfg.cnp_interval_us)
+            proxy_mod = jnp.where(fire, jnp.maximum(state.proxy_mod * 0.7, 0.25),
+                                  jnp.minimum(state.proxy_mod *
+                                              (1.0 + 5e-4 * dt_us), 1.0))
+            proxy_timer = jnp.where(fire, 0.0, proxy_timer)
+            cnp_in = cnp_out * is_intra          # sender CC only for intra
+        else:
+            proxy_timer = state.proxy_timer
+            proxy_mod = state.proxy_mod
+            cnp_in = jnp.where(is_inter > 0, cnp_arr, cnp_out * is_intra)
+        cc = step_dcqcn(state.cc, cnp_in, send, cfg, rtt_scale=rtt_scale)
+
+        # ------------------------------------------------ 12. MatchRDMA loops
+        if scheme == "matchrdma":
+            leaf_delay_us = jnp.sum(q_leaf) / c_leaf * 1e6 + cfg.intra_dc_delay_us
+            mr = accumulate_step(
+                mr, egress_bytes,
+                jnp.sum(cnp_out * is_inter),
+                leaf_delay_us, jnp.float32(1.0), q_dst_tot,
+                egress_paused=leaf_pfc)
+            mr = maybe_slot_update(mr, cfg, t, period_slots)
+            overrun = (q_dst_tot > 0.5 * xoff_otn)
+            mr = step_channel(mr, overrun.astype(jnp.float32))
+
+        # ------------------------------------------------ 13. FCT
+        newly_done = (delivered >= total_bytes) & (state.done_at_us >= INF)
+        done_at = jnp.where(newly_done, t_us, state.done_at_us)
+
+        new_state = SimState(
+            sent=sent, acked=acked, delivered=delivered, done_at_us=done_at,
+            cc=cc, cnp_timer=cnp_timer, marked_acc=marked_acc,
+            proxy_timer=proxy_timer, proxy_mod=proxy_mod,
+            q_src=q_src, q_dst=q_dst, q_leaf=q_leaf,
+            pipe=pipe, ack_line=ack_line, cnp_line=cnp_line,
+            pause_line=pause_line, pause_dst=pause_dst, mr=mr,
+        )
+        out = {
+            "q_src": jnp.sum(q_src),
+            "q_dst": q_dst_tot,
+            "q_leaf": jnp.sum(q_leaf),
+            "pause_dst": pause_dst,
+            "src_paused": pause_sig,
+            "thr_inter": jnp.sum(drained_leaf * is_inter) / dt_s,
+            "thr_intra": jnp.sum(drained_leaf * is_intra) / dt_s,
+            "budget": state.mr.budget.budget,
+            "budget_at_src": state.mr.budget_at_src,
+        }
+        return new_state, out
+
+    return step
+
+
+def simulate(cfg: NetConfig, workload: Workload, scheme: str,
+             horizon_us: Optional[float] = None, period_slots: int = 0):
+    """Run one simulation; returns (final_state, traces dict of [T] arrays)."""
+    horizon = horizon_us if horizon_us is not None else cfg.horizon_us
+    steps = int(round(horizon / cfg.dt_us))
+    wl_arrays = {k: jnp.asarray(v) for k, v in workload.arrays().items()}
+    return _run_traced(cfg, wl_arrays, scheme, steps, period_slots)
+
+
+@partial(jax.jit, static_argnames=("scheme", "steps", "period_slots", "cfg"))
+def _run_traced(cfg, wl_arrays, scheme, steps, period_slots):
+    f = wl_arrays["is_inter"].shape[0]
+    state0 = init_state(cfg, wl_arrays, f)
+    step = make_step_fn(cfg, wl_arrays, scheme, period_slots)
+    final, traces = jax.lax.scan(step, state0,
+                                 jnp.arange(steps, dtype=jnp.int32))
+    return final, traces

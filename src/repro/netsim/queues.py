@@ -1,0 +1,39 @@
+"""Queue helpers for the fluid simulator: ECN marking, PFC hysteresis,
+proportional-fair fluid drains.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import NetConfig
+
+
+def ecn_mark_prob(q_bytes: jax.Array, cfg: NetConfig) -> jax.Array:
+    """DCQCN RED-like marking probability from queue occupancy."""
+    kmin = cfg.ecn_kmin_kb * 1024.0
+    kmax = cfg.ecn_kmax_kb * 1024.0
+    frac = jnp.clip((q_bytes - kmin) / jnp.maximum(kmax - kmin, 1.0), 0.0, 1.0)
+    return frac * cfg.ecn_pmax + (q_bytes > kmax).astype(jnp.float32) * (1.0 - cfg.ecn_pmax)
+
+
+def pfc_hysteresis(paused: jax.Array, q_bytes: jax.Array,
+                   xoff_bytes: float, xon_bytes: float) -> jax.Array:
+    """XOFF above ``xoff``, XON below ``xon``, hold in between."""
+    return jnp.where(q_bytes > xoff_bytes, 1.0,
+                     jnp.where(q_bytes < xon_bytes, 0.0, paused))
+
+
+def drain_proportional(q: jax.Array, arrivals: jax.Array,
+                       capacity_bytes: jax.Array):
+    """Fluid FIFO-fair drain: remove up to ``capacity_bytes`` from the queue,
+    split across flows proportionally to their backlog (+ fresh arrivals).
+
+    q, arrivals: [F] per-flow bytes. Returns (new_q [F], drained [F]).
+    """
+    avail = q + arrivals
+    tot = jnp.sum(avail)
+    drained_tot = jnp.minimum(tot, capacity_bytes)
+    share = jnp.where(tot > 0, avail / jnp.maximum(tot, 1e-12), 0.0)
+    drained = share * drained_tot
+    return avail - drained, drained

@@ -1,0 +1,76 @@
+"""Experiment runner: simulate + extract the paper's Fig. 3 metrics."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import NetConfig
+from repro.netsim.fluid import simulate
+from repro.netsim.workload import BIG, Workload
+
+WARMUP_FRAC = 0.1   # discard the initial transient for steady-state metrics
+
+
+def run_experiment(cfg: NetConfig, workload: Workload, scheme: str,
+                   horizon_us: Optional[float] = None,
+                   period_slots: int = 0) -> Dict[str, float]:
+    """Returns the Fig. 3 metric set for one (config, workload, scheme)."""
+    final, traces = simulate(cfg, workload, scheme, horizon_us, period_slots)
+    traces = {k: np.asarray(v) for k, v in traces.items()}
+    horizon = (horizon_us if horizon_us is not None else cfg.horizon_us)
+    steps = traces["q_dst"].shape[0]
+    warm = int(steps * WARMUP_FRAC)
+
+    wl = workload.arrays()
+    is_inter = wl["is_inter"] > 0
+    delivered = np.asarray(final.delivered)
+    done_at = np.asarray(final.done_at_us)
+    start = wl["start_us"]
+
+    # throughput: steady-state inter-DC goodput (bytes/s and Gbps)
+    thr = float(traces["thr_inter"][warm:].mean())
+    # destination-OTN runtime buffer occupancy
+    q_dst = traces["q_dst"]
+    # pause-time ratio: fraction of time the long-haul PFC pause is asserted
+    pause_ratio = float(traces["pause_dst"][warm:].mean())
+    # FCT of finite inter-DC flows
+    finite = is_inter & (wl["total_bytes"] < BIG / 2)
+    if finite.any():
+        fct = done_at[finite] - start[finite]
+        completed = np.isfinite(fct) & (fct < 1e29)
+        avg_fct = float(fct[completed].mean()) if completed.any() else float("inf")
+        completion = float(completed.mean())
+    else:
+        avg_fct, completion = float("nan"), 1.0
+
+    return {
+        "scheme": scheme,
+        "distance_km": cfg.distance_km,
+        "throughput_gbps": thr * 8.0 / 1e9,
+        "goodput_bytes": float(delivered[is_inter].sum()),
+        "peak_buffer_mb": float(q_dst.max()) / 1e6,
+        "mean_buffer_mb": float(q_dst[warm:].mean()) / 1e6,
+        "p99_buffer_mb": float(np.percentile(q_dst[warm:], 99)) / 1e6,
+        "pause_ratio": pause_ratio,
+        "avg_fct_us": avg_fct,
+        "completion_frac": completion,
+        "intra_thr_gbps": float(traces["thr_intra"][warm:].mean()) * 8.0 / 1e9,
+    }
+
+
+def sweep(cfg: NetConfig, workload: Workload, schemes, distances_km,
+          horizon_us: Optional[float] = None, period_slots: int = 0):
+    """Cartesian sweep; returns list of metric dicts."""
+    rows = []
+    for d in distances_km:
+        c = dataclasses.replace(cfg, distance_km=float(d))
+        h = horizon_us
+        if h is None:
+            # at least 20 RTTs + fixed floor so CC converges at any distance
+            h = max(cfg.horizon_us, 40.0 * c.one_way_delay_us + 20_000.0)
+        for s in schemes:
+            rows.append(run_experiment(c, workload, s, h, period_slots))
+    return rows

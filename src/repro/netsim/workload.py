@@ -1,0 +1,111 @@
+"""Flow/workload specification for the netsim fluid simulator.
+
+A workload is a set of flows with AICB-like on/off structure (LLM training
+alternates compute and communication phases). Inter-DC flows traverse
+sender NIC -> source OTN -> long-haul pipe -> destination OTN -> destination
+leaf; intra-DC flows contend only at the destination leaf.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+BIG = 1e18  # "unbounded" total bytes (throughput experiments)
+
+
+@dataclass(frozen=True)
+class FlowSpec:
+    is_inter: bool
+    msg_size: float            # bytes per message
+    concurrency: int           # parallel in-flight messages
+    total_bytes: float = BIG   # flow size (finite => FCT experiment)
+    start_us: float = 0.0
+    period_us: float = 0.0     # 0 => always-on; else AICB on/off period
+    duty: float = 1.0          # fraction of the period spent communicating
+
+    @property
+    def window(self) -> float:
+        return self.msg_size * self.concurrency
+
+
+@dataclass(frozen=True)
+class Workload:
+    flows: tuple
+
+    @property
+    def num_flows(self) -> int:
+        return len(self.flows)
+
+    def arrays(self) -> dict:
+        """Stack flow fields into numpy arrays for the simulator."""
+        f = self.flows
+        return {
+            "is_inter": np.array([x.is_inter for x in f], np.float32),
+            "msg_size": np.array([x.msg_size for x in f], np.float32),
+            "window": np.array([x.window for x in f], np.float32),
+            "total_bytes": np.array([x.total_bytes for x in f], np.float32),
+            "start_us": np.array([x.start_us for x in f], np.float32),
+            "period_us": np.array([x.period_us for x in f], np.float32),
+            "duty": np.array([x.duty for x in f], np.float32),
+        }
+
+
+def throughput_workload(msg_size: float, concurrency: int,
+                        num_flows: int = 4) -> Workload:
+    """Fig. 3(b): inter-DC flows only, unbounded bytes, always-on."""
+    return Workload(tuple(
+        FlowSpec(True, msg_size, concurrency) for _ in range(num_flows)))
+
+
+def congestion_workload(msg_size: float = 1 << 20, concurrency: int = 16,
+                        num_inter: int = 8, num_intra: int = 8,
+                        burst_start_us: float = 20_000.0,
+                        burst_len_us: float = 40_000.0,
+                        horizon_us: float = 100_000.0) -> Workload:
+    """Fig. 3(c,d): inter-DC load + an intra-DC burst that congests the
+    destination leaf mid-run (the 'downstream forwarding temporarily slowed'
+    scenario of Fig. 1)."""
+    inter = [FlowSpec(True, msg_size, concurrency) for _ in range(num_inter)]
+    intra = [FlowSpec(False, 256 << 10, 8,
+                      start_us=burst_start_us,
+                      period_us=horizon_us,
+                      duty=burst_len_us / horizon_us)
+             for _ in range(num_intra)]
+    return Workload(tuple(inter + intra))
+
+
+def mixed_fct_workload(msg_size: float, num_inter: int = 8,
+                       num_intra: int = 8, messages_per_flow: int = 4,
+                       concurrency: int = 4, num_background: int = 4,
+                       request_start_us: float = 30_000.0) -> Workload:
+    """Fig. 3(e): mixed-traffic scenario. Continuous inter-DC LLM training
+    traffic (background) + finite inter-DC transfers (the measured
+    'communication requests') + steady intra-DC traffic sharing the
+    destination leaf. Metric = average completion time of the finite
+    inter-DC flows."""
+    background = [FlowSpec(True, 1 << 20, 16) for _ in range(num_background)]
+    inter = [FlowSpec(True, msg_size, concurrency,
+                      total_bytes=msg_size * messages_per_flow * concurrency,
+                      start_us=request_start_us + 100.0 * i)
+             for i in range(num_inter)]
+    intra = [FlowSpec(False, 64 << 10, 8) for _ in range(num_intra)]
+    return Workload(tuple(background + inter + intra))
+
+
+def aicb_workload(comm_bytes_per_iter: float, iter_us: float,
+                  comm_frac: float, num_flows: int, msg_size: float,
+                  concurrency: int = 16, jitter: float = 0.0,
+                  seed: int = 0) -> Workload:
+    """LLM-training traffic from the AICB-like analytic model
+    (repro.traffic): each iteration sends ``comm_bytes_per_iter`` during a
+    comm phase lasting ``comm_frac``·iter. Optional per-flow phase jitter."""
+    rng = np.random.default_rng(seed)
+    flows = []
+    for i in range(num_flows):
+        start = float(rng.uniform(0, jitter * iter_us)) if jitter else 0.0
+        flows.append(FlowSpec(True, msg_size, concurrency,
+                              start_us=start, period_us=iter_us,
+                              duty=comm_frac))
+    return Workload(tuple(flows))

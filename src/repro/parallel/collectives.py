@@ -1,0 +1,103 @@
+"""Pod-aware collectives: hierarchical gradient reduction for geo-distributed
+training (the framework-level MatchRDMA integration).
+
+The pattern that minimizes inter-DC bytes (DESIGN.md §6):
+
+    reduce-scatter intra-pod  (ICI, full bandwidth)
+    all-reduce inter-pod      (OTN — only 1/(data*model) of the gradient per
+                               chip crosses the long-haul link; optionally
+                               int8-compressed with error feedback)
+    all-gather intra-pod      (ICI)
+
+Implemented with ``jax.shard_map`` over the production mesh. Used by the
+geo train step and unit-tested on a host-device mesh.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.compression import compressed_psum
+
+
+def hierarchical_grad_reduce(g: jax.Array, *, pod_axis: str = "pod",
+                             intra_axis: str = "data",
+                             compress: bool = False,
+                             err: Optional[jax.Array] = None):
+    """Inside shard_map: mean-reduce ``g`` over (pod_axis, intra_axis).
+
+    Equivalent to psum(g)/(n_pod*n_intra) but structured so only the
+    scattered shard crosses the pod axis. Returns (g_mean, new_err).
+    """
+    n_intra = jax.lax.axis_size(intra_axis)
+    n_pod = jax.lax.axis_size(pod_axis)
+
+    # 1) reduce-scatter intra-pod along a padded leading dim
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % n_intra
+    flat = jnp.pad(flat, (0, pad))
+    shard = jax.lax.psum_scatter(flat.reshape(n_intra, -1), intra_axis,
+                                 scatter_dimension=0, tiled=False)
+    # shard: this chip's 1/n_intra piece, summed over the pod's data axis
+
+    # 2) inter-pod exchange on the shard only
+    if compress:
+        if err is None:
+            err = jnp.zeros(g.shape, jnp.float32)
+        # error-feedback residual lives at shard granularity; keep the
+        # caller-facing state full-size (replicated) for simplicity
+        idx = jax.lax.axis_index(intra_axis)
+        err_pad = jnp.pad(err.reshape(-1).astype(jnp.float32), (0, pad))
+        err_shard = err_pad.reshape(n_intra, -1)[idx]
+        shard, new_err_shard = compressed_psum(shard, pod_axis, err_shard)
+        new_err = (jax.lax.all_gather(new_err_shard, intra_axis)
+                   .reshape(-1)[: err.size].reshape(err.shape)
+                   .astype(err.dtype))
+    else:
+        shard = jax.lax.psum(shard, pod_axis)
+        new_err = err
+
+    # 3) all-gather intra-pod
+    full = jax.lax.all_gather(shard, intra_axis)      # [n_intra, piece]
+    out = full.reshape(-1)[: g.size].reshape(g.shape)
+    return out / (n_intra * n_pod), new_err
+
+
+def make_hierarchical_allreduce(mesh: Mesh, *, compress: bool = False):
+    """jit-able tree all-reduce-mean over ("pod","data") for grads that are
+    replicated over those axes inside a shard_map region."""
+
+    pspec = P()  # grads replicated over pod/data in this demonstration path
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=(pspec, pspec),
+             out_specs=(pspec, pspec), check_vma=False)
+    def _reduce_one(g, err):
+        out, new_err = hierarchical_grad_reduce(
+            g, compress=compress, err=err)
+        return out, (new_err if new_err is not None else err)
+
+    def reduce_tree(grads, errs):
+        flat_g, tree = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(errs)
+        outs, new_errs = [], []
+        for g, e in zip(flat_g, flat_e):
+            o, ne = _reduce_one(g, e)
+            outs.append(o)
+            new_errs.append(ne)
+        return tree.unflatten(outs), tree.unflatten(new_errs)
+
+    return reduce_tree
+
+
+def inter_pod_bytes_per_step(num_params: int, *, bytes_per_el: int = 2,
+                             compress: bool = False, pods: int = 2) -> float:
+    """Analytic bytes crossing the OTN per training step under the
+    hierarchical exchange (cross-check for the HLO parse + netsim feed)."""
+    per_el = bytes_per_el * (0.5 if compress else 1.0)
+    # all-gather-based exchange: each pod ships its full scattered gradient
+    # once per peer direction: (pods-1)/pods * P elements out per pod
+    return num_params * per_el * (pods - 1) / pods * 2.0

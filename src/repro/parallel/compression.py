@@ -1,0 +1,67 @@
+"""Gradient compression for the inter-pod (inter-DC) hop.
+
+int8 per-chunk-scaled quantization with error feedback: the quantization
+residual is carried in optimizer-adjacent state and added back before the
+next step's quantization, making the compressed reduction unbiased over
+time (Seide et al. / Karimireddy et al. error-feedback results).
+
+Only the POD-axis exchange is compressed — intra-pod reductions ride the
+full-bandwidth ICI and stay exact. bf16 -> int8 halves the bytes crossing
+the OTN; the MatchRDMA step-time model prices exactly that.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 2048
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-chunk symmetric int8 quantization. Returns (q int8, scales f32)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % CHUNK
+    flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(-1, CHUNK)
+    scale = jnp.max(jnp.abs(chunks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(chunks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, dtype) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_with_feedback(g: jax.Array, err: jax.Array):
+    """Quantize (g + err); return (q, scale, new_err). new_err is the
+    residual g_corrected - dequant(q)."""
+    corrected = g.astype(jnp.float32) + err.astype(jnp.float32)
+    q, scale = quantize_int8(corrected)
+    deq = dequantize_int8(q, scale, g.shape, jnp.float32)
+    new_err = corrected - deq
+    return q, scale, new_err.astype(err.dtype)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, err: jax.Array):
+    """Error-feedback int8 all-reduce over ``axis_name`` (inside shard_map).
+
+    Each participant quantizes (x+err) to int8, all-gathers the int8 payload
+    + scales (1/8th + epsilon of the bf16 bytes per peer), and locally
+    dequant-sums. Returns (sum, new_err)."""
+    q, scale, new_err = compress_with_feedback(x, err)
+    q_all = jax.lax.all_gather(q, axis_name)          # [npods, chunks, CHUNK]
+    s_all = jax.lax.all_gather(scale, axis_name)      # [npods, chunks]
+    deq = (q_all.astype(jnp.float32) * s_all[..., None]).sum(axis=0)
+    flat = deq.reshape(-1)
+    n = 1
+    for s in x.shape:
+        n *= s
+    return flat[:n].reshape(x.shape).astype(x.dtype), new_err

@@ -1,0 +1,189 @@
+"""Sharding rules: map every param / activation / cache leaf to a PartitionSpec.
+
+Layout (Megatron 2D + optional FSDP/ZeRO-3):
+  * "model" axis shards heads (attention), d_ff (MLP), experts (MoE),
+    d_inner (SSD), rnn width (RG-LRU) and the vocab dim of the embeddings.
+  * "data" axis (optionally) shards the OTHER weight dim when fsdp=True —
+    ZeRO-3: params + optimizer state fully sharded over data*model.
+  * "pod" axis replicates params (a pod = an AI-DC; inter-pod traffic is the
+    gradient exchange only — the MatchRDMA-motivated design decision).
+  * batch is sharded over ("pod","data"); heads-dims shard over "model" only
+    when divisible (e.g. recurrentgemma's 10 heads stay replicated).
+
+Rules are keyed by leaf *path name* — stable because param trees are built by
+repro.models with fixed key names.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig, ParallelConfig
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+class ShardingRules:
+    """Resolves PartitionSpecs for one (model, parallel) configuration."""
+
+    def __init__(self, model: ModelConfig, par: ParallelConfig):
+        self.model = model
+        self.par = par
+        self.fsdp = "data" if par.fsdp else None
+        self.n_model = par.model
+        # shard the HEADS dim itself (cache layout [B,S,H,hd] and the
+        # per-head compute both need head-count divisibility)
+        self.q_shardable = _div(model.num_heads, self.n_model)
+        self.kv_shardable = _div(model.num_kv_heads, self.n_model)
+        self.ff_shardable = _div(model.d_ff, self.n_model)
+        self.vocab_shardable = _div(model.vocab_size, self.n_model)
+        # grouped (per-batch-row) MoE dispatch keeps routing local to the
+        # data shard; expert weights are REPLICATED over "model" (EP -> DP)
+        # so no token ever crosses a mesh axis for routing. The FSDP axis
+        # still shards them when enabled.
+        self.experts_shardable = (_div(model.num_experts, self.n_model)
+                                  and not model.moe_group_by_batch)
+        d_in = model.ssm_expand * model.d_model
+        self.ssd_shardable = _div(d_in, self.n_model) and _div(
+            d_in // max(model.ssm_headdim, 1), self.n_model)
+        w = model.rglru_width or model.d_model
+        self.rglru_shardable = _div(w, self.n_model)
+
+    # -- param rules -------------------------------------------------------
+    def param_spec(self, path: str, ndim: int) -> P:
+        """path: '/'-joined key names, e.g. 'backbone/groups/0/attn/wq'."""
+        name = path.split("/")[-1]
+        stacked = "/groups/" in path  # leading layer-stack dim
+        lead = (None,) if stacked else ()
+        mdl = "model"
+        f = self.fsdp
+
+        def spec(*dims):
+            return P(*lead, *dims)
+
+        # embeddings
+        if name == "tok":
+            return P(mdl if self.vocab_shardable else None, f)
+        if name == "unembed":
+            return P(f, mdl if self.vocab_shardable else None)
+        # attention
+        if name in ("wq",):
+            return spec(f, mdl if self.q_shardable else None)
+        if name in ("wk", "wv"):
+            return spec(f, mdl if self.kv_shardable else None)
+        if name == "wo":
+            return spec(mdl if self.q_shardable else None, f)
+        if name in ("bq",):
+            return spec(mdl if self.q_shardable else None)
+        if name in ("bk", "bv"):
+            return spec(mdl if self.kv_shardable else None)
+        # dense MLP
+        if name in ("w_gate", "w_up") and ndim - len(lead) == 2:
+            return spec(f, mdl if self.ff_shardable else None)
+        if name == "w_down" and ndim - len(lead) == 2:
+            return spec(mdl if self.ff_shardable else None, f)
+        # MoE experts [E, d, f] / [E, f, d]; router [d, E]
+        if name in ("w_gate", "w_up") and ndim - len(lead) == 3:
+            return spec(mdl if self.experts_shardable else None, f, None)
+        if name == "w_down" and ndim - len(lead) == 3:
+            return spec(mdl if self.experts_shardable else None, None, f)
+        if name == "router":
+            return spec(f, None)
+        # SSD (Mamba2)
+        if name in ("w_z", "w_x"):
+            return spec(f, mdl if self.ssd_shardable else None)
+        if name in ("w_bc", "w_dt"):
+            return spec(f, None)
+        if name in ("conv_x_w",):
+            return spec(None, mdl if self.ssd_shardable else None)
+        if name in ("conv_x_b", "norm_scale"):
+            return spec(mdl if self.ssd_shardable else None)
+        if name in ("conv_bc_w", "conv_bc_b"):
+            return spec(*([None] * (ndim - len(lead))))
+        if name in ("A_log", "D", "dt_bias"):
+            return spec(mdl if self.ssd_shardable else None)
+        if name == "w_out" and "ssd" in path:
+            return spec(mdl if self.ssd_shardable else None, f)
+        # RG-LRU
+        if "rglru" in path:
+            r = mdl if self.rglru_shardable else None
+            if name in ("w_x", "w_gate"):
+                return spec(f, r)
+            if name in ("w_a", "w_i"):
+                return spec(None, r)
+            if name in ("conv_w",):
+                return spec(None, r)
+            if name in ("conv_b", "b_a", "b_i", "lam"):
+                return spec(r)
+            if name == "w_out":
+                return spec(r, f)
+        # norms / scalars / anything else: replicated (layer-stacked keeps lead)
+        return spec(*([None] * (ndim - len(lead))))
+
+    def params_tree_specs(self, params) -> object:
+        """PartitionSpec tree matching a param pytree."""
+        def walk(tree, prefix):
+            if isinstance(tree, dict):
+                return {k: walk(v, prefix + "/" + k) for k, v in tree.items()}
+            if isinstance(tree, (list, tuple)):
+                out = [walk(v, prefix + f"/{i}") for i, v in enumerate(tree)]
+                return type(tree)(out)
+            return self.param_spec(prefix, np.ndim(tree))
+        return walk(params, "")
+
+    # -- activation / batch rules ------------------------------------------
+    def batch_axes(self):
+        return self.par.batch_axes()
+
+    def data_spec(self, ndim: int) -> P:
+        """Input batches: batch dim sharded over (pod, data)."""
+        return P(self.batch_axes(), *([None] * (ndim - 1)))
+
+    def hidden_spec(self) -> P:
+        return P(self.batch_axes(), None, None)
+
+    # -- KV cache rules ------------------------------------------------------
+    def cache_spec(self, path: str, ndim: int) -> P:
+        """Decode caches. Attention k/v: [G?, B, S, Hk, hd] — batch over data,
+        then kv-heads over model if divisible, else SEQUENCE over model
+        (flash-decode layout). SSM/RG-LRU states: batch over data only."""
+        stacked = "/groups/" in path
+        lead = (None,) if stacked else ()
+        name = path.split("/")[-1]
+        b = self.batch_axes()
+        if name == "k" and self.model.decode_k_time_minor:
+            # time-minor K: [B, Hk, hd, S]
+            if self.kv_shardable:
+                return P(*lead, b, "model", None, None)
+            if self.par.shard_cache_seq:
+                return P(*lead, b, None, None, "model")
+            return P(*lead, b, None, None, None)
+        if name in ("k", "v"):
+            if self.kv_shardable:
+                return P(*lead, b, None, "model", None)
+            if self.par.shard_cache_seq:
+                return P(*lead, b, "model", None, None)
+            return P(*lead, b, None, None, None)
+        # ssm / conv / rglru states: [B, ...]
+        rest = ndim - len(lead) - 1
+        return P(*lead, b, *([None] * rest))
+
+    def cache_tree_specs(self, caches) -> object:
+        def walk(tree, prefix):
+            if isinstance(tree, dict):
+                return {k: walk(v, prefix + "/" + k) for k, v in tree.items()}
+            if isinstance(tree, (list, tuple)):
+                out = [walk(v, prefix + f"/{i}") for i, v in enumerate(tree)]
+                return type(tree)(out)
+            return self.cache_spec(prefix, np.ndim(tree))
+        return walk(caches, "")
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

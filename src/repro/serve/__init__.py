@@ -1,0 +1,5 @@
+from repro.serve.decode import greedy_generate, make_serve_step
+from repro.serve.kvcache import cache_bytes, cache_shape_specs, cache_shardings
+
+__all__ = ["greedy_generate", "make_serve_step", "cache_bytes",
+           "cache_shape_specs", "cache_shardings"]

@@ -1,0 +1,51 @@
+"""Serving: prefill + batched greedy decode with donated caches.
+
+``make_serve_step`` builds the jitted single-token step used by the
+decode_32k / long_500k dry-run cells: one new token against a cache of
+``max_len``, cache donated (in-place update — no double allocation in the
+memory analysis).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.config.base import ModelConfig, ParallelConfig
+from repro.models.model import Model
+from repro.parallel.sharding import ShardingRules, named
+from repro.serve.kvcache import cache_shardings
+
+
+def make_serve_step(model: Model, par: ParallelConfig, mesh: Mesh,
+                    batch: int, max_len: int):
+    """Returns jitted step(params, caches, inp, pos) -> (caches, token)."""
+    rules = ShardingRules(model.cfg, par)
+
+    def step(params, caches, inp, pos):
+        caches, logits = model.decode_step(params, caches, inp, pos)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return caches, token
+
+    cache_sh, _ = cache_shardings(model.cfg, par, mesh, batch, max_len)
+    params_specs = rules.params_tree_specs  # resolved at jit time by caller
+    return step, cache_sh, rules
+
+
+def greedy_generate(model: Model, params, prompt: jax.Array, *,
+                    max_new: int = 32, max_len: int = 0):
+    """Single-host convenience loop (examples/tests): prefill then decode."""
+    b, s = prompt.shape[0], prompt.shape[1]
+    max_len = max_len or (s + max_new)
+    caches, logits = model.prefill(params, prompt, max_len=max_len)
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [token]
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    for t in range(max_new - 1):
+        caches, logits = decode(params, caches, token, jnp.int32(s + t))
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(token)
+    return jnp.stack(out, axis=1)

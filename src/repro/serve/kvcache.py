@@ -1,0 +1,37 @@
+"""KV-cache utilities for serving: allocation, sharding specs, shape specs.
+
+Cache layout mirrors the backbone's grouped/scanned structure
+(repro.models.transformer.init_caches): attention caches [G, B, Smax, Hk, hd],
+SSM/RG-LRU O(1) states. Sharding: batch over ("pod","data"); kv-heads over
+"model" when divisible, else the SEQUENCE dim (flash-decode layout) — see
+ShardingRules.cache_spec.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig, ParallelConfig
+from repro.models.transformer import init_caches
+from repro.parallel.sharding import ShardingRules, named
+
+
+def cache_shape_specs(model: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct tree of the cache (no allocation) via eval_shape."""
+    return jax.eval_shape(lambda: init_caches(model, batch, max_len, dtype))
+
+
+def cache_shardings(model: ModelConfig, par: ParallelConfig, mesh,
+                    batch: int, max_len: int, dtype=jnp.bfloat16):
+    rules = ShardingRules(model, par)
+    specs = cache_shape_specs(model, batch, max_len, dtype)
+    spec_tree = rules.cache_tree_specs(specs)
+    return named(mesh, spec_tree), spec_tree
+
+
+def cache_bytes(model: ModelConfig, batch: int, max_len: int) -> int:
+    specs = cache_shape_specs(model, batch, max_len)
+    return sum(int(s.size) * s.dtype.itemsize for s in jax.tree.leaves(specs))

@@ -1,0 +1,10 @@
+"""AICB-like LLM traffic model: analytic collective sizes + iteration timeline."""
+from repro.traffic.aicb import (
+    IterationProfile, iteration_profile, period_slots, training_workload,
+)
+from repro.traffic.patterns import StepTraffic, pp_stage_bytes, step_traffic
+
+__all__ = [
+    "IterationProfile", "iteration_profile", "period_slots",
+    "training_workload", "StepTraffic", "pp_stage_bytes", "step_traffic",
+]

@@ -1,0 +1,17 @@
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import SyntheticDataset
+from repro.train.elastic import (
+    FailureRecovery, ReshardingPlan, StragglerMonitor, resharding_plan,
+)
+from repro.train.optimizer import (
+    AdamState, adam_update, clip_by_global_norm, global_norm, init_adam,
+    lr_schedule,
+)
+from repro.train.train_step import batch_specs, make_train_step
+
+__all__ = [
+    "CheckpointManager", "SyntheticDataset", "FailureRecovery",
+    "ReshardingPlan", "StragglerMonitor", "resharding_plan",
+    "AdamState", "adam_update", "clip_by_global_norm", "global_norm",
+    "init_adam", "lr_schedule", "batch_specs", "make_train_step",
+]

@@ -1,0 +1,146 @@
+"""Fault-tolerant checkpointing: atomic, keep-k, async, resume-capable.
+
+Layout (one directory per step):
+    <ckpt_dir>/step_000123/
+        manifest.json      step, config fingerprint, tree structure, dtypes
+        arrays.npz         flattened leaves (gathered to host)
+    <ckpt_dir>/LATEST      -> "step_000123"  (atomic pointer file)
+
+Writes go to ``step_X.tmp`` then os.replace() — a crash mid-write can never
+corrupt the latest checkpoint (atomicity on POSIX rename). ``keep`` old
+checkpoints are retained for rollback. ``async_save`` runs serialization on
+a background thread so the train loop is not blocked (double-buffered via
+jax.device_get before handing off).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---------------- save ----------------
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> None:
+        paths, leaves, _ = _flatten_with_paths(tree)
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+        if self._thread is not None:
+            self._thread.join()        # previous async save must finish
+            self._thread = None
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, paths, host_leaves, extra))
+            self._thread.start()
+        else:
+            self._write(step, paths, host_leaves, extra)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, paths, host_leaves, extra) -> None:
+        name = f"step_{step:09d}"
+        final = os.path.join(self.dir, name)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        # store raw bytes: numpy's npz cannot represent bf16/f8 natively
+        arrays = {f"a{i}": np.ascontiguousarray(leaf).view(np.uint8)
+                  for i, leaf in enumerate(host_leaves)}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "paths": paths,
+            "dtypes": [str(l.dtype) for l in host_leaves],
+            "shapes": [list(l.shape) for l in host_leaves],
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)                      # atomic publish
+        # atomic LATEST pointer
+        ptr_tmp = os.path.join(self.dir, "LATEST.tmp")
+        with open(ptr_tmp, "w") as f:
+            f.write(name)
+        os.replace(ptr_tmp, os.path.join(self.dir, "LATEST"))
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(d for d in os.listdir(self.dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    # ---------------- restore ----------------
+    def latest_step(self) -> Optional[int]:
+        ptr = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(ptr):
+            return None
+        with open(ptr) as f:
+            name = f.read().strip()
+        if not os.path.isdir(os.path.join(self.dir, name)):
+            return None
+        return int(name.split("_")[1])
+
+    def restore(self, step: Optional[int], like: Any,
+                shardings: Any = None) -> Tuple[int, Any]:
+        """Restore into the structure of ``like`` (values replaced).
+        ``shardings``: optional matching tree of NamedShardings — this is the
+        ELASTIC path: a checkpoint written on one mesh restores onto any
+        other mesh (resharding happens in device_put)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        import ml_dtypes
+        host = []
+        for i in range(len(manifest["paths"])):
+            raw = data[f"a{i}"]
+            try:
+                dt = np.dtype(manifest["dtypes"][i])
+            except TypeError:
+                dt = np.dtype(getattr(ml_dtypes, manifest["dtypes"][i]))
+            host.append(raw.view(dt).reshape(manifest["shapes"][i]))
+        flat_like, treedef = jax.tree_util.tree_flatten(like)
+        assert len(flat_like) == len(host), (
+            f"checkpoint has {len(host)} leaves, target {len(flat_like)}")
+        if shardings is not None:
+            flat_sh = jax.tree_util.tree_flatten(shardings)[0]
+            arrs = [jax.device_put(h, s) for h, s in zip(host, flat_sh)]
+        else:
+            # cast on device: numpy lacks cast kernels for bf16 & friends
+            arrs = []
+            for h, l in zip(host, flat_like):
+                a = jax.device_put(h)
+                if hasattr(l, "dtype") and a.dtype != l.dtype:
+                    a = a.astype(l.dtype)
+                arrs.append(a)
+        return step, jax.tree_util.tree_unflatten(treedef, arrs)

@@ -1,0 +1,88 @@
+"""AdamW + LR schedules, pure JAX, sharding-friendly.
+
+Optimizer state mirrors the param tree (m, v per leaf) and therefore shards
+exactly like the params (ZeRO-3 when fsdp=True). ``opt_state_dtype`` lets the
+340B config keep m/v in bf16 (DESIGN.md §5(5)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import TrainConfig
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: object     # pytree like params
+    v: object
+
+
+def init_adam(params, dtype: str = "float32") -> AdamState:
+    dt = jnp.dtype(dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamState(
+        step=jnp.int32(0),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def lr_schedule(cfg: TrainConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to 10%."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[object, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def adam_update(params, grads, state: AdamState, cfg: TrainConfig):
+    """Returns (new_params, new_state, metrics). Math in f32; params and
+    states cast back to their storage dtypes."""
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+    corr1 = 1.0 - b1 ** step.astype(jnp.float32)
+    corr2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    # NOTE: three separate tree.maps (not one map returning tuples) — tuple
+    # leaves would be ambiguous against structural tuples in the param tree
+    # (e.g. the length-3 block-pattern groups); XLA CSEs the shared math.
+    def new_m_fn(g, m):
+        return (b1 * m.astype(jnp.float32)
+                + (1 - b1) * g.astype(jnp.float32)).astype(m.dtype)
+
+    def new_v_fn(g, v):
+        return (b2 * v.astype(jnp.float32)
+                + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(v.dtype)
+
+    new_m = jax.tree.map(new_m_fn, grads, state.m)
+    new_v = jax.tree.map(new_v_fn, grads, state.v)
+
+    def new_p_fn(p, m, v):
+        mhat = m.astype(jnp.float32) / corr1
+        vhat = v.astype(jnp.float32) / corr2
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * pf)
+        return pf.astype(p.dtype)
+
+    new_params = jax.tree.map(new_p_fn, params, new_m, new_v)
+    return new_params, AdamState(step=step, m=new_m, v=new_v), {"lr": lr}

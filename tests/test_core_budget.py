@@ -1,0 +1,103 @@
+"""Budget controller laws: τ-paced probing, capability matching & ratchet."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import NetConfig
+from repro.core.budget import (
+    ctrl_window_slots, fair_share, init_budget, update_budget,
+)
+from repro.core.estimator import RateEstimate
+
+CFG = NetConfig(distance_km=100.0)
+
+
+def _est(rate, cap=0.0, have=0.0):
+    return RateEstimate(rate=jnp.float32(rate), stable_frac=jnp.float32(1.0),
+                        recurrent=jnp.float32(0.0),
+                        capability=jnp.float32(cap),
+                        have_capability=jnp.float32(have))
+
+
+def test_ctrl_window_scales_with_distance():
+    short = ctrl_window_slots(NetConfig(distance_km=1.0))
+    mid = ctrl_window_slots(NetConfig(distance_km=100.0))
+    far = ctrl_window_slots(NetConfig(distance_km=1000.0))
+    assert short <= mid <= far
+    assert far >= 100   # 2*5ms / 100µs
+
+
+def test_initial_budget_conservative():
+    b = init_budget(CFG)
+    cap = CFG.otn_capacity_gbps * 1e9 / 8.0
+    assert float(b.budget) < 0.5 * cap
+
+
+def test_matched_regime_tracks_capability_not_throttled_egress():
+    st = init_budget(CFG)
+    # constrained, capability known at 50 GB/s, current egress only 10 GB/s
+    st2 = update_budget(st, _est(10e9, cap=50e9, have=1.0),
+                        cnp_in_slot=jnp.float32(0.0),
+                        cong_recent=jnp.float32(1.0), cfg=CFG, ctrl_slots=4)
+    np.testing.assert_allclose(float(st2.budget),
+                               CFG.budget_headroom * 50e9, rtol=0.01)
+
+
+def test_open_up_paced_by_ctrl_window():
+    st = init_budget(CFG)
+    b0 = float(st.budget)
+    ctrl = 6
+    budgets = []
+    for _ in range(ctrl * 3):
+        st = update_budget(st, _est(1e9), jnp.float32(0.0),
+                           jnp.float32(0.0), CFG, ctrl_slots=ctrl)
+        budgets.append(float(st.budget))
+    # at most 3 raises in 18 clear slots with ctrl=6
+    raises = sum(1 for a, b in zip([b0] + budgets, budgets) if b > a * 1.01)
+    assert raises <= 3
+    assert budgets[-1] > b0                      # but it does open up
+
+
+def test_capability_ratchet_on_clean_absorption():
+    """Clear windows at high egress must ratchet cap_ewma upward."""
+    st = init_budget(CFG)
+    # seed capability low
+    st = update_budget(st, _est(10e9, cap=10e9, have=1.0), jnp.float32(0.0),
+                       jnp.float32(1.0), CFG, ctrl_slots=2)
+    assert abs(float(st.cap_ewma) - 10e9) / 10e9 < 0.01
+    # then sustained clear slots with egress 30 GB/s
+    for _ in range(10):
+        st = update_budget(st, _est(30e9, have=0.0), jnp.float32(0.0),
+                           jnp.float32(0.0), CFG, ctrl_slots=2)
+    assert float(st.cap_ewma) >= 30e9 * 0.99
+
+
+def test_budget_bounds():
+    st = init_budget(CFG)
+    cap = CFG.otn_capacity_gbps * 1e9 / 8.0
+    floor = CFG.budget_floor_mbps * 1e6 / 8.0
+    st2 = update_budget(st, _est(1e20, cap=1e20, have=1.0), jnp.float32(0.0),
+                        jnp.float32(1.0), CFG, ctrl_slots=1)
+    assert float(st2.budget) <= cap
+    st3 = update_budget(st, _est(0.0, cap=0.0, have=1.0), jnp.float32(10.0),
+                        jnp.float32(1.0), CFG, ctrl_slots=1)
+    assert float(st3.budget) >= floor
+
+
+def test_tighten_decays_and_recovers():
+    st = init_budget(CFG)
+    for _ in range(5):
+        st = update_budget(st, _est(10e9, cap=10e9, have=1.0),
+                           jnp.float32(10.0), jnp.float32(1.0), CFG, 1)
+    tight = float(st.tighten)
+    assert tight < 1.0
+    for _ in range(50):
+        st = update_budget(st, _est(10e9, cap=10e9, have=1.0),
+                           jnp.float32(0.0), jnp.float32(1.0), CFG, 1)
+    assert float(st.tighten) > tight
+    assert float(st.tighten) <= 1.0
+
+
+def test_fair_share():
+    active = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+    s = fair_share(jnp.float32(90.0), active)
+    np.testing.assert_allclose(np.asarray(s), [30.0, 30.0, 0.0, 30.0])

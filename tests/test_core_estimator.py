@@ -1,0 +1,91 @@
+"""Slot ring + slot-weighted / periodic rate estimation."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import NetConfig
+from repro.core.estimator import periodic_estimate, slot_weighted_estimate
+from repro.core.slots import SlotObs, classify_slot, init_ring, ordered_history, push_slot
+
+CFG = NetConfig()
+
+
+def _obs(rate, ack=1.0, cnp=0.0, q=0.0):
+    return SlotObs(egress_rate=jnp.float32(rate), ack_delay_us=jnp.float32(ack),
+                   cnp_count=jnp.float32(cnp), local_queue=jnp.float32(q))
+
+
+def _fill(ring, rates, **kw):
+    for r in rates:
+        ring = push_slot(ring, _obs(r, **kw), CFG)
+    return ring
+
+
+def test_classify_slot_levels():
+    assert float(classify_slot(_obs(1.0), CFG)) == 0.0
+    assert float(classify_slot(_obs(1.0, ack=100.0), CFG)) == 1.0
+    assert float(classify_slot(_obs(1.0, ack=100.0, cnp=3.0), CFG)) == 2.0
+    assert float(classify_slot(_obs(1.0, ack=100.0, cnp=3.0, q=1e9), CFG)) == 3.0
+
+
+def test_ring_ordering_and_validity():
+    ring = init_ring(16)
+    ring = _fill(ring, range(20))            # wraps
+    rates, cong, busy, valid = ordered_history(ring)
+    assert float(valid.min()) == 1.0         # fully wrapped => all valid
+    np.testing.assert_allclose(np.asarray(rates), np.arange(4, 20))
+
+
+def test_partial_ring_validity():
+    ring = init_ring(16)
+    ring = _fill(ring, [5.0] * 4)
+    _, _, _, valid = ordered_history(ring)
+    assert float(valid.sum()) == 4.0
+
+
+def test_stable_windows_weighted_higher():
+    """History = old jittery low-rate slots + recent stable high-rate windows;
+    the weighted estimate must sit near the stable rate."""
+    ring = init_ring(32)
+    rng = np.random.default_rng(0)
+    jitter = 50.0 + 45.0 * rng.standard_normal(16)           # CV >> thresh
+    ring = _fill(ring, jitter.tolist())
+    ring = _fill(ring, [100.0] * 16)                          # stable
+    est = slot_weighted_estimate(ring, CFG)
+    assert abs(float(est.rate) - 100.0) < 15.0
+    assert float(est.stable_frac) >= 0.5
+
+
+def test_capability_only_from_busy_slots():
+    ring = init_ring(32)
+    ring = _fill(ring, [10.0] * 16, q=0.0)                    # idle: low egress
+    ring = _fill(ring, [90.0] * 16, q=1e9)                    # busy: capability
+    est = slot_weighted_estimate(ring, CFG)
+    assert float(est.have_capability) == 1.0
+    assert abs(float(est.capability) - 90.0) < 1.0
+    # the plain estimate blends both
+    assert float(est.rate) < 90.0
+
+
+def test_periodic_predictor_fires_on_recurrence():
+    """Rates repeat with period 16 slots; the predictor should forecast the
+    NEXT phase's rates rather than the blended mean."""
+    cfg = NetConfig()
+    period = 16
+    pattern = [100.0] * 8 + [20.0] * 8
+    ring = init_ring(64)
+    ring = _fill(ring, pattern * 4)
+    est = periodic_estimate(ring, cfg, period_slots=period)
+    assert float(est.recurrent) == 1.0
+    # current window = the 20.0 phase; next-phase forecast = 100.0
+    assert abs(float(est.rate) - 100.0) < 1.0
+
+
+def test_periodic_predictor_falls_back_without_recurrence():
+    cfg = NetConfig()
+    rng = np.random.default_rng(1)
+    ring = init_ring(64)
+    ring = _fill(ring, rng.uniform(10, 200, 64).tolist())
+    est = periodic_estimate(ring, cfg, period_slots=16)
+    base = slot_weighted_estimate(ring, cfg)
+    if float(est.recurrent) == 0.0:
+        np.testing.assert_allclose(float(est.rate), float(base.rate), rtol=1e-6)

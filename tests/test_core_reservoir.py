@@ -1,0 +1,72 @@
+"""Eq. (1) reservoir model: the B_req bound must dominate the simulated queue."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reservoir import (
+    buffer_bound_e2e_vs_segmented, queue_trajectory, rate_mismatch_integral,
+    required_buffer,
+)
+
+DT = 1e-4  # 100 µs
+
+
+def test_mismatch_integral_constant_rates():
+    r_in = jnp.full((100,), 10.0)
+    r_out = jnp.full((100,), 4.0)
+    w = rate_mismatch_integral(r_in, r_out, DT, tau_steps=10)
+    # 6 bytes/s excess * 10 steps * 1e-4 s
+    np.testing.assert_allclose(w[0], 6.0 * 10 * DT, rtol=1e-6)
+
+
+def test_bound_dominates_queue_when_tau_covers_horizon():
+    """With τ = horizon, B_req >= peak queue for ANY rate pair (the queue can
+    never exceed the total windowed excess)."""
+    rng = np.random.default_rng(0)
+    r_in = jnp.asarray(rng.uniform(0, 100, 500).astype(np.float32))
+    r_out = jnp.asarray(rng.uniform(0, 80, 500).astype(np.float32))
+    b_req = required_buffer(r_in, r_out, DT, tau_steps=500)
+    peak = float(queue_trajectory(r_in, r_out, DT).max())
+    assert float(b_req) >= peak - 1e-5
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 400), st.integers(0, 3))
+def test_bound_dominates_queue_property(tau_extra, seed):
+    """If the drain never falls below its window value for longer than τ the
+    windowed bound still dominates a FRESH queue (q starts empty within the
+    window). Property: peak over any τ window of the queue started empty is
+    ≤ sup_t windowed integral."""
+    rng = np.random.default_rng(seed)
+    n = 400
+    r_in = jnp.asarray(rng.uniform(0, 50, n).astype(np.float32))
+    r_out = jnp.asarray(rng.uniform(0, 50, n).astype(np.float32))
+    tau = tau_extra
+    b_req = float(required_buffer(r_in, r_out, DT, tau_steps=max(tau, 1)))
+    # queue growth over any window of length tau starting from empty
+    qs = queue_trajectory(r_in, r_out, DT)
+    qs_np = np.asarray(qs)
+    growth = []
+    for t0 in range(0, n - tau, 17):
+        window_growth = qs_np[t0:t0 + tau] - (qs_np[t0 - 1] if t0 else 0.0)
+        if len(window_growth):
+            growth.append(window_growth.max())
+    if growth:
+        assert b_req >= max(0.0, max(growth)) - 1e-4
+
+
+def test_segmented_tau_smaller_than_e2e():
+    b_e2e, b_seg = buffer_bound_e2e_vs_segmented(
+        peak_rate=200e9 / 8, matched_rate=50e9 / 8,
+        one_way_delay_us=500.0, slot_us=100.0)
+    assert b_seg < b_e2e
+    # τ_seg/τ_e2e = (D + slot)/(2D) = 0.6 at these numbers
+    np.testing.assert_allclose(b_seg / b_e2e, 0.6, rtol=1e-6)
+
+
+def test_queue_trajectory_never_negative():
+    r_in = jnp.asarray([0.0, 100.0, 0.0, 0.0, 50.0])
+    r_out = jnp.asarray([10.0, 10.0, 1000.0, 1000.0, 10.0])
+    qs = queue_trajectory(r_in, r_out, DT)
+    assert float(qs.min()) >= 0.0

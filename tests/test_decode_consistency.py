@@ -1,0 +1,58 @@
+"""Decode-with-cache must reproduce full-sequence forward logits (f32)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import get_model_config
+from repro.models import build_model
+
+ARCHS = ["qwen1.5-0.5b", "internlm2-1.8b", "recurrentgemma-2b",
+         "mamba2-370m", "musicgen-large", "nemotron-4-340b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill(arch):
+    cfg = dataclasses.replace(get_model_config(arch, smoke=True),
+                              act_dtype="float32", param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    s0, t = 48, 4
+    key = jax.random.PRNGKey(3)
+    if cfg.embed_inputs:
+        toks = jax.random.randint(key, (2, s0 + t), 0, cfg.vocab_size)
+        caches, lg = model.prefill(params, toks[:, :s0], max_len=s0 + t)
+        for i in range(t):
+            caches, lg = model.decode_step(params, caches, toks[:, s0 + i],
+                                           jnp.int32(s0 + i))
+        _, lg_full = model.prefill(params, toks, max_len=s0 + t)
+    else:
+        emb = jax.random.normal(key, (2, s0 + t, cfg.d_model), jnp.float32)
+        caches, lg = model.prefill(params, emb[:, :s0], max_len=s0 + t)
+        for i in range(t):
+            caches, lg = model.decode_step(params, caches,
+                                           emb[:, s0 + i:s0 + i + 1],
+                                           jnp.int32(s0 + i))
+        _, lg_full = model.prefill(params, emb, max_len=s0 + t)
+    err = float(jnp.abs(lg - lg_full).max())
+    assert err < 5e-4, err
+
+
+def test_moe_decode_consistency_without_drops():
+    """MoE matches when capacity is large enough that nothing drops
+    (capacity-drop divergence is documented GShard semantics)."""
+    cfg = dataclasses.replace(get_model_config("phi3.5-moe-42b-a6.6b", smoke=True),
+                              act_dtype="float32", param_dtype="float32",
+                              moe_capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    s0, t = 48, 4
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, s0 + t), 0,
+                              cfg.vocab_size)
+    caches, lg = model.prefill(params, toks[:, :s0], max_len=s0 + t)
+    for i in range(t):
+        caches, lg = model.decode_step(params, caches, toks[:, s0 + i],
+                                       jnp.int32(s0 + i))
+    _, lg_full = model.prefill(params, toks, max_len=s0 + t)
+    assert float(jnp.abs(lg - lg_full).max()) < 5e-4

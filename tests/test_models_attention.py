@@ -1,0 +1,73 @@
+"""Chunked / local attention vs the naive oracle, across shapes & dtypes."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.attention import (
+    chunked_causal_attention, decode_attention, decode_local_attention,
+    local_attention, naive_causal_attention,
+)
+
+
+def _qkv(key, b, s, hq, hk, d, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hk, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hk, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,s,hq,hk,d,bq,bk", [
+    (2, 128, 8, 2, 32, 32, 32),
+    (1, 256, 4, 4, 64, 64, 128),
+    (2, 96, 6, 3, 16, 32, 32),
+    (1, 64, 2, 1, 128, 16, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chunked_matches_naive(b, s, hq, hk, d, bq, bk, dtype):
+    q, k, v = _qkv(jax.random.PRNGKey(0), b, s, hq, hk, d, dtype)
+    out = chunked_causal_attention(q, k, v, block_q=bq, block_kv=bk)
+    ref = naive_causal_attention(q, k, v)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.abs(out.astype(jnp.float32)
+                         - ref.astype(jnp.float32)).max()) < tol
+
+
+@pytest.mark.parametrize("s,w", [(128, 32), (96, 32), (200, 64), (64, 64)])
+def test_local_matches_naive_window(s, w):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, s, 4, 2, 32, jnp.float32)
+    out = local_attention(q, k, v, window=w)
+    ref = naive_causal_attention(q, k, v, window=w)
+    assert float(jnp.abs(out - ref).max()) < 2e-6
+
+
+def test_softcap_path():
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 64, 2, 2, 32, jnp.float32)
+    out = chunked_causal_attention(q, k, v, block_q=32, block_kv=32,
+                                   softcap=20.0)
+    ref = naive_causal_attention(q, k, v, softcap=20.0)
+    assert float(jnp.abs(out - ref).max()) < 2e-6
+
+
+def test_decode_matches_last_row_of_full():
+    """decode_attention at pos must equal row `pos` of full attention."""
+    b, s, hq, hk, d = 2, 64, 4, 2, 32
+    q, k, v = _qkv(jax.random.PRNGKey(3), b, s, hq, hk, d, jnp.float32)
+    full = naive_causal_attention(q, k, v)
+    pos = s - 1
+    out = decode_attention(q[:, pos], k, v, jnp.int32(pos))
+    assert float(jnp.abs(out - full[:, pos]).max()) < 2e-6
+
+
+def test_decode_local_ring():
+    """Ring-buffer local decode must equal banded attention's last row."""
+    b, s, hq, hk, d, w = 1, 96, 2, 1, 16, 32
+    q, k, v = _qkv(jax.random.PRNGKey(4), b, s, hq, hk, d, jnp.float32)
+    full = naive_causal_attention(q, k, v, window=w)
+    pos = s - 1
+    # build ring: slot = p % w holds position p for p in (pos-w, pos]
+    slots = (jnp.arange(s - w, s)) % w
+    k_ring = jnp.zeros((b, w, hk, d)).at[:, slots].set(k[:, s - w:])
+    v_ring = jnp.zeros((b, w, hk, d)).at[:, slots].set(v[:, s - w:])
+    out = decode_local_attention(q[:, pos], k_ring, v_ring, jnp.int32(pos))
+    assert float(jnp.abs(out - full[:, pos]).max()) < 2e-6

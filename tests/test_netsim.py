@@ -1,0 +1,86 @@
+"""Fluid simulator: conservation properties, the ACK-limit law, and the
+paper's scheme ordering (Fig. 3 directions)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config.base import NetConfig
+from repro.netsim import (
+    FlowSpec, Workload, congestion_workload, run_experiment, simulate,
+    throughput_workload,
+)
+
+CFG100 = NetConfig(distance_km=100.0)
+
+
+@pytest.fixture(scope="module")
+def thr_results():
+    wl = throughput_workload(msg_size=1 << 20, concurrency=1, num_flows=4)
+    out = {}
+    for scheme in ("dcqcn", "pseudo_ack", "themis", "matchrdma"):
+        out[scheme] = run_experiment(CFG100, wl, scheme, 100_000.0)
+    return out
+
+
+def test_conservation(thr_results):
+    """delivered <= sent and every queue is non-negative, every scheme."""
+    wl = throughput_workload(msg_size=1 << 20, concurrency=1, num_flows=4)
+    for scheme in ("dcqcn", "matchrdma"):
+        final, traces = simulate(CFG100, wl, scheme, 30_000.0)
+        sent = np.asarray(final.sent)
+        deliv = np.asarray(final.delivered)
+        assert (deliv <= sent + 1.0).all()
+        for q in ("q_src", "q_dst", "q_leaf"):
+            assert np.asarray(traces[q]).min() >= -1e-3
+
+
+def test_ack_limit_law():
+    """Conventional RDMA throughput at long distance must equal
+    concurrency*msg/RTT (the paper's bottleneck #1)."""
+    cfg = NetConfig(distance_km=1000.0)
+    wl = throughput_workload(msg_size=1 << 20, concurrency=1, num_flows=4)
+    r = run_experiment(cfg, wl, "dcqcn", 150_000.0)
+    rtt = 2 * cfg.one_way_delay_us * 1e-6
+    pred = 4 * (1 << 20) / rtt * 8 / 1e9
+    assert abs(r["throughput_gbps"] - pred) / pred < 0.1
+
+
+def test_pseudo_ack_distance_insensitive(thr_results):
+    assert thr_results["pseudo_ack"]["throughput_gbps"] > \
+        5 * thr_results["dcqcn"]["throughput_gbps"]
+    assert thr_results["matchrdma"]["throughput_gbps"] > \
+        5 * thr_results["dcqcn"]["throughput_gbps"]
+
+
+def test_matchrdma_buffer_and_pause_lower_than_pseudo_ack(thr_results):
+    m = thr_results["matchrdma"]
+    p = thr_results["pseudo_ack"]
+    assert m["peak_buffer_mb"] < 0.5 * p["peak_buffer_mb"]
+    assert m["pause_ratio"] < 0.5 * p["pause_ratio"] + 1e-6
+
+
+def test_congestion_scenario_ordering():
+    """Fig. 3(c,d): MatchRDMA lowest buffer stress and pause ratio."""
+    wl = congestion_workload()
+    res = {s: run_experiment(CFG100, wl, s, 80_000.0)
+           for s in ("dcqcn", "pseudo_ack", "matchrdma")}
+    assert res["matchrdma"]["p99_buffer_mb"] < res["dcqcn"]["p99_buffer_mb"]
+    assert res["matchrdma"]["p99_buffer_mb"] < res["pseudo_ack"]["p99_buffer_mb"]
+    assert res["matchrdma"]["pause_ratio"] < 0.5 * res["dcqcn"]["pause_ratio"]
+    # intra-DC traffic survives alongside MatchRDMA
+    assert res["matchrdma"]["intra_thr_gbps"] > 10.0
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 3), st.sampled_from([64 << 10, 1 << 20]))
+def test_finite_flows_complete(seed, msg):
+    """Finite flows complete under matchrdma for arbitrary small workloads."""
+    rng = np.random.default_rng(seed)
+    flows = [FlowSpec(True, msg, 4, total_bytes=4 * msg,
+                      start_us=float(rng.uniform(0, 5000)))
+             for _ in range(3)]
+    wl = Workload(tuple(flows))
+    r = run_experiment(CFG100, wl, "matchrdma", 150_000.0)
+    assert r["completion_frac"] == 1.0

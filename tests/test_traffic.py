@@ -1,0 +1,72 @@
+"""AICB-like traffic model: analytic collective-size checks."""
+import numpy as np
+import pytest
+
+from repro.config import get_model_config, get_parallel_config
+from repro.config.base import ParallelConfig, TrainConfig
+from repro.traffic import (
+    iteration_profile, pp_stage_bytes, step_traffic, training_workload,
+)
+
+TC = TrainConfig(global_batch=256, seq_len=4096)
+
+
+def test_dp_bytes_formula():
+    m = get_model_config("qwen1.5-0.5b")
+    par = get_parallel_config("qwen1.5-0.5b", multi_pod=False)
+    t = step_traffic(m, par, TC)
+    assert abs(t.dp_grad_bytes - 2 * m.param_count() * 2) < 1e-3
+
+
+def test_hierarchical_beats_flat_interpod():
+    m = get_model_config("deepseek-67b")
+    p_h = ParallelConfig(multi_pod=True, hierarchical_allreduce=True, fsdp=True)
+    p_f = ParallelConfig(multi_pod=True, hierarchical_allreduce=False, fsdp=True)
+    t_h = step_traffic(m, p_h, TC)
+    t_f = step_traffic(m, p_f, TC)
+    assert t_h.inter_pod_bytes < t_f.inter_pod_bytes / 100
+
+
+def test_compression_halves_interpod():
+    m = get_model_config("deepseek-67b")
+    p = ParallelConfig(multi_pod=True, pod_compression="int8")
+    p0 = ParallelConfig(multi_pod=True)
+    assert (step_traffic(m, p, TC).inter_pod_bytes
+            == 0.5 * step_traffic(m, p0, TC).inter_pod_bytes)
+
+
+def test_moe_has_ep_bytes():
+    m = get_model_config("phi3.5-moe-42b-a6.6b")
+    par = get_parallel_config("phi3.5-moe-42b-a6.6b", multi_pod=True)
+    t = step_traffic(m, par, TC)
+    assert t.ep_alltoall_bytes > 0
+    dense = get_model_config("deepseek-67b")
+    td = step_traffic(dense, get_parallel_config("deepseek-67b", multi_pod=True), TC)
+    assert td.ep_alltoall_bytes == 0
+
+
+def test_comm_frac_bounded():
+    for arch in ("deepseek-67b", "mamba2-370m", "nemotron-4-340b"):
+        m = get_model_config(arch)
+        par = get_parallel_config(arch, multi_pod=True)
+        t = step_traffic(m, par, TC)
+        assert 0.0 < t.comm_frac < 1.0
+
+
+def test_iteration_profile_and_workload():
+    m = get_model_config("granite-moe-1b-a400m")
+    par = get_parallel_config("granite-moe-1b-a400m", multi_pod=True)
+    prof = iteration_profile(m, par, TC)
+    assert prof.comm_us > 0 and prof.iter_us > prof.comm_us
+    wl = training_workload(m, par, TC, num_flows=8, with_intra=4)
+    assert wl.num_flows == 12
+    arrays = wl.arrays()
+    assert arrays["is_inter"].sum() == 8
+    assert (arrays["duty"][arrays["is_inter"] > 0] <= 1.0).all()
+
+
+def test_pp_stage_bytes():
+    m = get_model_config("qwen1.5-0.5b")
+    b = pp_stage_bytes(m, TC, microbatches=8)
+    expected = 2 * 8 * (256 * 4096 / 8) * m.d_model * 2
+    assert abs(b - expected) < 1.0

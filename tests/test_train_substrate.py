@@ -1,0 +1,197 @@
+"""Optimizer, data pipeline, checkpointing, elastic policies."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_model_config
+from repro.config.base import ModelConfig, ParallelConfig, TrainConfig
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import SyntheticDataset
+from repro.train.elastic import FailureRecovery, StragglerMonitor, resharding_plan
+from repro.train.optimizer import (
+    adam_update, clip_by_global_norm, init_adam, lr_schedule,
+)
+
+
+# ------------------------- optimizer -------------------------
+
+def test_adam_first_step_matches_reference():
+    cfg = TrainConfig(lr=1e-2, warmup_steps=1, total_steps=10,
+                      weight_decay=0.0)
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    grads = {"w": jnp.full((4,), 0.5)}
+    st = init_adam(params)
+    new_p, st2, m = adam_update(params, grads, st, cfg)
+    # step 1 with bias correction: update = lr * g/|g| (adam first step) = lr
+    lr1 = float(lr_schedule(cfg, jnp.int32(1)))
+    np.testing.assert_allclose(np.asarray(new_p["w"]), 1.0 - lr1, rtol=1e-4)
+
+
+def test_lr_schedule_shape():
+    cfg = TrainConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in range(0, 101, 5)]
+    assert lrs[0] < lrs[2]                       # warmup rising
+    assert max(lrs) <= 1e-3 + 1e-9
+    assert lrs[-1] < 0.2 * max(lrs)              # decayed
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((3,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    n2 = float(jnp.sqrt(jnp.sum(jnp.square(clipped["a"]))))
+    assert abs(n2 - 1.0) < 1e-5
+    assert float(norm) > 100.0
+
+
+def test_training_reduces_loss():
+    """A few hundred steps on the Markov stream must beat the unigram floor."""
+    from repro.models import build_model
+    cfg = get_model_config("qwen1.5-0.5b", smoke=True)
+    tc = TrainConfig(global_batch=8, seq_len=128, lr=3e-3, warmup_steps=10,
+                     total_steps=120)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_adam(params)
+    data = SyntheticDataset(cfg, tc)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, batch)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        params, opt, _ = adam_update(params, grads, opt, tc)
+        return params, opt, loss
+
+    first = None
+    for i in range(120):
+        params, opt, loss = step(params, opt, data.batch_at(i))
+        if i == 0:
+            first = float(loss)
+    assert float(loss) < first - 0.5, (first, float(loss))
+
+
+# ------------------------- data -------------------------
+
+def test_data_deterministic_and_seekable():
+    cfg = get_model_config("qwen1.5-0.5b", smoke=True)
+    tc = TrainConfig(global_batch=4, seq_len=64, seed=7)
+    d1 = SyntheticDataset(cfg, tc)
+    d2 = SyntheticDataset(cfg, tc)
+    b1 = d1.batch_at(13)
+    b2 = d2.batch_at(13)
+    assert jnp.array_equal(b1["tokens"], b2["tokens"])
+    b3 = d1.batch_at(14)
+    assert not jnp.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_is_learnable_markov():
+    """Bigram distribution must be far from uniform (signal exists)."""
+    cfg = get_model_config("qwen1.5-0.5b", smoke=True)
+    tc = TrainConfig(global_batch=8, seq_len=256)
+    d = SyntheticDataset(cfg, tc)
+    toks = np.asarray(d.batch_at(0)["tokens"]).reshape(-1)
+    # successive-token mutual information proxy: repeated bigrams
+    big = set(zip(toks[:-1], toks[1:]))
+    assert len(big) < 0.5 * (len(toks) - 1)
+
+
+# ------------------------- checkpointing -------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    tree = {"a": jnp.arange(5, dtype=jnp.float32),
+            "b": {"c": jnp.ones((2, 3), jnp.bfloat16)}}
+    mgr.save(7, tree)
+    step, restored = mgr.restore(None, tree)
+    assert step == 7
+    assert jnp.array_equal(restored["a"], tree["a"])
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    tree = {"a": jnp.zeros(3)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(dirs) == 2
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    tree = {"a": jnp.arange(10, dtype=jnp.float32)}
+    mgr.save(1, tree)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_restore_resharding_path(tmp_path):
+    """Restore with explicit shardings (the elastic path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    mgr.save(3, tree)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P())}
+    step, restored = mgr.restore(3, tree, shardings=sh)
+    assert jnp.array_equal(restored["w"], tree["w"])
+
+
+# ------------------------- elastic -------------------------
+
+def test_resharding_plan_pod_loss():
+    par = ParallelConfig(multi_pod=True)
+    plan = resharding_plan(par, lost_pods=1)
+    assert plan.new_mesh == (1, 16, 16)
+    assert plan.batch_scale == 1.0
+
+
+def test_resharding_plan_rejects_impossible():
+    par = ParallelConfig(multi_pod=False)
+    with pytest.raises(ValueError):
+        resharding_plan(par, lost_data_rows=16)
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(factor=3.0, evict_after=2)
+    for _ in range(10):
+        assert mon.observe(0.1) == "ok"
+    assert mon.observe(1.0) == "straggler"
+    assert mon.observe(1.0) == "evict"
+
+
+def test_failure_recovery_replays_from_checkpoint(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    state = {"step": jnp.int32(0)}
+    calls = {"n": 0}
+
+    def train_fn(start):
+        calls["n"] += 1
+        for s in range(start, 10):
+            if s == 5 and calls["n"] == 1:
+                mgr.save(5, state)
+                raise RuntimeError("simulated node failure")
+        return 10
+
+    rec = FailureRecovery(mgr, max_restarts=2)
+    final = rec.run(train_fn, 0, 10)
+    assert final == 10
+    assert calls["n"] == 2
+
+
+def test_failure_recovery_bounded():
+    class NoCkpt:
+        def latest_step(self):
+            return None
+
+    def always_fail(start):
+        raise RuntimeError("boom")
+
+    rec = FailureRecovery(NoCkpt(), max_restarts=2)
+    with pytest.raises(RuntimeError):
+        rec.run(always_fail, 0, 10)
