@@ -1,0 +1,24 @@
+# Tier-1 CI entry points.
+#
+#   make deps          - install dev/test dependencies (best-effort: the
+#                        suite also runs without them via tests/_hypo.py)
+#   make test          - the tier-1 suite (ROADMAP.md "Tier-1 verify")
+#   make ci            - deps + test
+#   make bench-netsim  - batched-vs-sequential sweep micro-bench; appends
+#                        results to BENCH_netsim_sweep.json
+
+PYTHON ?= python
+
+.PHONY: deps test ci bench-netsim
+
+deps:
+	$(PYTHON) -m pip install -r requirements-dev.txt || \
+	  echo "pip install failed; continuing (tests degrade gracefully)"
+
+test:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+ci: deps test
+
+bench-netsim:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.netsim_sweep_bench

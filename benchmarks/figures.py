@@ -7,13 +7,12 @@ the complete grid.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
 from repro.config.base import NetConfig
 from repro.netsim import (
     congestion_workload, mixed_fct_workload, run_experiment,
-    throughput_workload,
+    run_experiment_batch, throughput_workload,
 )
 from repro.netsim.workload import aicb_workload
 
@@ -22,27 +21,32 @@ SCHEMES = ("dcqcn", "pseudo_ack", "themis", "matchrdma")
 
 def fig3b_throughput(full: bool = False):
     """Fig. 3(b): inter-DC throughput vs distance under different message
-    sizes. Derived: MatchRDMA/DCQCN speedup (paper: up to 20x)."""
+    sizes. Derived: MatchRDMA/DCQCN speedup (paper: up to 20x).
+
+    Batched engine: per (msg, scheme) the full distance grid is ONE vmapped
+    launch; the per-row time is the batch wall-clock amortized over cells."""
     rows = []
     dists = (1.0, 100.0, 1000.0) if not full else (1.0, 10.0, 50.0, 100.0,
                                                    300.0, 500.0, 1000.0)
     msgs = (64 << 10, 1 << 20) if not full else (1 << 10, 16 << 10, 64 << 10,
                                                  256 << 10, 1 << 20, 8 << 20)
+    cfgs = [NetConfig(distance_km=d) for d in dists]
+    h = max(100_000.0, 40 * max(c.one_way_delay_us for c in cfgs) + 20_000.0)
     best_speedup = 0.0
     for msg in msgs:
         wl = throughput_workload(msg_size=msg, concurrency=1, num_flows=4)
-        for d in dists:
-            cfg = NetConfig(distance_km=d)
-            h = max(100_000.0, 40 * cfg.one_way_delay_us + 20_000.0)
-            thr = {}
-            for s in SCHEMES:
-                t0 = time.time()
-                r = run_experiment(cfg, wl, s, h)
-                thr[s] = r["throughput_gbps"]
-                rows.append((f"fig3b/thr_gbps/{s}/d{int(d)}km/msg{msg >> 10}KB",
-                             (time.time() - t0) * 1e6,
+        res = {}
+        for s in SCHEMES:
+            t0 = time.time()
+            res[s] = run_experiment_batch(cfgs, wl, s, h)
+            us_per_cell = (time.time() - t0) * 1e6 / len(cfgs)
+            for r in res[s]:
+                rows.append((f"fig3b/thr_gbps/{s}/d{int(r['distance_km'])}km/"
+                             f"msg{msg >> 10}KB", us_per_cell,
                              f"{r['throughput_gbps']:.2f}Gbps"))
-            sp = thr["matchrdma"] / max(thr["dcqcn"], 1e-9)
+        for i, _ in enumerate(dists):
+            sp = (res["matchrdma"][i]["throughput_gbps"]
+                  / max(res["dcqcn"][i]["throughput_gbps"], 1e-9))
             best_speedup = max(best_speedup, sp)
     rows.append(("fig3b/max_speedup_vs_dcqcn", 0.0,
                  f"{best_speedup:.1f}x (paper: up to 20x)"))
@@ -53,14 +57,14 @@ def fig3cd_buffer_pause(full: bool = False):
     """Fig. 3(c): destination-OTN runtime buffer; Fig. 3(d): pause ratio."""
     rows = []
     dists = (100.0,) if not full else (10.0, 100.0, 500.0, 1000.0)
+    cfgs = [NetConfig(distance_km=d) for d in dists]
+    wl = congestion_workload()
     base = {}
-    for d in dists:
-        cfg = NetConfig(distance_km=d)
-        wl = congestion_workload()
-        for s in SCHEMES:
-            t0 = time.time()
-            r = run_experiment(cfg, wl, s, 100_000.0)
-            us = (time.time() - t0) * 1e6
+    for s in SCHEMES:
+        t0 = time.time()
+        batch = run_experiment_batch(cfgs, wl, s, 100_000.0)
+        us = (time.time() - t0) * 1e6 / len(cfgs)
+        for d, r in zip(dists, batch):
             rows.append((f"fig3c/peak_buffer_mb/{s}/d{int(d)}km", us,
                          f"{r['peak_buffer_mb']:.1f}MB p99={r['p99_buffer_mb']:.1f}"))
             rows.append((f"fig3d/pause_ratio/{s}/d{int(d)}km", us,

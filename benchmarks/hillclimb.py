@@ -8,31 +8,52 @@ measurement tool of the hypothesis → change → re-lower → re-analyse loop.
         --variant baseline|grouped_moe
     PYTHONPATH=src python -m benchmarks.hillclimb --cell nemotron-train-multi \
         --variant baseline|hier|hier_int8
-"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
+Netsim controller tuning rides the same harness: each hillclimb iteration
+evaluates a whole POPULATION of candidate NetConfigs in one batched
+``simulate_batch`` launch (the batched scenario engine as the inner loop):
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell netsim-tune \
+        --variant headroom|slot
+"""
 import argparse
 import dataclasses
 import json
+import os
 import time
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro.config import SHAPES, get_model_config, get_parallel_config
-from repro.config.base import TrainConfig
-from repro.launch.dryrun import HBM_BW, ICI_BW, OTN_BW, PEAK_FLOPS
-from repro.launch.hlo_analysis import collective_summary, op_breakdown
-from repro.launch.mesh import make_production_mesh
-from repro.launch.specs import (
-    decode_input_specs, params_and_opt_specs, train_input_specs,
-)
-from repro.models import build_model
-from repro.parallel.compression import compressed_psum
-from repro.parallel.sharding import named
-from repro.train.optimizer import adam_update, clip_by_global_norm
+def _setup_model_cell_env():
+    # model cells lower against the 512-chip production mesh on CPU; must be
+    # set before the jax backend initializes (importing repro.launch.dryrun
+    # also sets it — which is why the heavy imports below are deferred until
+    # a model cell is chosen). The netsim cell wants the REAL device count:
+    # forcing 512 host devices makes the fluid scan crawl.
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+    global jax, jnp, P, SHAPES, get_model_config, get_parallel_config
+    global TrainConfig, HBM_BW, ICI_BW, OTN_BW, PEAK_FLOPS
+    global collective_summary, op_breakdown, make_production_mesh
+    global decode_input_specs, params_and_opt_specs, train_input_specs
+    global build_model, compressed_psum, named
+    global adam_update, clip_by_global_norm
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.config import SHAPES, get_model_config, get_parallel_config
+    from repro.config.base import TrainConfig
+    from repro.launch.dryrun import HBM_BW, ICI_BW, OTN_BW, PEAK_FLOPS
+    from repro.launch.hlo_analysis import collective_summary, op_breakdown
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import (
+        decode_input_specs, params_and_opt_specs, train_input_specs,
+    )
+    from repro.models import build_model
+    from repro.parallel.compression import compressed_psum
+    from repro.parallel.sharding import named
+    from repro.train.optimizer import adam_update, clip_by_global_norm
 
 
 def analyse(lowered, multi_pod, model_flops, chips, label):
@@ -222,13 +243,81 @@ def _train_cell(arch, variant, grouped_moe=False, hier=None):
     return analyse(lowered, True, mf, 512, f"{arch} train_4k multi [{variant}]")
 
 
+def netsim_tune(variant: str, iters: int = 4):
+    """Coordinate-descent hillclimb of a MatchRDMA controller knob.
+
+    Each iteration evaluates the full candidate population x distance grid
+    with ONE `simulate_batch` launch per scheme-free candidate batch: the
+    per-scenario knob values live in the traced ``NetParams``-backed grid,
+    so the whole population shares one compiled scan. Objective: steady
+    inter-DC throughput minus a destination-buffer penalty (the paper's
+    throughput-vs-buffer tradeoff)."""
+    from repro.config.base import NetConfig
+    from repro.netsim import run_experiment_batch
+    from repro.netsim.workload import congestion_workload
+
+    knob = {"headroom": "budget_headroom", "slot": "slot_us",
+            "baseline": "budget_headroom"}[variant]
+    lo, hi = {"budget_headroom": (0.85, 1.0),
+              "slot_us": (50.0, 400.0)}[knob]
+    traced_knob = knob != "slot_us"   # slot_us fixes compiled structure
+    wl = congestion_workload()
+    dists = (100.0, 1000.0)
+    best = None
+    center = (lo + hi) / 2.0
+    span = (hi - lo) / 2.0
+    for it in range(iters):
+        # fixed population size: clipping near a knob bound may duplicate
+        # values, but deduping would change the batch shape and force a
+        # fresh compile — duplicates are cheaper than re-tracing the scan
+        candidates = sorted(max(lo, min(hi, center + f * span))
+                            for f in (-1.0, -0.5, 0.0, 0.5, 1.0))
+        t0 = time.time()
+        scores = {}
+        if traced_knob:
+            # the knob is a traced NetParams leaf: the ENTIRE population x
+            # distance grid is one vmapped launch, and every iteration of
+            # the hillclimb reuses the same compiled program.
+            cfgs = [NetConfig(distance_km=d, **{knob: val})
+                    for val in candidates for d in dists]
+            rows = run_experiment_batch(cfgs, wl, "matchrdma", 80_000.0)
+            for j, val in enumerate(candidates):
+                cell = rows[j * len(dists):(j + 1) * len(dists)]
+                thr = sum(r["throughput_gbps"] for r in cell) / len(cell)
+                buf = sum(r["p99_buffer_mb"] for r in cell) / len(cell)
+                scores[val] = thr - 0.5 * buf
+        else:
+            # structural knob (steps per slot): one batch per candidate,
+            # still vmapped over the distance grid.
+            for val in candidates:
+                cfgs = [NetConfig(distance_km=d, **{knob: val})
+                        for d in dists]
+                rows = run_experiment_batch(cfgs, wl, "matchrdma", 80_000.0)
+                thr = sum(r["throughput_gbps"] for r in rows) / len(rows)
+                buf = sum(r["p99_buffer_mb"] for r in rows) / len(rows)
+                scores[val] = thr - 0.5 * buf
+        val, score = max(scores.items(), key=lambda kv: kv[1])
+        dt = time.time() - t0
+        print(f"iter {it}: {knob}={val:.4g} score={score:.2f} "
+              f"({len(candidates)}x{len(dists)} cells in {dt:.1f}s)")
+        if best is None or score > best[1]:
+            best = (val, score)
+        center, span = val, span / 2.0
+    print(f"best {knob}={best[0]:.4g} score={best[1]:.2f}")
+    return best
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", required=True,
                     choices=["qwen-decode", "granite-train-multi",
-                             "nemotron-train-multi"])
+                             "nemotron-train-multi", "netsim-tune"])
     ap.add_argument("--variant", default="baseline")
     args = ap.parse_args()
+    if args.cell == "netsim-tune":
+        netsim_tune(args.variant)
+        return
+    _setup_model_cell_env()
     if args.cell == "qwen-decode":
         qwen_decode(args.variant)
     elif args.cell == "granite-train-multi":

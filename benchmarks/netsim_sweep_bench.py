@@ -1,0 +1,135 @@
+"""Micro-bench: batched (vmapped) vs sequential netsim scenario sweeps.
+
+The sequential baseline is what ``runner.sweep`` used to do — a Python loop
+of per-cell ``simulate`` calls, re-tracing/compiling for every distinct
+distance (each distance is a different delay-line shape, hence a different
+jit cache key). The batched path stacks the grid into one ``NetParams``
+pytree and runs it as a single ``jax.vmap``-ed ``lax.scan``: one compile
+per scheme, one device launch for the whole grid.
+
+Results are printed as CSV rows and appended to ``BENCH_netsim_sweep.json``
+at the repo root so speedups are tracked across PRs.
+
+    PYTHONPATH=src python -m benchmarks.netsim_sweep_bench [--full]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+
+from repro.config.base import NetConfig
+from repro.netsim.fluid import batch_padding, simulate, simulate_batch
+from repro.netsim.workload import throughput_workload
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_netsim_sweep.json")
+
+
+def _block(tree):
+    jax.tree.map(lambda x: x.block_until_ready(), tree)
+
+
+def _sequential_sweep(cfgs, wl, schemes, horizon_us):
+    for c in cfgs:
+        for s in schemes:
+            final, traces = simulate(c, wl, s, horizon_us)
+    _block(traces)
+    return final
+
+
+def _batched_sweep(cfgs, wl, schemes, horizon_us):
+    for s in schemes:
+        final, traces = simulate_batch(cfgs, wl, s, horizon_us)
+    _block(traces)
+    return final
+
+
+def run(full: bool = False):
+    # a realistic figure-grid: every distance is a fresh delay-line shape,
+    # i.e. a fresh compile for the sequential loop (one per cell); the
+    # batched engine compiles once per scheme for the whole grid.
+    dists = (1.0, 10.0, 50.0, 100.0, 300.0, 500.0, 1000.0)
+    if full:
+        dists = dists + (30.0, 700.0, 2000.0)
+    schemes = ("dcqcn", "pseudo_ack", "themis", "matchrdma")
+    horizon_us = 20_000.0
+    wl = throughput_workload(msg_size=1 << 20, concurrency=1, num_flows=4)
+    cfgs = [NetConfig(distance_km=d) for d in dists]
+    cells = len(cfgs) * len(schemes)
+
+    # cold: includes compilation — the sequential loop compiles once per
+    # (scheme, distance) cell, the batched engine once per scheme.
+    t0 = time.time()
+    _sequential_sweep(cfgs, wl, schemes, horizon_us)
+    seq_cold = time.time() - t0
+    t0 = time.time()
+    _batched_sweep(cfgs, wl, schemes, horizon_us)
+    batch_cold = time.time() - t0
+
+    # warm: steady-state relaunch of the already-compiled sweeps.
+    t0 = time.time()
+    _sequential_sweep(cfgs, wl, schemes, horizon_us)
+    seq_warm = time.time() - t0
+    t0 = time.time()
+    _batched_sweep(cfgs, wl, schemes, horizon_us)
+    batch_warm = time.time() - t0
+
+    record = {
+        "grid": {"distances_km": list(dists), "schemes": list(schemes),
+                 "horizon_us": horizon_us, "cells": cells},
+        "delay_pad_steps": batch_padding(cfgs)[0],
+        "sequential_cold_s": round(seq_cold, 3),
+        "batched_cold_s": round(batch_cold, 3),
+        "sequential_warm_s": round(seq_warm, 3),
+        "batched_warm_s": round(batch_warm, 3),
+        "speedup_cold": round(seq_cold / max(batch_cold, 1e-9), 2),
+        "speedup_warm": round(seq_warm / max(batch_warm, 1e-9), 2),
+        "backend": jax.default_backend(),
+    }
+    _append_record(record)
+
+    return [
+        (f"netsim_sweep/sequential_cold/{cells}cells", seq_cold * 1e6,
+         f"{seq_cold:.2f}s ({len(cfgs)}x{len(schemes)} compiles)"),
+        (f"netsim_sweep/batched_cold/{cells}cells", batch_cold * 1e6,
+         f"{batch_cold:.2f}s ({len(schemes)} compiles)"),
+        (f"netsim_sweep/sequential_warm/{cells}cells", seq_warm * 1e6,
+         f"{seq_warm:.2f}s"),
+        (f"netsim_sweep/batched_warm/{cells}cells", batch_warm * 1e6,
+         f"{batch_warm:.2f}s"),
+        ("netsim_sweep/speedup", 0.0,
+         f"cold {record['speedup_cold']}x warm {record['speedup_warm']}x"),
+    ]
+
+
+def _append_record(record: dict) -> None:
+    record = dict(record, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"))
+    history = []
+    if os.path.exists(BENCH_PATH):
+        try:
+            with open(BENCH_PATH) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append(record)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(history, f, indent=2)
+        f.write("\n")
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for n, us, derived in run(args.full):
+        print(f"{n},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,16 +11,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig3b,fig3cd,fig3e,sweeps,roofline,kernels")
+                    help="comma list: fig3b,fig3cd,fig3e,sweeps,netsim_sweep,"
+                         "roofline,kernels")
     args = ap.parse_args()
 
-    from benchmarks import figures, kernels_bench, roofline
+    from benchmarks import figures, kernels_bench, netsim_sweep_bench, roofline
 
     suites = {
         "fig3b": lambda: figures.fig3b_throughput(args.full),
         "fig3cd": lambda: figures.fig3cd_buffer_pause(args.full),
         "fig3e": lambda: figures.fig3e_fct(args.full),
         "sweeps": lambda: figures.sweeps(args.full),
+        "netsim_sweep": lambda: netsim_sweep_bench.run(args.full),
         "kernels": lambda: kernels_bench.run(args.full),
         "roofline": lambda: roofline.run(args.full),
     }

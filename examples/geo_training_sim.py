@@ -7,7 +7,12 @@ under conventional RDMA vs MatchRDMA and reports the training-step impact
 (exposed inter-DC time, buffer, pause) — with and without the framework's
 int8 pod-axis gradient compression.
 
-    PYTHONPATH=src python examples/geo_training_sim.py [--arch deepseek-67b]
+The netsim side uses the batched scenario engine: the WHOLE distance grid
+runs as one vmapped launch per scheme (one compile per scheme, not one per
+distance).
+
+    PYTHONPATH=src python examples/geo_training_sim.py \
+        [--arch deepseek-67b] [--distances-km 10,100,1000]
 """
 import argparse
 import os
@@ -17,20 +22,21 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.config import get_model_config, get_parallel_config
 from repro.config.base import NetConfig, TrainConfig
-from repro.netsim import run_experiment
+from repro.netsim import run_experiment_batch
 from repro.traffic import iteration_profile, step_traffic, training_workload
-import dataclasses
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-67b")
-    ap.add_argument("--distance-km", type=float, default=100.0)
+    ap.add_argument("--distances-km", default="100.0",
+                    help="comma-separated inter-DC distance grid")
     args = ap.parse_args()
 
+    distances = [float(d) for d in args.distances_km.split(",")]
     model = get_model_config(args.arch)
     train = TrainConfig(global_batch=256, seq_len=4096)
-    net = NetConfig(distance_km=args.distance_km)
+    nets = [NetConfig(distance_km=d) for d in distances]
 
     for compress in ("none", "int8"):
         par = get_parallel_config(args.arch, multi_pod=True,
@@ -47,13 +53,17 @@ def main():
 
         wl = training_workload(model, par, train, num_flows=16)
         for scheme in ("dcqcn", "matchrdma"):
-            r = run_experiment(net, wl, scheme, 120_000.0)
-            eff = r["throughput_gbps"] / (16 * 100)
-            t_comm = t.inter_pod_bytes / max(r["throughput_gbps"] * 1e9 / 8, 1)
-            print(f"  {scheme:10s}: OTN util {100 * eff:5.1f}%  "
-                  f"-> comm time {t_comm:7.2f} s  "
-                  f"buf {r['peak_buffer_mb']:7.1f} MB  "
-                  f"pause {r['pause_ratio']:.3f}")
+            # one vmapped launch covers every distance of the grid
+            rows = run_experiment_batch(nets, wl, scheme, 120_000.0)
+            for r in rows:
+                eff = r["throughput_gbps"] / (16 * 100)
+                t_comm = t.inter_pod_bytes / max(
+                    r["throughput_gbps"] * 1e9 / 8, 1)
+                print(f"  {scheme:10s} @{int(r['distance_km']):>5d}km: "
+                      f"OTN util {100 * eff:5.1f}%  "
+                      f"-> comm time {t_comm:7.2f} s  "
+                      f"buf {r['peak_buffer_mb']:7.1f} MB  "
+                      f"pause {r['pause_ratio']:.3f}")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,7 @@ import dataclasses
 import hashlib
 import json
 from dataclasses import dataclass, field
-from typing import Any, Mapping, Sequence
+from typing import Any, Mapping, NamedTuple, Sequence
 
 # ---------------------------------------------------------------------------
 # Model
@@ -227,6 +227,58 @@ class TrainConfig:
 # Network (the paper)
 # ---------------------------------------------------------------------------
 
+class NetParams(NamedTuple):
+    """Traced per-scenario network parameters (a jax pytree).
+
+    ``NetConfig`` stays the static, hashable side of the split: it keys jit
+    caches and fixes every compile-time *shape* (``dt_us``, slot layout,
+    delay-line padding). ``NetParams`` holds the scalars a scenario sweep
+    varies — distance/delay, capacities, buffer thresholds — as traced f32
+    leaves, so a whole distance x capacity x buffer grid can run as ONE
+    ``jax.vmap``-ed computation instead of one compile per cell.
+
+    Build one with ``NetParams.of(cfg)``; stack a grid with
+    ``stack_net_params([cfg0, cfg1, ...])`` (leaves gain a leading [B] axis).
+    """
+
+    one_way_delay_us: Any        # f32 — long-haul one-way propagation delay
+    otn_capacity_gbps: Any       # f32 — aggregate OTN line capacity
+    dst_dc_gbps: Any             # f32 — destination leaf capacity
+    nic_gbps: Any                # f32 — sender NIC line rate
+    pfc_xoff_kb: Any             # f32 — DC-leaf PFC pause threshold
+    pfc_xon_kb: Any              # f32 — DC-leaf PFC resume threshold
+    otn_buffer_bdp_frac: Any     # f32 — OTN PFC headroom as a BDP fraction
+    ecn_kmin_kb: Any             # f32 — ECN marking lower threshold
+    ecn_kmax_kb: Any             # f32 — ECN marking upper threshold
+    queue_thresh_kb: Any         # f32 — dst-OTN backlog threshold (slots)
+    budget_floor_mbps: Any       # f32 — budget floor
+    budget_headroom: Any         # f32 — inject <= headroom * estimated r_out
+
+    @classmethod
+    def of(cls, cfg: "NetConfig") -> "NetParams":
+        import jax.numpy as jnp
+        return cls(*(jnp.float32(v) for v in (
+            cfg.one_way_delay_us, cfg.otn_capacity_gbps, cfg.dst_dc_gbps,
+            cfg.nic_gbps, cfg.pfc_xoff_kb, cfg.pfc_xon_kb,
+            cfg.otn_buffer_bdp_frac, cfg.ecn_kmin_kb, cfg.ecn_kmax_kb,
+            cfg.queue_thresh_kb, cfg.budget_floor_mbps,
+            cfg.budget_headroom)))
+
+    def delay_steps(self, dt_us: float):
+        """Traced step count of the long-haul delay (>= 1)."""
+        import jax.numpy as jnp
+        return jnp.maximum(
+            jnp.round(self.one_way_delay_us / dt_us).astype(jnp.int32), 1)
+
+
+def stack_net_params(cfgs: Sequence["NetConfig"]) -> NetParams:
+    """Stack per-scenario params into one [B]-leading pytree for vmap."""
+    import jax
+    import jax.numpy as jnp
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[NetParams.of(c) for c in cfgs])
+
+
 @dataclass(frozen=True)
 class NetConfig:
     """MatchRDMA / netsim parameters. Defaults follow the paper's Fig. 3 setup."""
@@ -284,6 +336,10 @@ class NetConfig:
     @property
     def otn_capacity_gbps(self) -> float:
         return self.num_otn_links * self.link_gbps
+
+    def params(self) -> NetParams:
+        """The traced per-scenario side of the static/traced split."""
+        return NetParams.of(self)
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.config.base import NetConfig
+from repro.config.base import NetConfig, NetParams
 from repro.core.estimator import RateEstimate
 
 
@@ -31,19 +31,27 @@ def ctrl_window_slots(cfg: NetConfig) -> int:
     return max(int(math.ceil(2.0 * cfg.one_way_delay_us / cfg.slot_us)) + 1, 4)
 
 
-def init_budget(cfg: NetConfig) -> BudgetState:
+def ctrl_window_slots_traced(params: NetParams, cfg: NetConfig) -> jax.Array:
+    """τ in slots from TRACED delay — the batched-engine twin of
+    ``ctrl_window_slots`` (which must stay Python-int for shape sizing)."""
+    return jnp.maximum(
+        jnp.ceil(2.0 * params.one_way_delay_us / cfg.slot_us) + 1.0, 4.0)
+
+
+def init_budget(cfg: NetConfig, params: NetParams = None) -> BudgetState:
     """Proactive initial budget: a conservative fraction of the destination
     DC's drain capability (learned at flow setup), NOT the OTN line rate —
     the source must never out-run the destination on a stale assumption."""
-    start = cfg.dst_dc_gbps * 1e9 / 8.0 * 0.25
-    return BudgetState(budget=jnp.float32(start), tighten=jnp.float32(1.0),
+    dst = cfg.dst_dc_gbps if params is None else params.dst_dc_gbps
+    start = jnp.asarray(dst * 1e9 / 8.0 * 0.25, jnp.float32)
+    return BudgetState(budget=start, tighten=jnp.float32(1.0),
                        slots_clear=jnp.float32(0.0),
                        cap_ewma=jnp.float32(0.0), have_cap=jnp.float32(0.0))
 
 
 def update_budget(state: BudgetState, est: RateEstimate, cnp_in_slot: jax.Array,
                   cong_recent: jax.Array, cfg: NetConfig,
-                  ctrl_slots: int = 1) -> BudgetState:
+                  ctrl_slots=1, params: NetParams = None) -> BudgetState:
     """Per-slot budget update at the destination OTN.
 
     Two regimes (the rate-*matched* principle):
@@ -57,8 +65,10 @@ def update_budget(state: BudgetState, est: RateEstimate, cnp_in_slot: jax.Array,
     ``tighten`` decays multiplicatively on CNP-heavy slots (reactive path)
     and recovers slowly when clear.
     """
-    cap = cfg.otn_capacity_gbps * 1e9 / 8.0
-    floor = cfg.budget_floor_mbps * 1e6 / 8.0
+    if params is None:
+        params = NetParams.of(cfg)
+    cap = params.otn_capacity_gbps * 1e9 / 8.0
+    floor = params.budget_floor_mbps * 1e6 / 8.0
     congested = cnp_in_slot > cfg.cnp_freq_thresh
     tighten = jnp.where(congested,
                         jnp.maximum(state.tighten * 0.95, 0.7),
@@ -78,7 +88,7 @@ def update_budget(state: BudgetState, est: RateEstimate, cnp_in_slot: jax.Array,
     # match to demonstrated forwarding CAPABILITY, never to self-throttled
     # egress; fall back to the plain slot-weighted estimate early on.
     cap_rate = jnp.where(have_cap > 0, cap_ewma, est.rate)
-    matched = cfg.budget_headroom * cap_rate * tighten
+    matched = params.budget_headroom * cap_rate * tighten
 
     constrained = cong_recent > 0.02
     slots_clear = jnp.where(constrained, 0.0, state.slots_clear + 1.0)
@@ -92,7 +102,7 @@ def update_budget(state: BudgetState, est: RateEstimate, cnp_in_slot: jax.Array,
     # gentle probe once capability is known; ×2 slow-start before — but never
     # blind-probe above 1.1× the destination's own egress-port speed (known
     # at flow setup): that bound is physical.
-    declared = cfg.dst_dc_gbps * 1e9 / 8.0
+    declared = params.dst_dc_gbps * 1e9 / 8.0
     ceiling = jnp.minimum(
         1.1 * jnp.where(have_cap > 0, cap_ewma, declared), cap)
     factor = jnp.where(have_cap > 0, cfg.budget_probe, 2.0)
@@ -108,19 +118,33 @@ def update_budget(state: BudgetState, est: RateEstimate, cnp_in_slot: jax.Array,
 
 
 class ControlChannel(NamedTuple):
-    """Delay line carrying (budget, congestion summary) DST -> SRC."""
-    line_budget: jax.Array       # [Dline]
-    line_summary: jax.Array      # [Dline]
+    """Delay line carrying (budget, congestion summary) DST -> SRC.
+
+    The line length (``line_budget.shape[0]``) is the PADDED compile-time
+    size shared by every scenario in a batch; ``delay`` is the traced actual
+    delay in steps (<= padding) the ring index wraps at, so heterogeneous
+    distances share one compiled program.
+    """
+    line_budget: jax.Array       # [Dpad]
+    line_summary: jax.Array      # [Dpad]
     idx: jax.Array               # scalar int32
+    delay: jax.Array             # scalar int32 — actual delay (<= Dpad)
 
 
-def init_channel(delay_steps: int, cfg: NetConfig) -> ControlChannel:
-    start = cfg.dst_dc_gbps * 1e9 / 8.0 * 0.25
+def init_channel(delay_steps: int, cfg: NetConfig,
+                 params: NetParams = None, actual_delay=None) -> ControlChannel:
+    """``delay_steps`` sizes the (static) line; ``actual_delay`` (traced int,
+    defaults to ``delay_steps``) is the wrap point actually used."""
+    dst = cfg.dst_dc_gbps if params is None else params.dst_dc_gbps
+    start = dst * 1e9 / 8.0 * 0.25
     d = max(delay_steps, 1)
+    if actual_delay is None:
+        actual_delay = d
     return ControlChannel(
         line_budget=jnp.full((d,), start, jnp.float32),
         line_summary=jnp.zeros((d,), jnp.float32),
         idx=jnp.int32(0),
+        delay=jnp.clip(jnp.asarray(actual_delay, jnp.int32), 1, d),
     )
 
 
@@ -130,13 +154,12 @@ def channel_send_recv(chan: ControlChannel, budget: jax.Array,
 
     Returns (new_channel, budget_at_src, summary_at_src).
     """
-    d = chan.line_budget.shape[0]
     out_b = chan.line_budget[chan.idx]
     out_s = chan.line_summary[chan.idx]
-    new = ControlChannel(
+    new = chan._replace(
         line_budget=chan.line_budget.at[chan.idx].set(budget),
         line_summary=chan.line_summary.at[chan.idx].set(summary),
-        idx=jnp.mod(chan.idx + 1, d),
+        idx=jnp.mod(chan.idx + 1, chan.delay),
     )
     return new, out_b, out_s
 

@@ -20,10 +20,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.config.base import NetConfig
+from repro.config.base import NetConfig, NetParams
 from repro.core.budget import (
     BudgetState, ControlChannel, channel_send_recv, ctrl_window_slots,
-    init_budget, init_channel, update_budget,
+    ctrl_window_slots_traced, init_budget, init_channel, update_budget,
 )
 from repro.core.estimator import periodic_estimate, slot_weighted_estimate
 from repro.core.pseudo_ack import PseudoAckState, init_pseudo_ack
@@ -46,20 +46,37 @@ class MatchRdmaState(NamedTuple):
     acc_paused: jax.Array        # steps this slot with egress PFC-paused
 
 
+def default_history_slots(cfg: NetConfig) -> int:
+    """Slot-ring size covering at least two control windows of history
+    (τ-aware estimation), rounded up to whole estimator windows."""
+    spw = cfg.slots_per_window
+    want = max(64, 2 * ctrl_window_slots(cfg))
+    return ((want + spw - 1) // spw) * spw
+
+
 def init_matchrdma(cfg: NetConfig, num_flows: int,
-                   history_slots: int = 0) -> MatchRdmaState:
+                   history_slots: int = 0, params: NetParams = None,
+                   chan_delay_pad: int = 0) -> MatchRdmaState:
+    """``history_slots`` / ``chan_delay_pad`` are STATIC sizes; when batching
+    they must be padded to the largest scenario (the traced actual channel
+    delay comes from ``params``)."""
     if history_slots <= 0:
-        # cover at least two control windows of history (τ-aware estimation)
-        spw = cfg.slots_per_window
-        want = max(64, 2 * ctrl_window_slots(cfg))
-        history_slots = ((want + spw - 1) // spw) * spw
-    delay_steps = max(int(round(cfg.one_way_delay_us / cfg.dt_us)), 1)
-    delay_steps += int(cfg.control_proc_slots * cfg.slot_us / cfg.dt_us)
+        history_slots = default_history_slots(cfg)
+    proc_steps = int(cfg.control_proc_slots * cfg.slot_us / cfg.dt_us)
+    if chan_delay_pad <= 0:
+        chan_delay_pad = (max(int(round(cfg.one_way_delay_us / cfg.dt_us)), 1)
+                          + proc_steps)
+    if params is None:
+        actual_delay = chan_delay_pad
+    else:
+        actual_delay = params.delay_steps(cfg.dt_us) + proc_steps
+    budget0 = init_budget(cfg, params)
     st = MatchRdmaState(
         ring=init_ring(history_slots),
-        budget=init_budget(cfg),
-        chan=init_channel(delay_steps, cfg),
-        budget_at_src=init_budget(cfg).budget,
+        budget=budget0,
+        chan=init_channel(chan_delay_pad, cfg, params=params,
+                          actual_delay=actual_delay),
+        budget_at_src=budget0.budget,
         summary_at_src=jnp.float32(0.0),
         pseudo=init_pseudo_ack(num_flows),
         acc_egress=jnp.float32(0.0),
@@ -105,7 +122,8 @@ def step_channel(state: MatchRdmaState, summary: jax.Array = None) -> MatchRdmaS
 
 
 def slot_update(state: MatchRdmaState, cfg: NetConfig,
-                period_slots: int = 0) -> MatchRdmaState:
+                period_slots: int = 0,
+                params: NetParams = None) -> MatchRdmaState:
     """Run at each slot boundary: classify, estimate, regenerate budget."""
     slot_s = cfg.slot_us * 1e-6
     steps_per_slot = max(int(round(cfg.slot_us / cfg.dt_us)), 1)
@@ -120,10 +138,13 @@ def slot_update(state: MatchRdmaState, cfg: NetConfig,
         cnp_count=state.acc_cnp,
         local_queue=mean_queue,
     )
+    queue_thresh = (cfg.queue_thresh_kb if params is None
+                    else params.queue_thresh_kb) * 1024.0
     # capability is only measurable when backlogged AND mostly unpaused
-    busy = ((mean_queue > cfg.queue_thresh_kb * 1024.0)
+    busy = ((mean_queue > queue_thresh)
             & (paused_frac < 0.9)).astype(jnp.float32)
-    ring = push_slot(state.ring, obs, cfg, busy=busy)
+    ring = push_slot(state.ring, obs, cfg, busy=busy,
+                     queue_thresh_bytes=queue_thresh)
     if period_slots > 0:
         est = periodic_estimate(ring, cfg, period_slots)
     else:
@@ -131,16 +152,21 @@ def slot_update(state: MatchRdmaState, cfg: NetConfig,
     # fraction of the last control window flagged congested
     # (drives match vs open-up)
     from repro.core.slots import ordered_history
-    ctrl_slots = ctrl_window_slots(cfg)
+    if params is None:
+        ctrl_slots = ctrl_window_slots(cfg)
+    else:
+        ctrl_slots = ctrl_window_slots_traced(params, cfg)
     _, congested_hist, _, valid = ordered_history(ring)
-    n_recent = min(max(ctrl_slots, 4 * cfg.slots_per_window),
-                   congested_hist.shape[0])
-    recent = congested_hist[-n_recent:]
-    recent_valid = valid[-n_recent:]
-    cong_recent = (jnp.sum(recent * recent_valid)
+    r = congested_hist.shape[0]
+    # shape-static "last n_recent slots" mask (n_recent may be traced)
+    n_recent = jnp.clip(jnp.maximum(ctrl_slots, 4 * cfg.slots_per_window),
+                        1, r)
+    recent_mask = (jnp.arange(r) >= r - n_recent).astype(jnp.float32)
+    recent_valid = valid * recent_mask
+    cong_recent = (jnp.sum(congested_hist * recent_valid)
                    / jnp.maximum(jnp.sum(recent_valid), 1.0))
     budget = update_budget(state.budget, est, state.acc_cnp, cong_recent, cfg,
-                           ctrl_slots=ctrl_slots)
+                           ctrl_slots=ctrl_slots, params=params)
     return state._replace(
         ring=ring, budget=budget,
         acc_egress=jnp.float32(0.0), acc_cnp=jnp.float32(0.0),
@@ -150,10 +176,11 @@ def slot_update(state: MatchRdmaState, cfg: NetConfig,
 
 
 def maybe_slot_update(state: MatchRdmaState, cfg: NetConfig, step_idx: jax.Array,
-                      period_slots: int = 0) -> MatchRdmaState:
+                      period_slots: int = 0,
+                      params: NetParams = None) -> MatchRdmaState:
     """Branchless slot update: applied when step_idx hits a slot boundary."""
     steps_per_slot = max(int(round(cfg.slot_us / cfg.dt_us)), 1)
     at_boundary = jnp.mod(step_idx + 1, steps_per_slot) == 0
-    updated = slot_update(state, cfg, period_slots)
+    updated = slot_update(state, cfg, period_slots, params=params)
     return jax.tree.map(
         lambda a, b: jnp.where(at_boundary, a, b), updated, state)

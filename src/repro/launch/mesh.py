@@ -3,18 +3,32 @@
 A FUNCTION (not a module-level constant) so importing never touches jax
 device state. Pod = AI-DC: the "pod" axis is the long-haul OTN boundary that
 MatchRDMA manages; "data" x "model" is the intra-DC 2D layout.
+
+``jax.sharding.AxisType`` only exists on newer JAX (>= 0.5); on older
+installs meshes are built without explicit axis types (every axis was
+implicitly Auto there, so behavior is unchanged).
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # JAX >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed JAX
+    AxisType = None
+
+
+def _axis_type_kwargs(num_axes: int) -> dict:
+    """axis_types kwargs when the installed JAX supports them."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * num_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_mesh_for(par, devices=None):
@@ -25,6 +39,5 @@ def make_mesh_for(par, devices=None):
     if devices is not None:
         from jax.sharding import Mesh
         arr = np.asarray(devices).reshape(shape)
-        return Mesh(arr, axes,
-                    axis_types=(AxisType.Auto,) * len(axes))
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+        return Mesh(arr, axes, **_axis_type_kwargs(len(axes)))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))

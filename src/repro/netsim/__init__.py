@@ -1,13 +1,18 @@
 """Fluid-flow network simulator of the dual AI-DC leaf-spine-OTN topology."""
-from repro.netsim.fluid import SCHEMES, SimState, simulate
-from repro.netsim.runner import run_experiment, sweep
+from repro.netsim.fluid import (
+    SCHEMES, SimState, batch_padding, simulate, simulate_batch,
+)
+from repro.netsim.runner import (
+    run_experiment, run_experiment_batch, sweep, sweep_grid,
+)
 from repro.netsim.workload import (
     BIG, FlowSpec, Workload, aicb_workload, congestion_workload,
     mixed_fct_workload, throughput_workload,
 )
 
 __all__ = [
-    "SCHEMES", "SimState", "simulate", "run_experiment", "sweep",
+    "SCHEMES", "SimState", "batch_padding", "simulate", "simulate_batch",
+    "run_experiment", "run_experiment_batch", "sweep", "sweep_grid",
     "BIG", "FlowSpec", "Workload", "aicb_workload", "congestion_workload",
     "mixed_fct_workload", "throughput_workload",
 ]

@@ -22,24 +22,36 @@ Schemes (static compile-time switch):
   pseudo_ack — NTT GLOBECOM'24: source-OTN pseudo-ACK, ungated; CC still e2e.
   themis     — e2e with RTT-fairness-corrected DCQCN (ICNP'25-like).
   matchrdma  — the paper: segmented control + rate matching.
+
+Static vs traced config split (the batched scenario engine):
+  ``NetConfig`` stays the hashable compile-time side — it fixes ``dt_us``,
+  slot layout, DCQCN constants and every array SIZE. The per-scenario
+  scalars a sweep varies (distance/delay, OTN capacity, leaf capacity,
+  buffer/ECN thresholds — ``NetParams``) enter the step function as traced
+  leaves. Delay lines are allocated at a static padded length
+  (``delay_pad`` = the largest scenario in the batch) while the ring index
+  wraps at the traced actual ``delay_steps``, so heterogeneous distances
+  share ONE compiled ``lax.scan`` and ``simulate_batch`` can ``jax.vmap``
+  the whole scenario grid in a single device launch.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config.base import NetConfig
+from repro.config.base import NetConfig, NetParams, stack_net_params
 from repro.core.budget import fair_share
 from repro.core.cc_proxy import (
     DcqcnState, init_dcqcn, step_dcqcn, themis_rtt_scale,
 )
 from repro.core.matchrdma import (
-    MatchRdmaState, accumulate_step, init_matchrdma, maybe_slot_update,
-    step_channel,
+    MatchRdmaState, accumulate_step, default_history_slots, init_matchrdma,
+    maybe_slot_update, step_channel,
 )
 from repro.core.pseudo_ack import step_pseudo_ack
 from repro.netsim.queues import drain_proportional, ecn_mark_prob, pfc_hysteresis
@@ -64,22 +76,35 @@ class SimState(NamedTuple):
     q_dst: jax.Array         # [F] destination-OTN queue bytes
     q_leaf: jax.Array        # [F] destination-leaf queue bytes
     pipe: jax.Array          # [Dp, F] in-flight long-haul bytes
-    ack_line: jax.Array      # [Dr, F] ACK return path
-    cnp_line: jax.Array      # [Dr, F] CNP return path
-    pause_line: jax.Array    # [Dr] PFC signal dst-OTN -> src-OTN
+    inflight: jax.Array      # [F] running sum of pipe (incremental: O(F)/step)
+    ack_line: jax.Array      # [Dp, F] ACK return path
+    cnp_line: jax.Array      # [Dp, F] CNP return path
+    pause_line: jax.Array    # [Dp] PFC signal dst-OTN -> src-OTN
     pause_dst: jax.Array     # scalar: dst OTN asserting long-haul pause
     mr: MatchRdmaState
 
 
 def _delay_steps(cfg: NetConfig) -> int:
+    """STATIC delay-step count — sizes the delay-line padding."""
     return max(int(round(cfg.one_way_delay_us / cfg.dt_us)), 1)
 
 
-def init_state(cfg: NetConfig, wl_arrays: dict, num_flows: int) -> SimState:
+def _proc_steps(cfg: NetConfig) -> int:
+    return int(cfg.control_proc_slots * cfg.slot_us / cfg.dt_us)
+
+
+def init_state(cfg: NetConfig, wl_arrays: dict, num_flows: int,
+               params: NetParams = None, delay_pad: int = 0,
+               history_slots: int = 0) -> SimState:
+    """``delay_pad``/``history_slots`` are static ring sizes (0 = size for
+    ``cfg`` itself); ``params`` carries the traced per-scenario scalars."""
     f = num_flows
-    d = _delay_steps(cfg)
+    if delay_pad <= 0:
+        delay_pad = _delay_steps(cfg)
+    if params is None:
+        params = NetParams.of(cfg)
     z = jnp.zeros((f,), jnp.float32)
-    nic = cfg.nic_gbps * 1e9 / 8.0
+    nic = params.nic_gbps * 1e9 / 8.0
     return SimState(
         sent=z, acked=z, delivered=z,
         done_at_us=jnp.full((f,), INF),
@@ -89,29 +114,39 @@ def init_state(cfg: NetConfig, wl_arrays: dict, num_flows: int) -> SimState:
         proxy_timer=jnp.full((f,), 1e9, jnp.float32),
         proxy_mod=jnp.ones((f,), jnp.float32),
         q_src=z, q_dst=z, q_leaf=z,
-        pipe=jnp.zeros((d, f), jnp.float32),
-        ack_line=jnp.zeros((d, f), jnp.float32),
-        cnp_line=jnp.zeros((d, f), jnp.float32),
-        pause_line=jnp.zeros((d,), jnp.float32),
+        pipe=jnp.zeros((delay_pad, f), jnp.float32),
+        inflight=z,
+        ack_line=jnp.zeros((delay_pad, f), jnp.float32),
+        cnp_line=jnp.zeros((delay_pad, f), jnp.float32),
+        pause_line=jnp.zeros((delay_pad,), jnp.float32),
         pause_dst=jnp.float32(0.0),
-        mr=init_matchrdma(cfg, f),
+        mr=init_matchrdma(cfg, f, history_slots=history_slots, params=params,
+                          chan_delay_pad=delay_pad + _proc_steps(cfg)),
     )
 
 
-def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0):
-    """Build the per-step transition. ``wl``: stacked workload arrays."""
+def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0,
+                 params: NetParams = None, delay_pad: int = 0):
+    """Build the per-step transition. ``wl``: stacked workload arrays.
+
+    All per-scenario scalars are read from ``params`` (traced), so the same
+    compiled step serves every cell of a vmapped scenario batch; ``cfg``
+    only contributes static structure (dt, slot layout, DCQCN constants).
+    """
     assert scheme in SCHEMES
+    if params is None:
+        params = NetParams.of(cfg)
     dt_us = cfg.dt_us
     dt_s = dt_us * 1e-6
-    d_steps = _delay_steps(cfg)
-    nic = cfg.nic_gbps * 1e9 / 8.0
-    c_otn = cfg.otn_capacity_gbps * 1e9 / 8.0
-    c_leaf = cfg.dst_dc_gbps * 1e9 / 8.0
-    xoff = cfg.pfc_xoff_kb * 1024.0
-    xon = cfg.pfc_xon_kb * 1024.0
+    d_steps = params.delay_steps(dt_us)            # traced actual delay
+    nic = params.nic_gbps * 1e9 / 8.0
+    c_otn = params.otn_capacity_gbps * 1e9 / 8.0
+    c_leaf = params.dst_dc_gbps * 1e9 / 8.0
+    xoff = params.pfc_xoff_kb * 1024.0
+    xon = params.pfc_xon_kb * 1024.0
     # OTN nodes are provisioned with BDP-scaled buffers (long-haul headroom)
-    bdp = c_otn * 2.0 * cfg.one_way_delay_us * 1e-6
-    xoff_otn = max(xoff, cfg.otn_buffer_bdp_frac * bdp)
+    bdp = c_otn * 2.0 * params.one_way_delay_us * 1e-6
+    xoff_otn = jnp.maximum(xoff, params.otn_buffer_bdp_frac * bdp)
     xon_otn = xoff_otn / 2.0
 
     is_inter = jnp.asarray(wl["is_inter"])
@@ -187,6 +222,7 @@ def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0):
             q_src, drained_src = drain_proportional(state.q_src, arrivals_src,
                                                     cap_src)
         pipe = state.pipe.at[ridx].set(drained_src)    # arrives at t + D
+        inflight = state.inflight + drained_src - pipe_out
 
         # ------------------------------------------------ 6. destination OTN
         leaf_pfc = (jnp.sum(state.q_leaf) > xoff).astype(jnp.float32)
@@ -199,7 +235,7 @@ def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0):
 
         # ------------------------------------------------ 7. destination leaf
         arrivals_leaf = drained_dst + send * is_intra
-        mark_p = ecn_mark_prob(jnp.sum(state.q_leaf), cfg)
+        mark_p = ecn_mark_prob(jnp.sum(state.q_leaf), cfg, params=params)
         q_leaf, drained_leaf = drain_proportional(state.q_leaf, arrivals_leaf,
                                                   c_leaf * dt_s)
         delivered = state.delivered + drained_leaf
@@ -253,7 +289,7 @@ def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0):
                 jnp.sum(cnp_out * is_inter),
                 leaf_delay_us, jnp.float32(1.0), q_dst_tot,
                 egress_paused=leaf_pfc)
-            mr = maybe_slot_update(mr, cfg, t, period_slots)
+            mr = maybe_slot_update(mr, cfg, t, period_slots, params=params)
             overrun = (q_dst_tot > 0.5 * xoff_otn)
             mr = step_channel(mr, overrun.astype(jnp.float32))
 
@@ -266,9 +302,14 @@ def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0):
             cc=cc, cnp_timer=cnp_timer, marked_acc=marked_acc,
             proxy_timer=proxy_timer, proxy_mod=proxy_mod,
             q_src=q_src, q_dst=q_dst, q_leaf=q_leaf,
-            pipe=pipe, ack_line=ack_line, cnp_line=cnp_line,
+            pipe=pipe, inflight=inflight,
+            ack_line=ack_line, cnp_line=cnp_line,
             pause_line=pause_line, pause_dst=pause_dst, mr=mr,
         )
+        # per-flow byte conservation residual: everything the sender emitted
+        # is either delivered or sitting in exactly one queue / the pipe
+        residual = sent - delivered - q_src - q_dst - q_leaf - inflight
+        cons_err = jnp.max(jnp.abs(residual) / jnp.maximum(sent, 1.0))
         out = {
             "q_src": jnp.sum(q_src),
             "q_dst": q_dst_tot,
@@ -279,6 +320,7 @@ def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0):
             "thr_intra": jnp.sum(drained_leaf * is_intra) / dt_s,
             "budget": state.mr.budget.budget,
             "budget_at_src": state.mr.budget_at_src,
+            "cons_err": cons_err,
         }
         return new_state, out
 
@@ -286,19 +328,116 @@ def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0):
 
 
 def simulate(cfg: NetConfig, workload: Workload, scheme: str,
-             horizon_us: Optional[float] = None, period_slots: int = 0):
-    """Run one simulation; returns (final_state, traces dict of [T] arrays)."""
+             horizon_us: Optional[float] = None, period_slots: int = 0,
+             delay_pad: int = 0, history_slots: int = 0):
+    """Run one simulation; returns (final_state, traces dict of [T] arrays).
+
+    ``delay_pad``/``history_slots`` override the static ring sizes (0 = size
+    for ``cfg``) — pass the batch padding to reproduce a ``simulate_batch``
+    cell bit-for-bit.
+    """
     horizon = horizon_us if horizon_us is not None else cfg.horizon_us
     steps = int(round(horizon / cfg.dt_us))
     wl_arrays = {k: jnp.asarray(v) for k, v in workload.arrays().items()}
-    return _run_traced(cfg, wl_arrays, scheme, steps, period_slots)
+    return _run_traced(cfg, wl_arrays, scheme, steps, period_slots,
+                       delay_pad, history_slots)
 
 
-@partial(jax.jit, static_argnames=("scheme", "steps", "period_slots", "cfg"))
-def _run_traced(cfg, wl_arrays, scheme, steps, period_slots):
+@partial(jax.jit, static_argnames=("scheme", "steps", "period_slots", "cfg",
+                                   "delay_pad", "history_slots"))
+def _run_traced(cfg, wl_arrays, scheme, steps, period_slots,
+                delay_pad=0, history_slots=0):
     f = wl_arrays["is_inter"].shape[0]
-    state0 = init_state(cfg, wl_arrays, f)
-    step = make_step_fn(cfg, wl_arrays, scheme, period_slots)
+    state0 = init_state(cfg, wl_arrays, f, delay_pad=delay_pad,
+                        history_slots=history_slots)
+    step = make_step_fn(cfg, wl_arrays, scheme, period_slots,
+                        delay_pad=delay_pad)
     final, traces = jax.lax.scan(step, state0,
                                  jnp.arange(steps, dtype=jnp.int32))
     return final, traces
+
+
+# ---------------------------------------------------------------------------
+# Batched scenario engine
+# ---------------------------------------------------------------------------
+
+# NetConfig fields whose values reach the batched step ONLY through the
+# traced NetParams leaves — free to vary per scenario. Every OTHER field is
+# compile-time structure (dt/slot layout, DCQCN constants, ECN pmax, ...)
+# and must be identical across a batch; the template resets the traced ones
+# to the class defaults so two grids of equal shape share one compiled
+# program.
+_TRACED_FIELDS = ("distance_km", "num_otn_links", "link_gbps", "dst_dc_gbps",
+                  "nic_gbps", "pfc_xoff_kb", "pfc_xon_kb",
+                  "otn_buffer_bdp_frac", "ecn_kmin_kb", "ecn_kmax_kb",
+                  "queue_thresh_kb", "budget_floor_mbps", "budget_headroom")
+
+
+def _batch_template(cfgs: Sequence[NetConfig]) -> NetConfig:
+    """The static template keying the batch's jit cache entry: the shared
+    non-traced fields, with every NetParams-covered field reset to its
+    class default (after the reset all batch members yield the same
+    template, so any member serves). A non-traced field varying across the
+    batch is an error: it would otherwise be silently overwritten by the
+    template's value for every cell."""
+    for field in dataclasses.fields(NetConfig):
+        if field.name in _TRACED_FIELDS:
+            continue
+        vals = {getattr(c, field.name) for c in cfgs}
+        if len(vals) > 1:
+            raise ValueError(
+                f"simulate_batch: NetConfig.{field.name} must be identical "
+                f"across the batch (got {sorted(vals)}) — it is compile-time "
+                f"structure, not a traced NetParams leaf")
+    defaults = {f.name: f.default for f in dataclasses.fields(NetConfig)}
+    return dataclasses.replace(
+        cfgs[0], **{f: defaults[f] for f in _TRACED_FIELDS})
+
+
+def batch_padding(cfgs: Sequence[NetConfig]):
+    """(delay_pad, history_slots) covering every scenario in the grid —
+    the static ring sizes shared by all cells of a batch."""
+    far = max(cfgs, key=lambda c: c.one_way_delay_us)
+    delay_pad = max(_delay_steps(c) for c in cfgs)
+    return delay_pad, default_history_slots(far)
+
+
+def simulate_batch(cfgs: Sequence[NetConfig], workload: Workload, scheme: str,
+                   horizon_us: Optional[float] = None, period_slots: int = 0):
+    """Run a whole scenario grid as ONE vmapped computation.
+
+    ``cfgs``: the per-scenario configs (distance / capacity / buffer grids);
+    every structural field (dt, slot layout) must match — the per-scenario
+    scalars are extracted into a stacked ``NetParams`` pytree and traced.
+    One compile per (scheme, grid-shape); every cell runs in a single
+    device launch. Returns (final_states, traces) with a leading [B] axis
+    on every leaf.
+    """
+    cfgs = list(cfgs)
+    if not cfgs:
+        raise ValueError("simulate_batch: empty config batch")
+    tmpl = _batch_template(cfgs)
+    horizon = horizon_us if horizon_us is not None else max(
+        c.horizon_us for c in cfgs)
+    steps = int(round(horizon / tmpl.dt_us))
+    delay_pad, history_slots = batch_padding(cfgs)
+    params = stack_net_params(cfgs)
+    wl_arrays = {k: jnp.asarray(v) for k, v in workload.arrays().items()}
+    return _run_traced_batch(tmpl, params, wl_arrays, scheme, steps,
+                             period_slots, delay_pad, history_slots)
+
+
+@partial(jax.jit, static_argnames=("cfg", "scheme", "steps", "period_slots",
+                                   "delay_pad", "history_slots"))
+def _run_traced_batch(cfg, params, wl_arrays, scheme, steps, period_slots,
+                      delay_pad, history_slots):
+    f = wl_arrays["is_inter"].shape[0]
+
+    def one_scenario(p):
+        state0 = init_state(cfg, wl_arrays, f, params=p, delay_pad=delay_pad,
+                            history_slots=history_slots)
+        step = make_step_fn(cfg, wl_arrays, scheme, period_slots,
+                            params=p, delay_pad=delay_pad)
+        return jax.lax.scan(step, state0, jnp.arange(steps, dtype=jnp.int32))
+
+    return jax.vmap(one_scenario)(params)

@@ -9,10 +9,13 @@ import jax.numpy as jnp
 from repro.config.base import NetConfig
 
 
-def ecn_mark_prob(q_bytes: jax.Array, cfg: NetConfig) -> jax.Array:
-    """DCQCN RED-like marking probability from queue occupancy."""
-    kmin = cfg.ecn_kmin_kb * 1024.0
-    kmax = cfg.ecn_kmax_kb * 1024.0
+def ecn_mark_prob(q_bytes: jax.Array, cfg: NetConfig,
+                  params=None) -> jax.Array:
+    """DCQCN RED-like marking probability from queue occupancy. ``params``
+    (a ``NetParams``) supplies traced per-scenario thresholds when batching."""
+    src = cfg if params is None else params
+    kmin = src.ecn_kmin_kb * 1024.0
+    kmax = src.ecn_kmax_kb * 1024.0
     frac = jnp.clip((q_bytes - kmin) / jnp.maximum(kmax - kmin, 1.0), 0.0, 1.0)
     return frac * cfg.ecn_pmax + (q_bytes > kmax).astype(jnp.float32) * (1.0 - cfg.ecn_pmax)
 

@@ -1,41 +1,47 @@
-"""Experiment runner: simulate + extract the paper's Fig. 3 metrics."""
+"""Experiment runner: simulate + extract the paper's Fig. 3 metrics.
+
+Two execution paths share one metric extractor:
+  * ``run_experiment``       — one (config, workload, scheme) cell;
+  * ``run_experiment_batch`` — a whole config grid in ONE vmapped device
+    launch (``fluid.simulate_batch``): one compile per scheme instead of one
+    per (scheme, distance), and the accelerator never idles between cells.
+
+``sweep`` is built on the batched path: the full distance grid of a scheme
+runs as a single computation.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import NetConfig
-from repro.netsim.fluid import simulate
+from repro.netsim.fluid import simulate, simulate_batch
 from repro.netsim.workload import BIG, Workload
 
 WARMUP_FRAC = 0.1   # discard the initial transient for steady-state metrics
 
 
-def run_experiment(cfg: NetConfig, workload: Workload, scheme: str,
-                   horizon_us: Optional[float] = None,
-                   period_slots: int = 0) -> Dict[str, float]:
-    """Returns the Fig. 3 metric set for one (config, workload, scheme)."""
-    final, traces = simulate(cfg, workload, scheme, horizon_us, period_slots)
-    traces = {k: np.asarray(v) for k, v in traces.items()}
-    horizon = (horizon_us if horizon_us is not None else cfg.horizon_us)
-    steps = traces["q_dst"].shape[0]
+def _metrics_row(cfg: NetConfig, wl: dict, scheme: str,
+                 final_np: dict, traces_np: dict) -> Dict[str, float]:
+    """Fig. 3 metric set from one cell's numpy traces/final state.
+    ``wl``: the stacked workload arrays (``Workload.arrays()``)."""
+    steps = traces_np["q_dst"].shape[0]
     warm = int(steps * WARMUP_FRAC)
 
-    wl = workload.arrays()
     is_inter = wl["is_inter"] > 0
-    delivered = np.asarray(final.delivered)
-    done_at = np.asarray(final.done_at_us)
+    delivered = final_np["delivered"]
+    done_at = final_np["done_at_us"]
     start = wl["start_us"]
 
     # throughput: steady-state inter-DC goodput (bytes/s and Gbps)
-    thr = float(traces["thr_inter"][warm:].mean())
+    thr = float(traces_np["thr_inter"][warm:].mean())
     # destination-OTN runtime buffer occupancy
-    q_dst = traces["q_dst"]
+    q_dst = traces_np["q_dst"]
     # pause-time ratio: fraction of time the long-haul PFC pause is asserted
-    pause_ratio = float(traces["pause_dst"][warm:].mean())
+    pause_ratio = float(traces_np["pause_dst"][warm:].mean())
     # FCT of finite inter-DC flows
     finite = is_inter & (wl["total_bytes"] < BIG / 2)
     if finite.any():
@@ -57,20 +63,72 @@ def run_experiment(cfg: NetConfig, workload: Workload, scheme: str,
         "pause_ratio": pause_ratio,
         "avg_fct_us": avg_fct,
         "completion_frac": completion,
-        "intra_thr_gbps": float(traces["thr_intra"][warm:].mean()) * 8.0 / 1e9,
+        "intra_thr_gbps": float(traces_np["thr_intra"][warm:].mean()) * 8.0 / 1e9,
     }
+
+
+def run_experiment(cfg: NetConfig, workload: Workload, scheme: str,
+                   horizon_us: Optional[float] = None,
+                   period_slots: int = 0, delay_pad: int = 0,
+                   history_slots: int = 0) -> Dict[str, float]:
+    """Returns the Fig. 3 metric set for one (config, workload, scheme).
+
+    ``delay_pad``/``history_slots``: see ``fluid.simulate`` — pass a batch's
+    padding to reproduce one of its cells exactly."""
+    final, traces = simulate(cfg, workload, scheme, horizon_us, period_slots,
+                             delay_pad=delay_pad, history_slots=history_slots)
+    traces_np = {k: np.asarray(v) for k, v in traces.items()}
+    final_np = {"delivered": np.asarray(final.delivered),
+                "done_at_us": np.asarray(final.done_at_us)}
+    return _metrics_row(cfg, workload.arrays(), scheme, final_np, traces_np)
+
+
+def run_experiment_batch(cfgs: Sequence[NetConfig], workload: Workload,
+                         scheme: str, horizon_us: Optional[float] = None,
+                         period_slots: int = 0) -> List[Dict[str, float]]:
+    """Fig. 3 metrics for every config of a grid, from ONE device launch."""
+    cfgs = list(cfgs)
+    final, traces = simulate_batch(cfgs, workload, scheme, horizon_us,
+                                   period_slots)
+    traces_np = {k: np.asarray(v) for k, v in traces.items()}      # [B, T]
+    delivered = np.asarray(final.delivered)                        # [B, F]
+    done_at = np.asarray(final.done_at_us)
+    wl = workload.arrays()
+    rows = []
+    for i, cfg in enumerate(cfgs):
+        cell_traces = {k: v[i] for k, v in traces_np.items()}
+        cell_final = {"delivered": delivered[i], "done_at_us": done_at[i]}
+        rows.append(_metrics_row(cfg, wl, scheme, cell_final, cell_traces))
+    return rows
 
 
 def sweep(cfg: NetConfig, workload: Workload, schemes, distances_km,
           horizon_us: Optional[float] = None, period_slots: int = 0):
-    """Cartesian sweep; returns list of metric dicts."""
-    rows = []
-    for d in distances_km:
-        c = dataclasses.replace(cfg, distance_km=float(d))
-        h = horizon_us
-        if h is None:
-            # at least 20 RTTs + fixed floor so CC converges at any distance
-            h = max(cfg.horizon_us, 40.0 * c.one_way_delay_us + 20_000.0)
-        for s in schemes:
-            rows.append(run_experiment(c, workload, s, h, period_slots))
-    return rows
+    """Cartesian (distance x scheme) sweep; returns list of metric dicts in
+    the order ``for d in distances: for s in schemes``.
+
+    Batched execution: each scheme's whole distance grid is one vmapped
+    launch (one compile per scheme). All cells share one horizon — the
+    longest any distance needs for CC convergence — so short-distance cells
+    simply observe a longer steady state.
+    """
+    cfgs = [dataclasses.replace(cfg, distance_km=float(d))
+            for d in distances_km]
+    h = horizon_us
+    if h is None:
+        # at least 20 RTTs + fixed floor so CC converges at any distance
+        h = max(cfg.horizon_us,
+                40.0 * max(c.one_way_delay_us for c in cfgs) + 20_000.0)
+    return sweep_grid(cfgs, workload, schemes, h, period_slots)
+
+
+def sweep_grid(cfgs: Sequence[NetConfig], workload: Workload, schemes,
+               horizon_us: Optional[float] = None, period_slots: int = 0):
+    """Arbitrary per-scenario config grids (mixed OTN capacities, asymmetric
+    buffers, ...) x schemes — one vmapped launch per scheme. Returns rows in
+    the order ``for cfg in cfgs: for s in schemes``."""
+    cfgs = list(cfgs)
+    by_scheme = {s: run_experiment_batch(cfgs, workload, s, horizon_us,
+                                         period_slots)
+                 for s in schemes}
+    return [by_scheme[s][i] for i in range(len(cfgs)) for s in schemes]

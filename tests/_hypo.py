@@ -1,0 +1,72 @@
+"""Property-test compatibility layer: real hypothesis when installed, a
+deterministic mini fallback otherwise.
+
+The tier-1 suite must collect and run on a bare container that cannot
+``pip install`` (see requirements-dev.txt for the full-fidelity dev env).
+When ``hypothesis`` is importable we re-export it untouched; otherwise a
+tiny deterministic generator provides the same ``@settings/@given/st.*``
+surface the suite uses (integers, sampled_from, floats, booleans). The
+fallback draws from seeded ``random.Random`` streams so failures are
+reproducible, and runs ``max_examples`` examples per test just like the
+real thing (no shrinking, no database).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+    from types import SimpleNamespace
+
+    _DEFAULT_MAX_EXAMPLES = 10
+    _SEED = 0xC0FFEE
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+    st = SimpleNamespace(integers=_integers, sampled_from=_sampled_from,
+                         floats=_floats, booleans=_booleans)
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._mini_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies, **kw_strategies):
+        def deco(fn):
+            def wrapper():
+                n = (getattr(wrapper, "_mini_max_examples", None)
+                     or getattr(fn, "_mini_max_examples", None)
+                     or _DEFAULT_MAX_EXAMPLES)
+                for i in range(n):
+                    rng = random.Random(_SEED + i)
+                    args = [s.draw(rng) for s in strategies]
+                    kwargs = {k: s.draw(rng)
+                              for k, s in kw_strategies.items()}
+                    fn(*args, **kwargs)
+
+            # no functools.wraps: pytest must see a ZERO-arg function, not
+            # fn's strategy parameters (it would demand fixtures for them)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

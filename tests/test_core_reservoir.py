@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core.reservoir import (
     buffer_bound_e2e_vs_segmented, queue_trajectory, rate_mismatch_integral,
