@@ -1,15 +1,17 @@
 # Tier-1 CI entry points.
 #
-#   make deps          - install dev/test dependencies (best-effort: the
-#                        suite also runs without them via tests/_hypo.py)
-#   make test          - the tier-1 suite (ROADMAP.md "Tier-1 verify")
-#   make ci            - deps + test
-#   make bench-netsim  - batched-vs-sequential sweep micro-bench; appends
-#                        results to BENCH_netsim_sweep.json
+#   make deps               - install dev/test dependencies (best-effort: the
+#                             suite also runs without them via tests/_hypo.py)
+#   make test               - the tier-1 suite (ROADMAP.md "Tier-1 verify")
+#   make bench-netsim-smoke - tiny sweep-bench grid (seconds, no json append)
+#                             so CI exercises the benchmark path
+#   make ci                 - deps + test + bench-netsim-smoke
+#   make bench-netsim       - batched-vs-sequential sweep micro-bench; appends
+#                             results to BENCH_netsim_sweep.json
 
 PYTHON ?= python
 
-.PHONY: deps test ci bench-netsim
+.PHONY: deps test ci bench-netsim bench-netsim-smoke
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt || \
@@ -18,7 +20,10 @@ deps:
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
 
-ci: deps test
+bench-netsim-smoke:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.netsim_sweep_bench --smoke
+
+ci: deps test bench-netsim-smoke
 
 bench-netsim:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.netsim_sweep_bench

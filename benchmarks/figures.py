@@ -4,6 +4,11 @@ Each function returns a list of CSV rows: (name, value, derived-note).
 The grids are reduced versions of the paper's (distance x message size x
 concurrency) so the full suite runs in minutes on CPU; pass full=True for
 the complete grid.
+
+Execution rides the unified scenario axis: message-size / concurrency /
+jitter grids vary the WORKLOAD per cell, so each figure's whole grid is one
+``Scenario`` batch — one vmapped launch per scheme, even where every cell
+used to be its own ``run_experiment`` compile.
 """
 from __future__ import annotations
 
@@ -11,12 +16,10 @@ import time
 
 from repro.config.base import NetConfig
 from repro.netsim import (
-    congestion_workload, mixed_fct_workload, run_experiment,
-    run_experiment_batch, throughput_workload,
+    SCHEMES, Scenario, congestion_workload, mixed_fct_workload,
+    run_experiment_batch, sweep_grid, throughput_workload,
 )
 from repro.netsim.workload import aicb_workload
-
-SCHEMES = ("dcqcn", "pseudo_ack", "themis", "matchrdma")
 
 
 def fig3b_throughput(full: bool = False):
@@ -83,46 +86,67 @@ def fig3cd_buffer_pause(full: bool = False):
 
 
 def fig3e_fct(full: bool = False):
-    """Fig. 3(e): mixed-traffic average FCT vs message size."""
+    """Fig. 3(e): mixed-traffic average FCT vs message size.
+
+    The message-size grid varies the WORKLOAD, not the config — so the
+    whole figure is one Scenario batch: one vmapped launch per scheme
+    instead of one compile per (scheme, message size)."""
     rows = []
     msgs = (64 << 10, 1 << 20, 8 << 20)
     cfg = NetConfig(distance_km=100.0)
-    for msg in msgs:
-        wl = mixed_fct_workload(msg_size=msg)
-        res = {}
-        for s in SCHEMES:
-            t0 = time.time()
-            r = run_experiment(cfg, wl, s, 200_000.0)
-            res[s] = r["avg_fct_us"]
-            rows.append((f"fig3e/avg_fct_us/{s}/msg{msg >> 10}KB",
-                         (time.time() - t0) * 1e6, f"{r['avg_fct_us']:.0f}us"))
-        imp = 100 * (1 - res["matchrdma"] / max(res["dcqcn"], 1e-9))
+    scens = [Scenario(cfg, mixed_fct_workload(msg_size=msg)) for msg in msgs]
+    res = {}
+    for s in SCHEMES:
+        t0 = time.time()
+        batch = run_experiment_batch([sc.net for sc in scens],
+                                     [sc.workload for sc in scens],
+                                     s, 200_000.0)
+        us = (time.time() - t0) * 1e6 / len(scens)
+        res[s] = [r["avg_fct_us"] for r in batch]
+        for msg, r in zip(msgs, batch):
+            rows.append((f"fig3e/avg_fct_us/{s}/msg{msg >> 10}KB", us,
+                         f"{r['avg_fct_us']:.0f}us"))
+    for i, msg in enumerate(msgs):
+        imp = 100 * (1 - res["matchrdma"][i] / max(res["dcqcn"][i], 1e-9))
         rows.append((f"fig3e/fct_improvement/msg{msg >> 10}KB", 0.0,
                      f"{imp:+.1f}% vs dcqcn (paper: +31.5..43.9%)"))
     return rows
 
 
 def sweeps(full: bool = False):
-    """Text-mentioned robustness sweeps: concurrency and traffic jitter."""
+    """Text-mentioned robustness sweeps: concurrency and traffic jitter.
+
+    Pure workload grids over one config — each sweep is a Scenario batch
+    through ``sweep_grid`` (one launch per scheme)."""
     rows = []
     cfg = NetConfig(distance_km=100.0)
-    for conc in (1, 16, 64):
-        wl = throughput_workload(msg_size=256 << 10, concurrency=conc,
-                                 num_flows=4)
-        for s in ("dcqcn", "matchrdma"):
-            t0 = time.time()
-            r = run_experiment(cfg, wl, s, 100_000.0)
-            rows.append((f"sweep/concurrency{conc}/{s}",
-                         (time.time() - t0) * 1e6,
+    schemes = ("dcqcn", "matchrdma")
+
+    concs = (1, 16, 64)
+    scens = [Scenario(cfg, throughput_workload(msg_size=256 << 10,
+                                               concurrency=c, num_flows=4))
+             for c in concs]
+    t0 = time.time()
+    grid = sweep_grid(scens, schemes, horizon_us=100_000.0)
+    us = (time.time() - t0) * 1e6 / len(grid)
+    for i, conc in enumerate(concs):
+        for j, s in enumerate(schemes):
+            r = grid[i * len(schemes) + j]
+            rows.append((f"sweep/concurrency{conc}/{s}", us,
                          f"{r['throughput_gbps']:.1f}Gbps buf={r['peak_buffer_mb']:.1f}MB"))
-    for jitter in (0.0, 0.5):
-        wl = aicb_workload(comm_bytes_per_iter=2e9, iter_us=20_000.0,
-                           comm_frac=0.3, num_flows=8, msg_size=4 << 20,
-                           jitter=jitter)
-        for s in ("dcqcn", "matchrdma"):
-            t0 = time.time()
-            r = run_experiment(cfg, wl, s, 120_000.0)
-            rows.append((f"sweep/jitter{jitter}/{s}",
-                         (time.time() - t0) * 1e6,
+
+    jitters = (0.0, 0.5)
+    scens = [Scenario(cfg, aicb_workload(comm_bytes_per_iter=2e9,
+                                         iter_us=20_000.0, comm_frac=0.3,
+                                         num_flows=8, msg_size=4 << 20,
+                                         jitter=j))
+             for j in jitters]
+    t0 = time.time()
+    grid = sweep_grid(scens, schemes, horizon_us=120_000.0)
+    us = (time.time() - t0) * 1e6 / len(grid)
+    for i, jitter in enumerate(jitters):
+        for j, s in enumerate(schemes):
+            r = grid[i * len(schemes) + j]
+            rows.append((f"sweep/jitter{jitter}/{s}", us,
                          f"{r['throughput_gbps']:.1f}Gbps pause={r['pause_ratio']:.3f}"))
     return rows

@@ -243,19 +243,22 @@ def _train_cell(arch, variant, grouped_moe=False, hier=None):
     return analyse(lowered, True, mf, 512, f"{arch} train_4k multi [{variant}]")
 
 
-def netsim_tune(variant: str, iters: int = 4):
-    """Coordinate-descent hillclimb of a MatchRDMA controller knob.
+def netsim_tune(variant: str, iters: int = 4, scheme: str = "matchrdma"):
+    """Coordinate-descent hillclimb of a netsim controller knob.
 
     Each iteration evaluates the full candidate population x distance grid
     with ONE `simulate_batch` launch per scheme-free candidate batch: the
     per-scenario knob values live in the traced ``NetParams``-backed grid,
     so the whole population shares one compiled scan. Objective: steady
     inter-DC throughput minus a destination-buffer penalty (the paper's
-    throughput-vs-buffer tradeoff)."""
+    throughput-vs-buffer tradeoff). ``scheme`` is resolved through the
+    scheme registry, so a custom ``@register_scheme`` scheme tunes with
+    the same harness."""
     from repro.config.base import NetConfig
-    from repro.netsim import run_experiment_batch
+    from repro.netsim import get_scheme, run_experiment_batch
     from repro.netsim.workload import congestion_workload
 
+    scheme = get_scheme(scheme)
     knob = {"headroom": "budget_headroom", "slot": "slot_us",
             "baseline": "budget_headroom"}[variant]
     lo, hi = {"budget_headroom": (0.85, 1.0),
@@ -280,7 +283,7 @@ def netsim_tune(variant: str, iters: int = 4):
             # the hillclimb reuses the same compiled program.
             cfgs = [NetConfig(distance_km=d, **{knob: val})
                     for val in candidates for d in dists]
-            rows = run_experiment_batch(cfgs, wl, "matchrdma", 80_000.0)
+            rows = run_experiment_batch(cfgs, wl, scheme, 80_000.0)
             for j, val in enumerate(candidates):
                 cell = rows[j * len(dists):(j + 1) * len(dists)]
                 thr = sum(r["throughput_gbps"] for r in cell) / len(cell)
@@ -292,7 +295,7 @@ def netsim_tune(variant: str, iters: int = 4):
             for val in candidates:
                 cfgs = [NetConfig(distance_km=d, **{knob: val})
                         for d in dists]
-                rows = run_experiment_batch(cfgs, wl, "matchrdma", 80_000.0)
+                rows = run_experiment_batch(cfgs, wl, scheme, 80_000.0)
                 thr = sum(r["throughput_gbps"] for r in rows) / len(rows)
                 buf = sum(r["p99_buffer_mb"] for r in rows) / len(rows)
                 scores[val] = thr - 0.5 * buf

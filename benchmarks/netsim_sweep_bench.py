@@ -8,13 +8,14 @@ pytree and runs it as a single ``jax.vmap``-ed ``lax.scan``: one compile
 per scheme, one device launch for the whole grid.
 
 Results are printed as CSV rows and appended to ``BENCH_netsim_sweep.json``
-at the repo root so speedups are tracked across PRs.
+at the repo root so speedups are tracked across PRs. ``--smoke`` runs a
+tiny grid in seconds and appends nothing — it exists so ``make ci``
+exercises the benchmark path on every run.
 
-    PYTHONPATH=src python -m benchmarks.netsim_sweep_bench [--full]
+    PYTHONPATH=src python -m benchmarks.netsim_sweep_bench [--full|--smoke]
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import time
@@ -23,6 +24,7 @@ import jax
 
 from repro.config.base import NetConfig
 from repro.netsim.fluid import batch_padding, simulate, simulate_batch
+from repro.netsim.schemes import get_scheme
 from repro.netsim.workload import throughput_workload
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
@@ -48,7 +50,7 @@ def _batched_sweep(cfgs, wl, schemes, horizon_us):
     return final
 
 
-def run(full: bool = False):
+def run(full: bool = False, smoke: bool = False):
     # a realistic figure-grid: every distance is a fresh delay-line shape,
     # i.e. a fresh compile for the sequential loop (one per cell); the
     # batched engine compiles once per scheme for the whole grid.
@@ -57,6 +59,13 @@ def run(full: bool = False):
         dists = dists + (30.0, 700.0, 2000.0)
     schemes = ("dcqcn", "pseudo_ack", "themis", "matchrdma")
     horizon_us = 20_000.0
+    if smoke:
+        # CI smoke: two distances x two schemes, a short horizon, and no
+        # BENCH json append — just prove the benchmark path executes.
+        dists = (1.0, 100.0)
+        schemes = ("dcqcn", "matchrdma")
+        horizon_us = 4_000.0
+    scheme_objs = tuple(get_scheme(s) for s in schemes)
     wl = throughput_workload(msg_size=1 << 20, concurrency=1, num_flows=4)
     cfgs = [NetConfig(distance_km=d) for d in dists]
     cells = len(cfgs) * len(schemes)
@@ -64,18 +73,18 @@ def run(full: bool = False):
     # cold: includes compilation — the sequential loop compiles once per
     # (scheme, distance) cell, the batched engine once per scheme.
     t0 = time.time()
-    _sequential_sweep(cfgs, wl, schemes, horizon_us)
+    _sequential_sweep(cfgs, wl, scheme_objs, horizon_us)
     seq_cold = time.time() - t0
     t0 = time.time()
-    _batched_sweep(cfgs, wl, schemes, horizon_us)
+    _batched_sweep(cfgs, wl, scheme_objs, horizon_us)
     batch_cold = time.time() - t0
 
     # warm: steady-state relaunch of the already-compiled sweeps.
     t0 = time.time()
-    _sequential_sweep(cfgs, wl, schemes, horizon_us)
+    _sequential_sweep(cfgs, wl, scheme_objs, horizon_us)
     seq_warm = time.time() - t0
     t0 = time.time()
-    _batched_sweep(cfgs, wl, schemes, horizon_us)
+    _batched_sweep(cfgs, wl, scheme_objs, horizon_us)
     batch_warm = time.time() - t0
 
     record = {
@@ -90,7 +99,8 @@ def run(full: bool = False):
         "speedup_warm": round(seq_warm / max(batch_warm, 1e-9), 2),
         "backend": jax.default_backend(),
     }
-    _append_record(record)
+    if not smoke:
+        _append_record(record)
 
     return [
         (f"netsim_sweep/sequential_cold/{cells}cells", seq_cold * 1e6,
@@ -125,9 +135,11 @@ def main():
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI grid, seconds, no BENCH json append")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    for n, us, derived in run(args.full):
+    for n, us, derived in run(args.full, smoke=args.smoke):
         print(f"{n},{us:.1f},{derived}")
 
 

@@ -1,11 +1,16 @@
 """Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
-results/dryrun/*.json.
+results/dryrun/*.json — plus the netsim sweep-artifact hook: any
+``sweep_grid`` row list exports to CSV/JSON with ``export_sweep_rows``, and
+``--netsim-out DIR`` runs a small demo (config × workload) grid and writes
+``DIR/netsim_sweep.{csv,json}``.
 
     PYTHONPATH=src python -m benchmarks.report [--dir results/dryrun]
+    PYTHONPATH=src python -m benchmarks.report --netsim-out results/netsim
 """
 from __future__ import annotations
 
 import argparse
+import csv
 import glob
 import json
 import os
@@ -67,12 +72,82 @@ def roofline_table(cells):
               f"{tc / b if b else 0:.3f} | {rf['useful_flops_ratio']:.2f} |")
 
 
+# ---------------------------------------------------------------------------
+# netsim sweep artifacts
+# ---------------------------------------------------------------------------
+
+def export_sweep_rows(rows, csv_path=None, json_path=None):
+    """Write a ``sweep_grid``/``run_experiment_batch`` row list (list of
+    flat metric dicts) to CSV and/or JSON artifact files. Returns the
+    paths written. Columns are the union of row keys, scheme/distance
+    first, so heterogeneous scenario grids land in one table."""
+    rows = list(rows)
+    if not rows:
+        raise ValueError("export_sweep_rows: empty row list")
+    lead = [k for k in ("scheme", "distance_km") if k in rows[0]]
+    rest = sorted({k for r in rows for k in r} - set(lead))
+    cols = lead + rest
+    written = []
+    if csv_path:
+        os.makedirs(os.path.dirname(csv_path) or ".", exist_ok=True)
+        with open(csv_path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=cols, restval="")
+            w.writeheader()
+            w.writerows(rows)
+        written.append(csv_path)
+    if json_path:
+        # strict JSON: NaN/Inf (e.g. avg_fct_us of throughput-only
+        # workloads) become null — bare NaN tokens break jq/JSON.parse
+        def _finite(v):
+            if isinstance(v, float) and not (v == v and abs(v) != float("inf")):
+                return None
+            return v
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump([{k: _finite(v) for k, v in r.items()} for r in rows],
+                      f, indent=2, allow_nan=False)
+            f.write("\n")
+        written.append(json_path)
+    return written
+
+
+def netsim_demo_grid(out_dir: str):
+    """Run a small heterogeneous (config × workload) Scenario grid through
+    ``sweep_grid`` and export the rows as CSV + JSON artifacts."""
+    from repro.config.base import NetConfig
+    from repro.netsim import (
+        Scenario, congestion_workload, sweep_grid, throughput_workload,
+    )
+    scens = [
+        Scenario(NetConfig(distance_km=100.0),
+                 throughput_workload(1 << 20, 1, num_flows=4)),
+        Scenario(NetConfig(distance_km=1000.0),
+                 throughput_workload(1 << 20, 1, num_flows=4)),
+        Scenario(NetConfig(distance_km=100.0), congestion_workload()),
+    ]
+    rows = sweep_grid(scens, ("dcqcn", "matchrdma"), horizon_us=40_000.0)
+    paths = export_sweep_rows(
+        rows,
+        csv_path=os.path.join(out_dir, "netsim_sweep.csv"),
+        json_path=os.path.join(out_dir, "netsim_sweep.json"))
+    for p in paths:
+        print(f"wrote {p} ({len(rows)} rows)")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--which", default="both",
                     choices=["dryrun", "roofline", "both"])
+    ap.add_argument("--netsim-out", default=None, metavar="DIR",
+                    help="run the demo netsim Scenario grid and write "
+                         "DIR/netsim_sweep.{csv,json} instead of the "
+                         "dryrun tables")
     args = ap.parse_args()
+    if args.netsim_out:
+        netsim_demo_grid(args.netsim_out)
+        return
     cells = load(args.dir)
     if args.which in ("dryrun", "both"):
         dryrun_table(cells)

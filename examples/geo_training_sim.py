@@ -22,7 +22,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.config import get_model_config, get_parallel_config
 from repro.config.base import NetConfig, TrainConfig
-from repro.netsim import run_experiment_batch
+from repro.netsim import get_scheme, run_experiment_batch
 from repro.traffic import iteration_profile, step_traffic, training_workload
 
 
@@ -31,9 +31,13 @@ def main():
     ap.add_argument("--arch", default="deepseek-67b")
     ap.add_argument("--distances-km", default="100.0",
                     help="comma-separated inter-DC distance grid")
+    ap.add_argument("--schemes", default="dcqcn,matchrdma",
+                    help="comma-separated registered scheme names (any "
+                         "@register_scheme'd scheme works here)")
     args = ap.parse_args()
 
     distances = [float(d) for d in args.distances_km.split(",")]
+    schemes = [get_scheme(s) for s in args.schemes.split(",")]
     model = get_model_config(args.arch)
     train = TrainConfig(global_batch=256, seq_len=4096)
     nets = [NetConfig(distance_km=d) for d in distances]
@@ -52,14 +56,14 @@ def main():
               f"({100 * t.comm_frac:.1f}% overhead at full OTN rate)")
 
         wl = training_workload(model, par, train, num_flows=16)
-        for scheme in ("dcqcn", "matchrdma"):
+        for scheme in schemes:
             # one vmapped launch covers every distance of the grid
             rows = run_experiment_batch(nets, wl, scheme, 120_000.0)
             for r in rows:
                 eff = r["throughput_gbps"] / (16 * 100)
                 t_comm = t.inter_pod_bytes / max(
                     r["throughput_gbps"] * 1e9 / 8, 1)
-                print(f"  {scheme:10s} @{int(r['distance_km']):>5d}km: "
+                print(f"  {r['scheme']:10s} @{int(r['distance_km']):>5d}km: "
                       f"OTN util {100 * eff:5.1f}%  "
                       f"-> comm time {t_comm:7.2f} s  "
                       f"buf {r['peak_buffer_mb']:7.1f} MB  "

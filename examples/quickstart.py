@@ -12,7 +12,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.config.base import NetConfig
-from repro.netsim import run_experiment, throughput_workload
+from repro.netsim import SCHEMES, run_experiment_batch, throughput_workload
 
 
 def main():
@@ -23,8 +23,8 @@ def main():
           f"{cfg.distance_km:.0f} km, 4 inter-DC flows, 1 MB messages\n")
     print(f"{'scheme':12s} {'throughput':>12s} {'peak dst-OTN buf':>18s} "
           f"{'pause ratio':>12s}")
-    for scheme in ("dcqcn", "pseudo_ack", "themis", "matchrdma"):
-        r = run_experiment(cfg, workload, scheme, 100_000.0)
+    for scheme in SCHEMES:                   # every registered paper scheme
+        r = run_experiment_batch([cfg], workload, scheme, 100_000.0)[0]
         print(f"{scheme:12s} {r['throughput_gbps']:9.1f} Gbps "
               f"{r['peak_buffer_mb']:15.1f} MB {r['pause_ratio']:12.3f}")
     print("\nMatchRDMA: distance-insensitive throughput (budget-gated "

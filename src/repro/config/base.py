@@ -279,6 +279,40 @@ def stack_net_params(cfgs: Sequence["NetConfig"]) -> NetParams:
                         *[NetParams.of(c) for c in cfgs])
 
 
+# NetConfig fields whose values reach the batched step ONLY through the
+# traced NetParams leaves — free to vary per scenario. Every OTHER field is
+# compile-time structure (dt/slot layout, DCQCN constants, ECN pmax, ...)
+# and must be identical across a batch; ``batch_template`` resets the traced
+# ones to the class defaults so two grids of equal shape share one compiled
+# program.
+NET_TRACED_FIELDS = ("distance_km", "num_otn_links", "link_gbps",
+                     "dst_dc_gbps", "nic_gbps", "pfc_xoff_kb", "pfc_xon_kb",
+                     "otn_buffer_bdp_frac", "ecn_kmin_kb", "ecn_kmax_kb",
+                     "queue_thresh_kb", "budget_floor_mbps",
+                     "budget_headroom")
+
+
+def batch_template(cfgs: Sequence["NetConfig"]) -> "NetConfig":
+    """The static template keying a batch's jit cache entry: the shared
+    non-traced fields, with every NetParams-covered field reset to its
+    class default (after the reset all batch members yield the same
+    template, so any member serves). A non-traced field varying across the
+    batch is an error: it would otherwise be silently overwritten by the
+    template's value for every cell."""
+    for fld in dataclasses.fields(NetConfig):
+        if fld.name in NET_TRACED_FIELDS:
+            continue
+        vals = {getattr(c, fld.name) for c in cfgs}
+        if len(vals) > 1:
+            raise ValueError(
+                f"simulate_batch: NetConfig.{fld.name} must be identical "
+                f"across the batch (got {sorted(vals)}) — it is compile-time "
+                f"structure, not a traced NetParams leaf")
+    defaults = {f.name: f.default for f in dataclasses.fields(NetConfig)}
+    return dataclasses.replace(
+        cfgs[0], **{f: defaults[f] for f in NET_TRACED_FIELDS})
+
+
 @dataclass(frozen=True)
 class NetConfig:
     """MatchRDMA / netsim parameters. Defaults follow the paper's Fig. 3 setup."""

@@ -4,6 +4,10 @@ The destination OTN turns the slot-weighted rate estimate into a budget
 (headroom-scaled, floored, CNP-tightened) and ships it to the source OTN on
 a small high-priority control subchannel modeled as a lossless delay line
 (one-way propagation D + ``control_proc_slots`` slots of processing).
+
+``fair_share`` / the channel machinery are consumed by the scheme plugins
+in ``repro.netsim.schemes`` (budget×proxy release shaping, pseudo-ACK
+credit rates, the per-step ``step_channel`` advance).
 """
 from __future__ import annotations
 

@@ -9,9 +9,12 @@
                         periodic rate estimation (estimator.py) -> budget
                         generation (budget.py).
 
-``MatchRdmaState`` is a pytree carried through the netsim lax.scan;
-``matchrdma_slot_update`` runs once per slot boundary, the cheap per-step
-parts (pseudo-ACK gating, proxy CC) run every fluid step inside netsim.
+``MatchRdmaState`` is a pytree carried through the netsim lax.scan (the
+``SimState.extra`` slot); its call sites live in
+``repro.netsim.schemes.matchrdma`` — the registered ``matchrdma`` scheme's
+``feedback`` hook runs the cheap per-step parts (pseudo-ACK gating, proxy
+CC, channel advance) every fluid step and ``maybe_slot_update`` at slot
+boundaries.
 """
 from __future__ import annotations
 

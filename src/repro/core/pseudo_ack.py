@@ -10,6 +10,10 @@ accrue at the flow's budget share; each step the OTN releases
 so the sender's ACK-clocked window advances at source-local latency but
 never faster than the destination-sustainable budget. The ungated variant
 (credits = ∞) is the NTT pseudo-ACK baseline [ref 10].
+
+Called from the ``pseudo_ack`` / ``matchrdma`` scheme plugins
+(``repro.netsim.schemes``): their ``ack_view`` hook exposes ``packed`` to
+the sender and their ``feedback`` hook steps the ledger.
 """
 from __future__ import annotations
 

@@ -1,18 +1,34 @@
-"""Fluid-flow network simulator of the dual AI-DC leaf-spine-OTN topology."""
+"""Fluid-flow network simulator of the dual AI-DC leaf-spine-OTN topology.
+
+Public surface:
+  * schemes  — pluggable control schemes (``Scheme``, ``register_scheme``,
+               ``get_scheme``; the paper's four ship registered).
+  * fluid    — the scheme-agnostic engine (``simulate``, ``simulate_batch``).
+  * runner   — metric extraction + grid sweeps (``Scenario``, ``sweep``,
+               ``sweep_grid``, ``run_experiment_batch``).
+  * workload — flow sets (``Workload``) and their traced batch form
+               (``WorkloadParams``, ``stack_workload_params``).
+"""
 from repro.netsim.fluid import (
-    SCHEMES, SimState, batch_padding, simulate, simulate_batch,
+    SimState, batch_padding, simulate, simulate_batch,
 )
 from repro.netsim.runner import (
-    run_experiment, run_experiment_batch, sweep, sweep_grid,
+    Scenario, run_experiment, run_experiment_batch, sweep, sweep_grid,
+)
+from repro.netsim.schemes import (
+    SCHEMES, Scheme, available_schemes, get_scheme, register_scheme,
 )
 from repro.netsim.workload import (
-    BIG, FlowSpec, Workload, aicb_workload, congestion_workload,
-    mixed_fct_workload, throughput_workload,
+    BIG, FlowSpec, Workload, WorkloadParams, aicb_workload,
+    congestion_workload, mixed_fct_workload, stack_workload_params,
+    throughput_workload,
 )
 
 __all__ = [
-    "SCHEMES", "SimState", "batch_padding", "simulate", "simulate_batch",
-    "run_experiment", "run_experiment_batch", "sweep", "sweep_grid",
+    "SCHEMES", "Scheme", "Scenario", "SimState", "WorkloadParams",
+    "available_schemes", "batch_padding", "get_scheme", "register_scheme",
+    "simulate", "simulate_batch", "run_experiment", "run_experiment_batch",
+    "stack_workload_params", "sweep", "sweep_grid",
     "BIG", "FlowSpec", "Workload", "aicb_workload", "congestion_workload",
     "mixed_fct_workload", "throughput_workload",
 ]

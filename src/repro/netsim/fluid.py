@@ -17,26 +17,29 @@ Feedback paths:
            paper's pause-time-ratio measures);
            source OTN -> sender NIC (1 step).
 
-Schemes (static compile-time switch):
-  dcqcn      — conventional end-to-end RDMA (DCQCN at the sender).
-  pseudo_ack — NTT GLOBECOM'24: source-OTN pseudo-ACK, ungated; CC still e2e.
-  themis     — e2e with RTT-fairness-corrected DCQCN (ICNP'25-like).
-  matchrdma  — the paper: segmented control + rate matching.
+Schemes (pluggable — ``repro.netsim.schemes``):
+  ``make_step_fn`` is a scheme-agnostic skeleton; everything a control
+  scheme decides (ACK view, sender rate law, source-OTN release, CNP
+  routing, extra-state updates) enters through the ``Scheme`` hooks. The
+  paper's four schemes ship registered (``dcqcn``, ``pseudo_ack``,
+  ``themis``, ``matchrdma``); third-party schemes register with
+  ``@register_scheme("name")`` and are usable from every entrypoint.
+  Scheme arguments accept a registered name or a ``Scheme`` instance.
 
-Static vs traced config split (the batched scenario engine):
+Static vs traced scenario split (the batched scenario engine):
   ``NetConfig`` stays the hashable compile-time side — it fixes ``dt_us``,
   slot layout, DCQCN constants and every array SIZE. The per-scenario
-  scalars a sweep varies (distance/delay, OTN capacity, leaf capacity,
-  buffer/ECN thresholds — ``NetParams``) enter the step function as traced
-  leaves. Delay lines are allocated at a static padded length
-  (``delay_pad`` = the largest scenario in the batch) while the ring index
-  wraps at the traced actual ``delay_steps``, so heterogeneous distances
-  share ONE compiled ``lax.scan`` and ``simulate_batch`` can ``jax.vmap``
-  the whole scenario grid in a single device launch.
+  scalars a sweep varies enter as traced ``NetParams`` leaves, and the
+  per-scenario workload enters as traced ``WorkloadParams`` leaves (flow
+  arrays padded to the batch-max flow count with an ``active_mask``), so
+  ``simulate_batch`` vmaps over (NetParams × WorkloadParams) jointly:
+  heterogeneous distances AND heterogeneous flow sets share ONE compiled
+  ``lax.scan`` and run the whole scenario grid in a single device launch.
+  Delay lines are allocated at a static padded length (``delay_pad``) while
+  the ring index wraps at the traced actual ``delay_steps``.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import NamedTuple, Optional, Sequence
 
@@ -44,20 +47,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config.base import NetConfig, NetParams, stack_net_params
-from repro.core.budget import fair_share
-from repro.core.cc_proxy import (
-    DcqcnState, init_dcqcn, step_dcqcn, themis_rtt_scale,
+from repro.config.base import (
+    NetConfig, NetParams, batch_template, stack_net_params,
 )
-from repro.core.matchrdma import (
-    MatchRdmaState, accumulate_step, default_history_slots, init_matchrdma,
-    maybe_slot_update, step_channel,
-)
-from repro.core.pseudo_ack import step_pseudo_ack
+from repro.core.cc_proxy import DcqcnState, init_dcqcn, step_dcqcn
+from repro.core.matchrdma import default_history_slots
 from repro.netsim.queues import drain_proportional, ecn_mark_prob, pfc_hysteresis
-from repro.netsim.workload import Workload
+from repro.netsim.schemes import SCHEMES, get_scheme  # noqa: F401 (re-export)
+from repro.netsim.schemes.base import Scheme, SchemeCtx, SchemeSignals
+from repro.netsim.workload import WorkloadParams, as_workload_batch
 
-SCHEMES = ("dcqcn", "pseudo_ack", "themis", "matchrdma")
 MTU = 1500.0
 INF = jnp.float32(1e30)
 
@@ -81,28 +80,39 @@ class SimState(NamedTuple):
     cnp_line: jax.Array      # [Dp, F] CNP return path
     pause_line: jax.Array    # [Dp] PFC signal dst-OTN -> src-OTN
     pause_dst: jax.Array     # scalar: dst OTN asserting long-haul pause
-    mr: MatchRdmaState
+    extra: object            # scheme-private pytree (Scheme.init_extra_state)
 
 
 def _delay_steps(cfg: NetConfig) -> int:
-    """STATIC delay-step count — sizes the delay-line padding."""
-    return max(int(round(cfg.one_way_delay_us / cfg.dt_us)), 1)
+    """STATIC delay-step count — sizes the delay-line padding.
+
+    Uses the same f32 arithmetic as the traced ``NetParams.delay_steps``
+    so the static ring size can never undercut the traced wrap index
+    (f64 here could round 3.4999... down where the f32 leaf rounds up —
+    the rings would then be written through a clamped out-of-range index).
+    """
+    return max(int(np.round(np.float32(cfg.one_way_delay_us)
+                            / np.float32(cfg.dt_us))), 1)
 
 
 def _proc_steps(cfg: NetConfig) -> int:
     return int(cfg.control_proc_slots * cfg.slot_us / cfg.dt_us)
 
 
-def init_state(cfg: NetConfig, wl_arrays: dict, num_flows: int,
-               params: NetParams = None, delay_pad: int = 0,
-               history_slots: int = 0) -> SimState:
+def init_state(cfg: NetConfig, num_flows: int, params: NetParams = None,
+               delay_pad: int = 0, history_slots: int = 0,
+               scheme: Scheme = None) -> SimState:
     """``delay_pad``/``history_slots`` are static ring sizes (0 = size for
-    ``cfg`` itself); ``params`` carries the traced per-scenario scalars."""
+    ``cfg`` itself); ``params`` carries the traced per-scenario scalars;
+    ``scheme`` owns the ``extra`` slot (None = the default MatchRDMA
+    block)."""
     f = num_flows
     if delay_pad <= 0:
         delay_pad = _delay_steps(cfg)
     if params is None:
         params = NetParams.of(cfg)
+    if scheme is None:
+        scheme = Scheme()
     z = jnp.zeros((f,), jnp.float32)
     nic = params.nic_gbps * 1e9 / 8.0
     return SimState(
@@ -120,25 +130,35 @@ def init_state(cfg: NetConfig, wl_arrays: dict, num_flows: int,
         cnp_line=jnp.zeros((delay_pad, f), jnp.float32),
         pause_line=jnp.zeros((delay_pad,), jnp.float32),
         pause_dst=jnp.float32(0.0),
-        mr=init_matchrdma(cfg, f, history_slots=history_slots, params=params,
-                          chan_delay_pad=delay_pad + _proc_steps(cfg)),
+        extra=scheme.init_extra_state(
+            cfg, params, f, history_slots=history_slots,
+            chan_delay_pad=delay_pad + _proc_steps(cfg)),
     )
 
 
-def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0,
-                 params: NetParams = None, delay_pad: int = 0):
-    """Build the per-step transition. ``wl``: stacked workload arrays.
+def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
+                 period_slots: int = 0, params: NetParams = None,
+                 delay_pad: int = 0):
+    """Build the per-step transition — the scheme-agnostic skeleton.
 
-    All per-scenario scalars are read from ``params`` (traced), so the same
-    compiled step serves every cell of a vmapped scenario batch; ``cfg``
-    only contributes static structure (dt, slot layout, DCQCN constants).
+    ``wl``: the traced per-flow workload leaves. All per-scenario scalars
+    are read from ``params`` (traced), so the same compiled step serves
+    every cell of a vmapped scenario batch; ``cfg`` only contributes static
+    structure (dt, slot layout, DCQCN constants). ``scheme`` is a
+    registered name or a ``Scheme`` instance; everything scheme-specific
+    happens inside its hooks.
     """
-    assert scheme in SCHEMES
+    scheme = get_scheme(scheme)
     if params is None:
         params = NetParams.of(cfg)
+    if delay_pad <= 0:
+        delay_pad = _delay_steps(cfg)
     dt_us = cfg.dt_us
     dt_s = dt_us * 1e-6
-    d_steps = params.delay_steps(dt_us)            # traced actual delay
+    # traced actual delay, clamped to the static ring allocation (mirrors
+    # budget.init_channel) — an out-of-range wrap would silently alias
+    # ring rows through JAX's index clamping instead of erroring
+    d_steps = jnp.clip(params.delay_steps(dt_us), 1, delay_pad)
     nic = params.nic_gbps * 1e9 / 8.0
     c_otn = params.otn_capacity_gbps * 1e9 / 8.0
     c_leaf = params.dst_dc_gbps * 1e9 / 8.0
@@ -149,16 +169,24 @@ def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0,
     xoff_otn = jnp.maximum(xoff, params.otn_buffer_bdp_frac * bdp)
     xon_otn = xoff_otn / 2.0
 
-    is_inter = jnp.asarray(wl["is_inter"])
+    is_inter = jnp.asarray(wl.is_inter)
     is_intra = 1.0 - is_inter
-    window = jnp.asarray(wl["window"])
-    total_bytes = jnp.asarray(wl["total_bytes"])
-    start_us = jnp.asarray(wl["start_us"])
-    period_us = jnp.asarray(wl["period_us"])
-    duty = jnp.asarray(wl["duty"])
+    window = jnp.asarray(wl.window)
+    total_bytes = jnp.asarray(wl.total_bytes)
+    start_us = jnp.asarray(wl.start_us)
+    period_us = jnp.asarray(wl.period_us)
+    duty = jnp.asarray(wl.duty)
+    active_mask = jnp.asarray(wl.active_mask)
     rtt_us = jnp.where(is_inter > 0, 2.0 * d_steps * dt_us + 4.0, 4.0)
-    rtt_scale = themis_rtt_scale(rtt_us) if scheme == "themis" else None
-    pseudo_scheme = scheme in ("pseudo_ack", "matchrdma")
+
+    ctx = SchemeCtx(
+        cfg=cfg, params=params, period_slots=period_slots,
+        dt_us=dt_us, dt_s=dt_s, nic=nic, c_otn=c_otn, c_leaf=c_leaf,
+        xoff=xoff, xon=xon, xoff_otn=xoff_otn, xon_otn=xon_otn,
+        is_inter=is_inter, is_intra=is_intra, rtt_us=rtt_us,
+        d_steps=d_steps,
+    )
+    rtt_scale = scheme.rtt_scale(ctx)
 
     def step(state: SimState, t: jax.Array):
         t_us = t.astype(jnp.float32) * dt_us
@@ -172,7 +200,7 @@ def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0,
              < duty * period_us).astype(jnp.float32),
             1.0)
         not_done = (state.delivered < total_bytes).astype(jnp.float32)
-        active = started * in_period * not_done
+        active = started * in_period * not_done * active_mask
 
         # ------------------------------------------------ 2. delayed inputs
         ack_arr = state.ack_line[ridx]
@@ -181,10 +209,7 @@ def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0,
         pipe_out = state.pipe[ridx]
 
         # ------------------------------------------------ 3. ACK accounting
-        if pseudo_scheme:
-            acked_inter = state.mr.pseudo.packed       # previous-step pseudo-ACKs
-        else:
-            acked_inter = state.acked + ack_arr
+        acked_inter = scheme.ack_view(ctx, state, ack_arr)
         acked = jnp.where(is_inter > 0, acked_inter,
                           state.delivered)             # intra: ~µs loop
         acked = jnp.minimum(acked, state.sent)
@@ -192,11 +217,7 @@ def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0,
         # ------------------------------------------------ 4. sender rates
         win_avail = jnp.maximum(window - (state.sent - acked), 0.0)
         base_rate = jnp.minimum(win_avail / dt_s, nic)
-        if scheme == "matchrdma":
-            rate = jnp.where(is_inter > 0, base_rate,
-                             jnp.minimum(state.cc.rc, base_rate))
-        else:
-            rate = jnp.minimum(state.cc.rc, base_rate)
+        rate = scheme.sender_rate(ctx, state, base_rate)
         # src-OTN -> sender PFC (1 step, from last-step queue)
         src_nic_pause = (jnp.sum(state.q_src) > xoff_otn).astype(jnp.float32)
         rate = rate * jnp.where(is_inter > 0, 1.0 - src_nic_pause, 1.0)
@@ -207,20 +228,8 @@ def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0,
         paused_src = pause_sig > 0.5                   # delayed dst PFC
         cap_src = jnp.where(paused_src, 0.0, c_otn * dt_s)
         arrivals_src = send * is_inter
-        if scheme == "matchrdma":
-            # proxy shaping: release <= budget share x proxy modulation. The
-            # budget is authoritative; the reactive proxy is a fast bounded
-            # multiplicative brake around it (not a second rate machine).
-            share = fair_share(state.mr.budget_at_src, active * is_inter)
-            per_flow_cap = share * state.proxy_mod * dt_s
-            avail = state.q_src + arrivals_src
-            want = jnp.minimum(avail, per_flow_cap * is_inter)
-            scale = jnp.minimum(1.0, cap_src / jnp.maximum(jnp.sum(want), 1e-9))
-            drained_src = want * scale
-            q_src = avail - drained_src
-        else:
-            q_src, drained_src = drain_proportional(state.q_src, arrivals_src,
-                                                    cap_src)
+        q_src, drained_src = scheme.src_otn_release(ctx, state, arrivals_src,
+                                                    cap_src, active)
         pipe = state.pipe.at[ridx].set(drained_src)    # arrives at t + D
         inflight = state.inflight + drained_src - pipe_out
 
@@ -249,62 +258,32 @@ def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0,
         cnp_timer = jnp.where(emit, 0.0, cnp_timer)
         marked_acc = jnp.where(emit, 0.0, marked_acc)
 
-        # ------------------------------------------------ 9. return paths
+        # ------------------------------------------------ 9. scheme feedback
+        # (CNP routing, pseudo-ACK ledger, proxy brake, slot/budget/channel)
+        fb = scheme.feedback(ctx, state, SchemeSignals(
+            t=t, active=active, sent=sent, cnp_out=cnp_out, cnp_arr=cnp_arr,
+            egress_bytes=egress_bytes, q_dst_tot=q_dst_tot, q_leaf=q_leaf,
+            leaf_pfc=leaf_pfc))
+
+        # ------------------------------------------------ 10. return paths
         ack_line = state.ack_line.at[ridx].set(drained_leaf * is_inter)
-        if scheme == "matchrdma":
-            cnp_line = state.cnp_line.at[ridx].set(jnp.zeros_like(cnp_out))
-        else:
-            cnp_line = state.cnp_line.at[ridx].set(cnp_out * is_inter)
-        # ------------------------------------------------ 10. pseudo-ACK
-        mr = state.mr
-        if pseudo_scheme:
-            share = fair_share(mr.budget_at_src, active * is_inter)
-            pseudo, packed = step_pseudo_ack(
-                mr.pseudo, sent * is_inter, share, dt_s,
-                gated=(scheme == "matchrdma"))
-            mr = mr._replace(pseudo=pseudo)
+        cnp_line = state.cnp_line.at[ridx].set(fb.cnp_wire)
 
         # ------------------------------------------------ 11. CC update
-        if scheme == "matchrdma":
-            # proxy brake from the delayed congestion summary, rate-limited:
-            # cut x0.7 (floor 0.25), recover with ~1 ms time constant.
-            proxy_timer = state.proxy_timer + dt_us
-            fire = (mr.summary_at_src > 0.5) & (proxy_timer >= cfg.cnp_interval_us)
-            proxy_mod = jnp.where(fire, jnp.maximum(state.proxy_mod * 0.7, 0.25),
-                                  jnp.minimum(state.proxy_mod *
-                                              (1.0 + 5e-4 * dt_us), 1.0))
-            proxy_timer = jnp.where(fire, 0.0, proxy_timer)
-            cnp_in = cnp_out * is_intra          # sender CC only for intra
-        else:
-            proxy_timer = state.proxy_timer
-            proxy_mod = state.proxy_mod
-            cnp_in = jnp.where(is_inter > 0, cnp_arr, cnp_out * is_intra)
-        cc = step_dcqcn(state.cc, cnp_in, send, cfg, rtt_scale=rtt_scale)
+        cc = step_dcqcn(state.cc, fb.cnp_in, send, cfg, rtt_scale=rtt_scale)
 
-        # ------------------------------------------------ 12. MatchRDMA loops
-        if scheme == "matchrdma":
-            leaf_delay_us = jnp.sum(q_leaf) / c_leaf * 1e6 + cfg.intra_dc_delay_us
-            mr = accumulate_step(
-                mr, egress_bytes,
-                jnp.sum(cnp_out * is_inter),
-                leaf_delay_us, jnp.float32(1.0), q_dst_tot,
-                egress_paused=leaf_pfc)
-            mr = maybe_slot_update(mr, cfg, t, period_slots, params=params)
-            overrun = (q_dst_tot > 0.5 * xoff_otn)
-            mr = step_channel(mr, overrun.astype(jnp.float32))
-
-        # ------------------------------------------------ 13. FCT
+        # ------------------------------------------------ 12. FCT
         newly_done = (delivered >= total_bytes) & (state.done_at_us >= INF)
         done_at = jnp.where(newly_done, t_us, state.done_at_us)
 
         new_state = SimState(
             sent=sent, acked=acked, delivered=delivered, done_at_us=done_at,
             cc=cc, cnp_timer=cnp_timer, marked_acc=marked_acc,
-            proxy_timer=proxy_timer, proxy_mod=proxy_mod,
+            proxy_timer=fb.proxy_timer, proxy_mod=fb.proxy_mod,
             q_src=q_src, q_dst=q_dst, q_leaf=q_leaf,
             pipe=pipe, inflight=inflight,
             ack_line=ack_line, cnp_line=cnp_line,
-            pause_line=pause_line, pause_dst=pause_dst, mr=mr,
+            pause_line=pause_line, pause_dst=pause_dst, extra=fb.extra,
         )
         # per-flow byte conservation residual: everything the sender emitted
         # is either delivered or sitting in exactly one queue / the pipe
@@ -318,39 +297,50 @@ def make_step_fn(cfg: NetConfig, wl: dict, scheme: str, period_slots: int = 0,
             "src_paused": pause_sig,
             "thr_inter": jnp.sum(drained_leaf * is_inter) / dt_s,
             "thr_intra": jnp.sum(drained_leaf * is_intra) / dt_s,
-            "budget": state.mr.budget.budget,
-            "budget_at_src": state.mr.budget_at_src,
             "cons_err": cons_err,
         }
+        out.update(scheme.extra_traces(ctx, state))
         return new_state, out
 
     return step
 
 
-def simulate(cfg: NetConfig, workload: Workload, scheme: str,
+def simulate(cfg: NetConfig, workload, scheme,
              horizon_us: Optional[float] = None, period_slots: int = 0,
              delay_pad: int = 0, history_slots: int = 0):
     """Run one simulation; returns (final_state, traces dict of [T] arrays).
 
+    ``workload``: a ``Workload`` (or prebuilt ``WorkloadParams``);
+    ``scheme``: a registered name or ``Scheme`` instance.
     ``delay_pad``/``history_slots`` override the static ring sizes (0 = size
     for ``cfg``) — pass the batch padding to reproduce a ``simulate_batch``
     cell bit-for-bit.
     """
+    if isinstance(scheme, str):
+        import warnings
+        warnings.warn(
+            "passing a scheme name string to simulate() is deprecated; "
+            "resolve it with repro.netsim.schemes.get_scheme(name) (names "
+            "remain first-class in the batched sweep APIs)",
+            DeprecationWarning, stacklevel=2)
+    scheme = get_scheme(scheme)
     horizon = horizon_us if horizon_us is not None else cfg.horizon_us
     steps = int(round(horizon / cfg.dt_us))
-    wl_arrays = {k: jnp.asarray(v) for k, v in workload.arrays().items()}
-    return _run_traced(cfg, wl_arrays, scheme, steps, period_slots,
+    wlp = workload if isinstance(workload, WorkloadParams) \
+        else workload.params()
+    wlp = WorkloadParams(*(jnp.asarray(v) for v in wlp))
+    return _run_traced(cfg, wlp, scheme, steps, period_slots,
                        delay_pad, history_slots)
 
 
 @partial(jax.jit, static_argnames=("scheme", "steps", "period_slots", "cfg",
                                    "delay_pad", "history_slots"))
-def _run_traced(cfg, wl_arrays, scheme, steps, period_slots,
+def _run_traced(cfg, wlp, scheme, steps, period_slots,
                 delay_pad=0, history_slots=0):
-    f = wl_arrays["is_inter"].shape[0]
-    state0 = init_state(cfg, wl_arrays, f, delay_pad=delay_pad,
-                        history_slots=history_slots)
-    step = make_step_fn(cfg, wl_arrays, scheme, period_slots,
+    f = wlp.is_inter.shape[0]
+    state0 = init_state(cfg, f, delay_pad=delay_pad,
+                        history_slots=history_slots, scheme=scheme)
+    step = make_step_fn(cfg, wlp, scheme, period_slots,
                         delay_pad=delay_pad)
     final, traces = jax.lax.scan(step, state0,
                                  jnp.arange(steps, dtype=jnp.int32))
@@ -361,38 +351,6 @@ def _run_traced(cfg, wl_arrays, scheme, steps, period_slots,
 # Batched scenario engine
 # ---------------------------------------------------------------------------
 
-# NetConfig fields whose values reach the batched step ONLY through the
-# traced NetParams leaves — free to vary per scenario. Every OTHER field is
-# compile-time structure (dt/slot layout, DCQCN constants, ECN pmax, ...)
-# and must be identical across a batch; the template resets the traced ones
-# to the class defaults so two grids of equal shape share one compiled
-# program.
-_TRACED_FIELDS = ("distance_km", "num_otn_links", "link_gbps", "dst_dc_gbps",
-                  "nic_gbps", "pfc_xoff_kb", "pfc_xon_kb",
-                  "otn_buffer_bdp_frac", "ecn_kmin_kb", "ecn_kmax_kb",
-                  "queue_thresh_kb", "budget_floor_mbps", "budget_headroom")
-
-
-def _batch_template(cfgs: Sequence[NetConfig]) -> NetConfig:
-    """The static template keying the batch's jit cache entry: the shared
-    non-traced fields, with every NetParams-covered field reset to its
-    class default (after the reset all batch members yield the same
-    template, so any member serves). A non-traced field varying across the
-    batch is an error: it would otherwise be silently overwritten by the
-    template's value for every cell."""
-    for field in dataclasses.fields(NetConfig):
-        if field.name in _TRACED_FIELDS:
-            continue
-        vals = {getattr(c, field.name) for c in cfgs}
-        if len(vals) > 1:
-            raise ValueError(
-                f"simulate_batch: NetConfig.{field.name} must be identical "
-                f"across the batch (got {sorted(vals)}) — it is compile-time "
-                f"structure, not a traced NetParams leaf")
-    defaults = {f.name: f.default for f in dataclasses.fields(NetConfig)}
-    return dataclasses.replace(
-        cfgs[0], **{f: defaults[f] for f in _TRACED_FIELDS})
-
 
 def batch_padding(cfgs: Sequence[NetConfig]):
     """(delay_pad, history_slots) covering every scenario in the grid —
@@ -402,13 +360,17 @@ def batch_padding(cfgs: Sequence[NetConfig]):
     return delay_pad, default_history_slots(far)
 
 
-def simulate_batch(cfgs: Sequence[NetConfig], workload: Workload, scheme: str,
+def simulate_batch(cfgs: Sequence[NetConfig], workload, scheme,
                    horizon_us: Optional[float] = None, period_slots: int = 0):
     """Run a whole scenario grid as ONE vmapped computation.
 
     ``cfgs``: the per-scenario configs (distance / capacity / buffer grids);
     every structural field (dt, slot layout) must match — the per-scenario
     scalars are extracted into a stacked ``NetParams`` pytree and traced.
+    ``workload``: one shared ``Workload``, a per-scenario sequence of
+    ``Workload``s (padded to the batch-max flow count, see
+    ``WorkloadParams``), or a prebuilt [B, F] ``WorkloadParams`` — the
+    workload axis is vmapped jointly with the config axis.
     One compile per (scheme, grid-shape); every cell runs in a single
     device launch. Returns (final_states, traces) with a leading [B] axis
     on every leaf.
@@ -416,28 +378,30 @@ def simulate_batch(cfgs: Sequence[NetConfig], workload: Workload, scheme: str,
     cfgs = list(cfgs)
     if not cfgs:
         raise ValueError("simulate_batch: empty config batch")
-    tmpl = _batch_template(cfgs)
+    scheme = get_scheme(scheme)
+    tmpl = batch_template(cfgs)
     horizon = horizon_us if horizon_us is not None else max(
         c.horizon_us for c in cfgs)
     steps = int(round(horizon / tmpl.dt_us))
     delay_pad, history_slots = batch_padding(cfgs)
     params = stack_net_params(cfgs)
-    wl_arrays = {k: jnp.asarray(v) for k, v in workload.arrays().items()}
-    return _run_traced_batch(tmpl, params, wl_arrays, scheme, steps,
+    wlp = as_workload_batch(workload, len(cfgs))
+    wlp = WorkloadParams(*(jnp.asarray(v) for v in wlp))
+    return _run_traced_batch(tmpl, params, wlp, scheme, steps,
                              period_slots, delay_pad, history_slots)
 
 
 @partial(jax.jit, static_argnames=("cfg", "scheme", "steps", "period_slots",
                                    "delay_pad", "history_slots"))
-def _run_traced_batch(cfg, params, wl_arrays, scheme, steps, period_slots,
+def _run_traced_batch(cfg, params, wlp, scheme, steps, period_slots,
                       delay_pad, history_slots):
-    f = wl_arrays["is_inter"].shape[0]
+    f = wlp.is_inter.shape[-1]
 
-    def one_scenario(p):
-        state0 = init_state(cfg, wl_arrays, f, params=p, delay_pad=delay_pad,
-                            history_slots=history_slots)
-        step = make_step_fn(cfg, wl_arrays, scheme, period_slots,
+    def one_scenario(p, w):
+        state0 = init_state(cfg, f, params=p, delay_pad=delay_pad,
+                            history_slots=history_slots, scheme=scheme)
+        step = make_step_fn(cfg, w, scheme, period_slots,
                             params=p, delay_pad=delay_pad)
         return jax.lax.scan(step, state0, jnp.arange(steps, dtype=jnp.int32))
 
-    return jax.vmap(one_scenario)(params)
+    return jax.vmap(one_scenario)(params, wlp)

@@ -1,40 +1,63 @@
 """Experiment runner: simulate + extract the paper's Fig. 3 metrics.
 
-Two execution paths share one metric extractor:
-  * ``run_experiment``       — one (config, workload, scheme) cell;
-  * ``run_experiment_batch`` — a whole config grid in ONE vmapped device
-    launch (``fluid.simulate_batch``): one compile per scheme instead of one
-    per (scheme, distance), and the accelerator never idles between cells.
+The batched path is canonical: ``run_experiment_batch`` executes a whole
+scenario grid — heterogeneous configs AND workloads (``Scenario``) — in ONE
+vmapped device launch per scheme and extracts the Fig. 3 metric set
+batch-wide in one numpy pass over the [B, T] traces. ``sweep`` /
+``sweep_grid`` are built on it.
 
-``sweep`` is built on the batched path: the full distance grid of a scheme
-runs as a single computation.
+``run_experiment`` remains as the single-cell entry; ``_metrics_row`` is
+its per-cell fallback extractor. Passing a scheme NAME to the single-cell
+entrypoints is deprecated (resolve through ``repro.netsim.schemes
+.get_scheme`` instead); names remain first-class for the grid APIs, where
+``schemes=("dcqcn", "matchrdma")`` is the natural spelling.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import warnings
+from typing import Dict, List, Optional, Sequence, Union
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import NetConfig
 from repro.netsim.fluid import simulate, simulate_batch
-from repro.netsim.workload import BIG, Workload
+from repro.netsim.schemes import get_scheme
+from repro.netsim.workload import (
+    BIG, Workload, WorkloadParams, as_workload_batch,
+)
 
 WARMUP_FRAC = 0.1   # discard the initial transient for steady-state metrics
 
 
-def _metrics_row(cfg: NetConfig, wl: dict, scheme: str,
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One cell of the unified scenario axis: a network config AND the
+    workload that runs over it. ``sweep_grid`` accepts heterogeneous
+    ``Scenario`` grids and executes them in one launch per scheme."""
+    net: NetConfig
+    workload: Workload
+
+
+def _warn_string_scheme(fn_name: str) -> None:
+    warnings.warn(
+        f"passing a scheme name string to {fn_name}() is deprecated; "
+        f"resolve it with repro.netsim.schemes.get_scheme(name) (or use "
+        f"the batched sweep_grid API, where names remain first-class)",
+        DeprecationWarning, stacklevel=3)
+
+
+def _metrics_row(cfg: NetConfig, wl: WorkloadParams, scheme_name: str,
                  final_np: dict, traces_np: dict) -> Dict[str, float]:
-    """Fig. 3 metric set from one cell's numpy traces/final state.
-    ``wl``: the stacked workload arrays (``Workload.arrays()``)."""
+    """Fig. 3 metric set from one cell's numpy traces/final state — the
+    single-cell fallback of the batch-wide extractor below."""
     steps = traces_np["q_dst"].shape[0]
     warm = int(steps * WARMUP_FRAC)
 
-    is_inter = wl["is_inter"] > 0
+    is_inter = np.asarray(wl.is_inter) > 0
     delivered = final_np["delivered"]
     done_at = final_np["done_at_us"]
-    start = wl["start_us"]
+    start = np.asarray(wl.start_us)
 
     # throughput: steady-state inter-DC goodput (bytes/s and Gbps)
     thr = float(traces_np["thr_inter"][warm:].mean())
@@ -43,7 +66,7 @@ def _metrics_row(cfg: NetConfig, wl: dict, scheme: str,
     # pause-time ratio: fraction of time the long-haul PFC pause is asserted
     pause_ratio = float(traces_np["pause_dst"][warm:].mean())
     # FCT of finite inter-DC flows
-    finite = is_inter & (wl["total_bytes"] < BIG / 2)
+    finite = is_inter & (np.asarray(wl.total_bytes) < BIG / 2)
     if finite.any():
         fct = done_at[finite] - start[finite]
         completed = np.isfinite(fct) & (fct < 1e29)
@@ -53,7 +76,7 @@ def _metrics_row(cfg: NetConfig, wl: dict, scheme: str,
         avg_fct, completion = float("nan"), 1.0
 
     return {
-        "scheme": scheme,
+        "scheme": scheme_name,
         "distance_km": cfg.distance_km,
         "throughput_gbps": thr * 8.0 / 1e9,
         "goodput_bytes": float(delivered[is_inter].sum()),
@@ -67,39 +90,103 @@ def _metrics_row(cfg: NetConfig, wl: dict, scheme: str,
     }
 
 
-def run_experiment(cfg: NetConfig, workload: Workload, scheme: str,
+def _metrics_batch(cfgs: Sequence[NetConfig], wl: WorkloadParams,
+                   scheme_name: str, final_np: dict,
+                   traces_np: dict) -> List[Dict[str, float]]:
+    """Fig. 3 metric set for a whole batch in ONE vectorized pass.
+
+    ``traces_np``: [B, T] arrays; ``final_np``: [B, F]; ``wl``: stacked
+    [B, F] workload leaves (padded flows carry ``is_inter == 0`` and
+    ``total_bytes == 0``, so they drop out of every mask below).
+    """
+    steps = traces_np["q_dst"].shape[1]
+    warm = int(steps * WARMUP_FRAC)
+
+    thr = traces_np["thr_inter"][:, warm:].mean(axis=1)            # [B]
+    intra_thr = traces_np["thr_intra"][:, warm:].mean(axis=1)
+    q_dst = traces_np["q_dst"]
+    peak = q_dst.max(axis=1)
+    mean = q_dst[:, warm:].mean(axis=1)
+    p99 = np.percentile(q_dst[:, warm:], 99, axis=1)
+    pause = traces_np["pause_dst"][:, warm:].mean(axis=1)
+
+    is_inter = np.asarray(wl.is_inter) > 0                         # [B, F]
+    delivered = final_np["delivered"]
+    goodput = np.where(is_inter, delivered, 0.0).sum(axis=1)
+
+    # FCT of finite inter-DC flows, batch-wide with masked reductions
+    total = np.asarray(wl.total_bytes)
+    start = np.asarray(wl.start_us)
+    done_at = final_np["done_at_us"]
+    finite = is_inter & (total < BIG / 2)                          # [B, F]
+    fct = done_at - start
+    completed = finite & np.isfinite(fct) & (fct < 1e29)
+    n_finite = finite.sum(axis=1)
+    n_completed = completed.sum(axis=1)
+    sum_fct = np.where(completed, fct, 0.0).sum(axis=1)
+    avg_fct = np.where(n_completed > 0,
+                       sum_fct / np.maximum(n_completed, 1), np.inf)
+    avg_fct = np.where(n_finite > 0, avg_fct, np.nan)
+    completion = np.where(n_finite > 0,
+                          n_completed / np.maximum(n_finite, 1), 1.0)
+
+    return [
+        {
+            "scheme": scheme_name,
+            "distance_km": cfg.distance_km,
+            "throughput_gbps": float(thr[i]) * 8.0 / 1e9,
+            "goodput_bytes": float(goodput[i]),
+            "peak_buffer_mb": float(peak[i]) / 1e6,
+            "mean_buffer_mb": float(mean[i]) / 1e6,
+            "p99_buffer_mb": float(p99[i]) / 1e6,
+            "pause_ratio": float(pause[i]),
+            "avg_fct_us": float(avg_fct[i]),
+            "completion_frac": float(completion[i]),
+            "intra_thr_gbps": float(intra_thr[i]) * 8.0 / 1e9,
+        }
+        for i, cfg in enumerate(cfgs)
+    ]
+
+
+def run_experiment(cfg: NetConfig, workload: Workload, scheme,
                    horizon_us: Optional[float] = None,
                    period_slots: int = 0, delay_pad: int = 0,
                    history_slots: int = 0) -> Dict[str, float]:
     """Returns the Fig. 3 metric set for one (config, workload, scheme).
 
+    Thin shim over the Scheme/Scenario engine; ``scheme`` as a bare name
+    string is deprecated here (pass ``get_scheme(name)``).
     ``delay_pad``/``history_slots``: see ``fluid.simulate`` — pass a batch's
     padding to reproduce one of its cells exactly."""
+    if isinstance(scheme, str):
+        _warn_string_scheme("run_experiment")
+    scheme = get_scheme(scheme)
     final, traces = simulate(cfg, workload, scheme, horizon_us, period_slots,
                              delay_pad=delay_pad, history_slots=history_slots)
     traces_np = {k: np.asarray(v) for k, v in traces.items()}
     final_np = {"delivered": np.asarray(final.delivered),
                 "done_at_us": np.asarray(final.done_at_us)}
-    return _metrics_row(cfg, workload.arrays(), scheme, final_np, traces_np)
+    return _metrics_row(cfg, workload.params(), scheme.name,
+                        final_np, traces_np)
 
 
-def run_experiment_batch(cfgs: Sequence[NetConfig], workload: Workload,
-                         scheme: str, horizon_us: Optional[float] = None,
+def run_experiment_batch(cfgs: Sequence[NetConfig], workload, scheme,
+                         horizon_us: Optional[float] = None,
                          period_slots: int = 0) -> List[Dict[str, float]]:
-    """Fig. 3 metrics for every config of a grid, from ONE device launch."""
+    """Fig. 3 metrics for every scenario of a grid, from ONE device launch
+    and one vectorized metric pass. ``workload``: shared ``Workload``,
+    per-scenario sequence, or stacked ``WorkloadParams`` (see
+    ``fluid.simulate_batch``)."""
     cfgs = list(cfgs)
-    final, traces = simulate_batch(cfgs, workload, scheme, horizon_us,
+    scheme = get_scheme(scheme)
+    wlp = as_workload_batch(workload, len(cfgs))
+    final, traces = simulate_batch(cfgs, wlp, scheme, horizon_us,
                                    period_slots)
     traces_np = {k: np.asarray(v) for k, v in traces.items()}      # [B, T]
-    delivered = np.asarray(final.delivered)                        # [B, F]
-    done_at = np.asarray(final.done_at_us)
-    wl = workload.arrays()
-    rows = []
-    for i, cfg in enumerate(cfgs):
-        cell_traces = {k: v[i] for k, v in traces_np.items()}
-        cell_final = {"delivered": delivered[i], "done_at_us": done_at[i]}
-        rows.append(_metrics_row(cfg, wl, scheme, cell_final, cell_traces))
-    return rows
+    final_np = {"delivered": np.asarray(final.delivered),          # [B, F]
+                "done_at_us": np.asarray(final.done_at_us)}
+    wlp_np = WorkloadParams(*(np.asarray(v) for v in wlp))
+    return _metrics_batch(cfgs, wlp_np, scheme.name, final_np, traces_np)
 
 
 def sweep(cfg: NetConfig, workload: Workload, schemes, distances_km,
@@ -122,13 +209,45 @@ def sweep(cfg: NetConfig, workload: Workload, schemes, distances_km,
     return sweep_grid(cfgs, workload, schemes, h, period_slots)
 
 
-def sweep_grid(cfgs: Sequence[NetConfig], workload: Workload, schemes,
+def sweep_grid(scenarios, workload=None, schemes=(),
                horizon_us: Optional[float] = None, period_slots: int = 0):
-    """Arbitrary per-scenario config grids (mixed OTN capacities, asymmetric
-    buffers, ...) x schemes — one vmapped launch per scheme. Returns rows in
-    the order ``for cfg in cfgs: for s in schemes``."""
-    cfgs = list(cfgs)
-    by_scheme = {s: run_experiment_batch(cfgs, workload, s, horizon_us,
+    """Heterogeneous scenario grids × schemes — one vmapped launch per
+    scheme. Returns rows in the order ``for scenario: for scheme``.
+
+    Two spellings:
+      * unified axis — ``sweep_grid([Scenario(cfg, wl), ...], schemes)``:
+        each cell carries its own config AND workload (mixed OTN
+        capacities, asymmetric buffers, different flow sets — one launch);
+      * config axis only — ``sweep_grid(cfgs, shared_workload, schemes)``:
+        the historical form, one workload across the grid.
+    """
+    scenarios = list(scenarios)
+    if not scenarios:
+        raise ValueError("sweep_grid: empty scenario grid")
+    if isinstance(scenarios[0], Scenario):
+        if workload is not None and not schemes \
+                and not isinstance(workload, (Workload, WorkloadParams)):
+            # positional sweep_grid(scenarios, schemes)
+            workload, schemes = None, workload
+        if workload is not None:
+            raise ValueError(
+                "sweep_grid: Scenario cells carry their own workloads — "
+                "drop the workload argument")
+        cfgs = [s.net for s in scenarios]
+        wl = [s.workload for s in scenarios]
+    else:
+        cfgs, wl = scenarios, workload
+        if wl is None:
+            raise ValueError(
+                "sweep_grid: pass a workload (or a grid of Scenario cells)")
+    if isinstance(schemes, str):
+        schemes = (schemes,)        # a lone name is a 1-scheme sweep
+    if not schemes:
+        raise ValueError(
+            "sweep_grid: no schemes given — pass schemes=(\"dcqcn\", ...) "
+            "(or positionally after the Scenario grid)")
+    by_scheme = {i: run_experiment_batch(cfgs, wl, s, horizon_us,
                                          period_slots)
-                 for s in schemes}
-    return [by_scheme[s][i] for i in range(len(cfgs)) for s in schemes]
+                 for i, s in enumerate(schemes)}
+    n = len(schemes)
+    return [by_scheme[j][i] for i in range(len(cfgs)) for j in range(n)]

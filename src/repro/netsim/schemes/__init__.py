@@ -1,0 +1,36 @@
+"""Registry-backed scheme package: the four paper schemes + the plug-in API.
+
+    from repro.netsim.schemes import get_scheme, register_scheme, Scheme
+
+    sch = get_scheme("matchrdma")            # resolve a registered name
+
+    @register_scheme("my_scheme")            # add one — no fluid.py edits
+    class MyScheme(Scheme):
+        ...
+
+See ``base.py`` for the hook contract and README "Scheme API" for a worked
+example.
+"""
+from repro.netsim.schemes.base import (
+    Feedback, Scheme, SchemeCtx, SchemeLike, SchemeSignals,
+    available_schemes, get_scheme, register_scheme, unregister_scheme,
+)
+from repro.netsim.schemes.dcqcn import DcqcnScheme, ThemisScheme
+from repro.netsim.schemes.matchrdma import MatchRdmaScheme
+from repro.netsim.schemes.pseudo_ack import PseudoAckScheme
+
+# The paper's four schemes (Fig. 3). ``SCHEMES`` stays the stable builtin
+# tuple (tests/benchmarks iterate it); the registry may grow beyond it.
+register_scheme("dcqcn", DcqcnScheme)
+register_scheme("pseudo_ack", PseudoAckScheme)
+register_scheme("themis", ThemisScheme)
+register_scheme("matchrdma", MatchRdmaScheme)
+
+SCHEMES = ("dcqcn", "pseudo_ack", "themis", "matchrdma")
+
+__all__ = [
+    "Feedback", "Scheme", "SchemeCtx", "SchemeLike", "SchemeSignals",
+    "SCHEMES", "DcqcnScheme", "ThemisScheme", "MatchRdmaScheme",
+    "PseudoAckScheme", "available_schemes", "get_scheme", "register_scheme",
+    "unregister_scheme",
+]

@@ -1,0 +1,239 @@
+"""The pluggable Scheme interface + registry for the netsim fluid engine.
+
+A *scheme* is the paper's unit of contribution — how a long-haul RDMA
+control plane sees ACKs, shapes the source-OTN release, and routes
+congestion feedback. ``fluid.make_step_fn`` is a scheme-agnostic skeleton
+(flow phase → queues → ECN/PFC → CC → FCT) that composes the hooks below;
+everything scheme-specific lives in a ``Scheme`` subclass registered under
+a name:
+
+    from repro.netsim.schemes import Scheme, register_scheme
+
+    @register_scheme("my_scheme")
+    class MyScheme(Scheme):
+        def sender_rate(self, ctx, state, base_rate):
+            ...
+
+Registered names are immediately usable from every entrypoint that takes a
+scheme — ``simulate`` / ``simulate_batch`` / ``run_experiment_batch`` /
+``sweep`` / ``sweep_grid`` / the figure benchmarks — without touching
+``fluid.py``.
+
+Hook contract (all jnp expressions; traced under vmap over scenarios):
+
+  ``init_extra_state``   scheme-private pytree carried in ``SimState.extra``
+                         (default: the shared MatchRDMA block — slot ring,
+                         budget, control subchannel, pseudo-ACK ledger — so
+                         schemes that only tweak rate laws inherit working
+                         budget traces for free).
+  ``ack_view``           how the sender sees inter-DC ACKs: cumulative
+                         acked bytes per flow (e2e delayed ACKs by default;
+                         pseudo-ACK schemes return the source-OTN ledger).
+  ``sender_rate``        sender rate law before NIC-PFC gating.
+  ``src_otn_release``    how the source OTN drains toward the long haul:
+                         FIFO-fair by default, budget×proxy shaping for
+                         rate-matched schemes.
+  ``feedback``           CNP routing (what goes on the return wire, what
+                         reaches the sender CC) + every per-step update of
+                         the scheme's extra state (pseudo-ACK ledger, proxy
+                         brake, slot/budget/channel machinery).
+  ``rtt_scale``          optional per-flow DCQCN fairness factor (THEMIS).
+  ``extra_traces``       scheme-owned additions to the per-step trace dict.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import NetConfig, NetParams
+from repro.core.matchrdma import MatchRdmaState, init_matchrdma
+from repro.netsim.queues import drain_proportional
+
+
+class SchemeCtx(NamedTuple):
+    """Per-run quantities shared by every hook, built once per trace by
+    ``make_step_fn``. Traced leaves (capacities, delays) come from
+    ``NetParams`` so one compiled step serves a whole scenario batch."""
+    cfg: NetConfig               # static structure (dt, slot layout, DCQCN)
+    params: NetParams            # traced per-scenario scalars
+    period_slots: int            # static estimator periodicity hint
+    dt_us: float                 # static step length
+    dt_s: float
+    nic: jax.Array               # sender NIC rate, bytes/s
+    c_otn: jax.Array             # OTN line capacity, bytes/s
+    c_leaf: jax.Array            # destination leaf capacity, bytes/s
+    xoff: jax.Array              # DC-leaf PFC pause threshold, bytes
+    xon: jax.Array
+    xoff_otn: jax.Array          # OTN PFC threshold (BDP-scaled), bytes
+    xon_otn: jax.Array
+    is_inter: jax.Array          # [F] 1.0 for inter-DC flows
+    is_intra: jax.Array          # [F]
+    rtt_us: jax.Array            # [F] e2e RTT estimate per flow
+    d_steps: jax.Array           # traced one-way delay in steps
+
+
+class SchemeSignals(NamedTuple):
+    """Everything the datapath computed this step that feedback may need."""
+    t: jax.Array                 # step index
+    active: jax.Array            # [F] flow-phase activity mask
+    sent: jax.Array              # [F] NEW cumulative bytes sent
+    cnp_out: jax.Array           # [F] CNPs generated at the receiver
+    cnp_arr: jax.Array           # [F] CNPs arriving after the return delay
+    egress_bytes: jax.Array      # scalar — bytes the dst OTN forwarded
+    q_dst_tot: jax.Array         # scalar — new dst-OTN backlog
+    q_leaf: jax.Array            # [F] new dst-leaf queue
+    leaf_pfc: jax.Array          # scalar — leaf asserting PFC toward dst OTN
+
+
+class Feedback(NamedTuple):
+    """What ``feedback`` hands back to the skeleton."""
+    cnp_wire: jax.Array          # [F] value written on the CNP return line
+    cnp_in: jax.Array            # [F] CNPs fed to the sender CC this step
+    proxy_timer: jax.Array       # [F]
+    proxy_mod: jax.Array         # [F]
+    extra: object                # the scheme's updated extra-state pytree
+
+
+class Scheme:
+    """Default hooks = conventional end-to-end RDMA (DCQCN at the sender)."""
+
+    name: Optional[str] = None
+
+    def __init__(self):
+        # fall back to the class name so an unregistered instance still
+        # yields labeled metric rows; register_scheme overwrites this.
+        if self.name is None:
+            self.name = type(self).__name__
+
+    # Value semantics: scheme instances are jit static args, so two
+    # equivalent instances must share one compiled scan. Equality compares
+    # the full instance state so parameterized schemes (constructor args
+    # stored as attributes) with different settings never collide in the
+    # cache; keep scheme attributes plain comparable config values.
+    def __eq__(self, other):
+        return type(self) is type(other) and self.__dict__ == other.__dict__
+
+    def __hash__(self):
+        return hash((type(self), self.name))
+
+    # -- construction-time hooks (run at trace time, not per step) ---------
+    def init_extra_state(self, cfg: NetConfig, params: NetParams,
+                         num_flows: int, *, history_slots: int = 0,
+                         chan_delay_pad: int = 0):
+        """Scheme-private state carried through the scan in
+        ``SimState.extra``. The default is the full MatchRDMA block so the
+        ``budget``/``budget_at_src`` traces exist for every scheme; override
+        together with ``extra_traces`` to carry something else."""
+        return init_matchrdma(cfg, num_flows, history_slots=history_slots,
+                              params=params, chan_delay_pad=chan_delay_pad)
+
+    def rtt_scale(self, ctx: SchemeCtx):
+        """Optional [F] DCQCN increase/cut fairness factor (None = 1)."""
+        return None
+
+    # -- per-step hooks ----------------------------------------------------
+    def ack_view(self, ctx: SchemeCtx, state, ack_arr: jax.Array) -> jax.Array:
+        """Cumulative acked bytes as the sender sees them (inter-DC flows).
+        Default: conventional ACKs returning over the full path."""
+        return state.acked + ack_arr
+
+    def sender_rate(self, ctx: SchemeCtx, state,
+                    base_rate: jax.Array) -> jax.Array:
+        """Sender rate law (before source-OTN PFC gating). Default: window
+        limit ∧ the sender's DCQCN rate."""
+        return jnp.minimum(state.cc.rc, base_rate)
+
+    def src_otn_release(self, ctx: SchemeCtx, state, arrivals: jax.Array,
+                        cap: jax.Array, active: jax.Array):
+        """Drain law of the source OTN toward the long haul. Returns
+        ``(new_q_src [F], drained [F])``. Default: FIFO-fair fluid drain."""
+        return drain_proportional(state.q_src, arrivals, cap)
+
+    def feedback(self, ctx: SchemeCtx, state, sig: SchemeSignals) -> Feedback:
+        """CNP routing + extra-state updates. Default: CNPs ride the full
+        return path; intra-DC CNPs loop locally; extra state untouched."""
+        return Feedback(
+            cnp_wire=sig.cnp_out * ctx.is_inter,
+            cnp_in=jnp.where(ctx.is_inter > 0, sig.cnp_arr,
+                             sig.cnp_out * ctx.is_intra),
+            proxy_timer=state.proxy_timer,
+            proxy_mod=state.proxy_mod,
+            extra=state.extra,
+        )
+
+    def extra_traces(self, ctx: SchemeCtx, state) -> dict:
+        """Scheme-owned per-step trace entries (from the PRE-step state,
+        matching the historical trace convention). The default only knows
+        how to trace the default MatchRDMA extra block — a scheme that
+        overrides ``init_extra_state`` with its own pytree gets no extra
+        traces unless it overrides this hook too."""
+        if isinstance(state.extra, MatchRdmaState):
+            return {
+                "budget": state.extra.budget.budget,
+                "budget_at_src": state.extra.budget_at_src,
+            }
+        return {}
+
+    def __repr__(self):
+        return f"<Scheme {self.name or type(self).__name__}>"
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Scheme] = {}
+
+SchemeLike = Union[str, Scheme]
+
+
+def register_scheme(name: str, scheme=None, *, override: bool = False):
+    """Register a ``Scheme`` subclass (or instance) under ``name``.
+
+    Usable as a decorator — ``@register_scheme("my_scheme")`` above a class
+    definition — or called directly with a class/instance. Registration
+    makes the name resolvable by every netsim entrypoint. Re-registering a
+    taken name raises unless ``override=True``.
+    """
+    def _register(obj):
+        inst = obj() if isinstance(obj, type) else obj
+        if not isinstance(inst, Scheme):
+            raise TypeError(
+                f"register_scheme({name!r}): expected a Scheme subclass or "
+                f"instance, got {type(inst).__name__}")
+        if not override and name in _REGISTRY:
+            raise ValueError(
+                f"scheme {name!r} is already registered "
+                f"({_REGISTRY[name]!r}); pass override=True to replace it")
+        inst.name = name
+        _REGISTRY[name] = inst
+        return obj
+
+    if scheme is None:
+        return _register
+    _register(scheme)
+    return _REGISTRY[name]
+
+
+def unregister_scheme(name: str) -> None:
+    """Remove a registered scheme (mainly for tests)."""
+    _REGISTRY.pop(name, None)
+
+
+def get_scheme(scheme: SchemeLike) -> Scheme:
+    """Resolve a scheme name (or pass a ``Scheme`` instance through)."""
+    if isinstance(scheme, Scheme):
+        return scheme
+    try:
+        return _REGISTRY[scheme]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown scheme {scheme!r}; registered: "
+            f"{', '.join(available_schemes()) or '(none)'}") from None
+
+
+def available_schemes() -> tuple:
+    """Names of every registered scheme, sorted."""
+    return tuple(sorted(_REGISTRY))

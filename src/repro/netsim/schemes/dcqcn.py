@@ -1,0 +1,23 @@
+"""Conventional end-to-end baselines: DCQCN and the THEMIS-like variant.
+
+``dcqcn`` is exactly the ``Scheme`` default hook set — CNPs and ACKs ride
+the full sender↔receiver path, the sender runs stock DCQCN, the source OTN
+is a FIFO. ``themis`` differs only in the RTT-fairness-corrected DCQCN
+gains (ICNP'25-like): long-haul flows increase faster / cut softer so the
+short intra-DC feedback loop cannot starve them.
+"""
+from __future__ import annotations
+
+from repro.core.cc_proxy import themis_rtt_scale
+from repro.netsim.schemes.base import Scheme, SchemeCtx
+
+
+class DcqcnScheme(Scheme):
+    """Conventional e2e RDMA — the paper's primary baseline."""
+
+
+class ThemisScheme(Scheme):
+    """e2e RDMA with RTT-fairness-corrected DCQCN gains."""
+
+    def rtt_scale(self, ctx: SchemeCtx):
+        return themis_rtt_scale(ctx.rtt_us)

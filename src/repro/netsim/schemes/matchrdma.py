@@ -1,0 +1,95 @@
+"""The paper's scheme: segmented control + rate matching (Fig. 2).
+
+Three coordinated segments, expressed as hook overrides:
+
+  * ``ack_view``        — budget-gated pseudo-ACK: the sender's window spins
+    at source-local latency but never faster than the destination budget.
+  * ``sender_rate``     — inter-DC flows are NOT rate-limited by sender
+    DCQCN (the source OTN shapes them); intra-DC flows keep the local loop.
+  * ``src_otn_release`` — release ≤ budget share × proxy modulation: the
+    budget is authoritative, the reactive proxy a fast bounded
+    multiplicative brake around it (not a second rate machine).
+  * ``feedback``        — CNPs are consumed at the destination OTN (nothing
+    on the long return wire); the destination-side loop accumulates slot
+    observations, runs the slot/budget update at slot boundaries, and ships
+    (budget, congestion summary) on the control subchannel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.budget import fair_share
+from repro.core.matchrdma import (
+    accumulate_step, maybe_slot_update, step_channel,
+)
+from repro.core.pseudo_ack import step_pseudo_ack
+from repro.netsim.schemes.base import Feedback, Scheme, SchemeCtx, SchemeSignals
+
+
+class MatchRdmaScheme(Scheme):
+    """Segmented, rate-matched long-haul RDMA (the paper)."""
+
+    def ack_view(self, ctx: SchemeCtx, state, ack_arr):
+        return state.extra.pseudo.packed
+
+    def sender_rate(self, ctx: SchemeCtx, state, base_rate):
+        # inter-DC: window-limited only (the source OTN shapes the rate);
+        # intra-DC: conventional sender DCQCN.
+        return jnp.where(ctx.is_inter > 0, base_rate,
+                         jnp.minimum(state.cc.rc, base_rate))
+
+    def src_otn_release(self, ctx: SchemeCtx, state, arrivals, cap, active):
+        # proxy shaping: release <= budget share x proxy modulation. The
+        # budget is authoritative; the reactive proxy is a fast bounded
+        # multiplicative brake around it (not a second rate machine).
+        share = fair_share(state.extra.budget_at_src, active * ctx.is_inter)
+        per_flow_cap = share * state.proxy_mod * ctx.dt_s
+        avail = state.q_src + arrivals
+        want = jnp.minimum(avail, per_flow_cap * ctx.is_inter)
+        scale = jnp.minimum(1.0, cap / jnp.maximum(jnp.sum(want), 1e-9))
+        drained = want * scale
+        return avail - drained, drained
+
+    def feedback(self, ctx: SchemeCtx, state, sig: SchemeSignals) -> Feedback:
+        cfg = ctx.cfg
+        # ---- source-side: budget-gated pseudo-ACK release
+        mr = state.extra
+        share = fair_share(mr.budget_at_src, sig.active * ctx.is_inter)
+        pseudo, _ = step_pseudo_ack(mr.pseudo, sig.sent * ctx.is_inter,
+                                    share, ctx.dt_s, gated=True)
+        mr = mr._replace(pseudo=pseudo)
+
+        # ---- proxy brake from the delayed congestion summary, rate-limited:
+        # cut x0.7 (floor 0.25), recover with ~1 ms time constant.
+        proxy_timer = state.proxy_timer + ctx.dt_us
+        fire = ((mr.summary_at_src > 0.5)
+                & (proxy_timer >= cfg.cnp_interval_us))
+        proxy_mod = jnp.where(fire,
+                              jnp.maximum(state.proxy_mod * 0.7, 0.25),
+                              jnp.minimum(state.proxy_mod *
+                                          (1.0 + 5e-4 * ctx.dt_us), 1.0))
+        proxy_timer = jnp.where(fire, 0.0, proxy_timer)
+
+        # ---- destination-side loop: slot accumulation, boundary update,
+        # control subchannel
+        leaf_delay_us = (jnp.sum(sig.q_leaf) / ctx.c_leaf * 1e6
+                         + cfg.intra_dc_delay_us)
+        mr = accumulate_step(
+            mr, sig.egress_bytes,
+            jnp.sum(sig.cnp_out * ctx.is_inter),
+            leaf_delay_us, jnp.float32(1.0), sig.q_dst_tot,
+            egress_paused=sig.leaf_pfc)
+        mr = maybe_slot_update(mr, cfg, sig.t, ctx.period_slots,
+                               params=ctx.params)
+        overrun = (sig.q_dst_tot > 0.5 * ctx.xoff_otn)
+        mr = step_channel(mr, overrun.astype(jnp.float32))
+
+        return Feedback(
+            # CNPs are consumed at the destination OTN: the long return
+            # wire carries nothing, and the sender CC only hears intra-DC.
+            cnp_wire=jnp.zeros_like(sig.cnp_out),
+            cnp_in=sig.cnp_out * ctx.is_intra,
+            proxy_timer=proxy_timer,
+            proxy_mod=proxy_mod,
+            extra=mr,
+        )

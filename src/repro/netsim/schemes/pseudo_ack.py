@@ -1,0 +1,31 @@
+"""Ungated source-OTN pseudo-ACK (NTT GLOBECOM'24 baseline).
+
+The source OTN acknowledges every byte it accepts immediately
+(``credits = ∞``), so the sender's ACK-clocked window spins at source-local
+latency — distance-insensitive throughput, but nothing matches the release
+rate to what the destination can absorb, hence the buffer/pause blowups of
+Fig. 3(c,d). Congestion control stays end-to-end.
+"""
+from __future__ import annotations
+
+from repro.core.budget import fair_share
+from repro.core.pseudo_ack import step_pseudo_ack
+from repro.netsim.schemes.base import Feedback, Scheme, SchemeCtx, SchemeSignals
+
+
+class PseudoAckScheme(Scheme):
+    """Source-OTN pseudo-ACK, ungated; CC still e2e."""
+
+    gated = False
+
+    def ack_view(self, ctx: SchemeCtx, state, ack_arr):
+        # the sender sees the source OTN's pseudo-ACK ledger, one step old
+        return state.extra.pseudo.packed
+
+    def feedback(self, ctx: SchemeCtx, state, sig: SchemeSignals) -> Feedback:
+        mr = state.extra
+        share = fair_share(mr.budget_at_src, sig.active * ctx.is_inter)
+        pseudo, _ = step_pseudo_ack(mr.pseudo, sig.sent * ctx.is_inter,
+                                    share, ctx.dt_s, gated=self.gated)
+        base = super().feedback(ctx, state, sig)
+        return base._replace(extra=mr._replace(pseudo=pseudo))

@@ -4,11 +4,18 @@ A workload is a set of flows with AICB-like on/off structure (LLM training
 alternates compute and communication phases). Inter-DC flows traverse
 sender NIC -> source OTN -> long-haul pipe -> destination OTN -> destination
 leaf; intra-DC flows contend only at the destination leaf.
+
+``WorkloadParams`` is the traced side of the workload axis — the twin of
+``NetParams`` on the config axis. Its leaves are the stacked per-flow
+arrays the step function reads, padded to a common flow count with an
+``active_mask`` (padded flows never send, never complete, never count), so
+``simulate_batch`` can ``jax.vmap`` over heterogeneous (config × workload)
+scenario grids in one device launch.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Sequence
+from typing import NamedTuple, Sequence, Union
 
 import numpy as np
 
@@ -28,6 +35,91 @@ class FlowSpec:
     @property
     def window(self) -> float:
         return self.msg_size * self.concurrency
+
+
+class WorkloadParams(NamedTuple):
+    """Traced per-scenario workload leaves (a jax pytree).
+
+    Per-flow [F] arrays (or [B, F] once stacked for a batch). Padded flows
+    carry ``active_mask == 0`` and zeroed fields: they never become active,
+    contribute zero bytes to every queue/sum, and are excluded from the
+    metric extractors (``is_inter == 0`` and ``total_bytes == 0``).
+    """
+
+    is_inter: np.ndarray         # f32 — 1.0 for inter-DC flows
+    window: np.ndarray           # f32 — msg_size * concurrency (bytes)
+    total_bytes: np.ndarray      # f32 — flow size (BIG = unbounded)
+    start_us: np.ndarray         # f32
+    period_us: np.ndarray        # f32 — 0 = always-on
+    duty: np.ndarray             # f32
+    active_mask: np.ndarray      # f32 — 0.0 marks batch-padding flows
+
+    @classmethod
+    def of(cls, workload: "Workload", pad_to: int = 0) -> "WorkloadParams":
+        """Per-flow arrays for one workload, zero-padded to ``pad_to``."""
+        a = workload.arrays()
+        f = workload.num_flows
+        pad = max(pad_to, f) - f
+
+        def _p(x, fill=0.0):
+            x = np.asarray(x, np.float32)
+            return np.pad(x, (0, pad), constant_values=fill) if pad else x
+
+        return cls(
+            is_inter=_p(a["is_inter"]),
+            window=_p(a["window"]),
+            total_bytes=_p(a["total_bytes"]),
+            start_us=_p(a["start_us"]),
+            period_us=_p(a["period_us"]),
+            duty=_p(a["duty"]),
+            active_mask=_p(np.ones((f,), np.float32)),
+        )
+
+    @property
+    def num_flows(self) -> int:
+        return int(self.is_inter.shape[-1])
+
+
+WorkloadLike = Union["Workload", WorkloadParams]
+
+
+def stack_workload_params(workloads: Sequence["Workload"],
+                          pad_to: int = 0) -> WorkloadParams:
+    """Pad a workload grid to its max flow count and stack to [B, F] leaves
+    — the workload-axis twin of ``config.base.stack_net_params``."""
+    workloads = list(workloads)
+    if not workloads:
+        raise ValueError("stack_workload_params: empty workload batch")
+    pad = max(pad_to, max(w.num_flows for w in workloads))
+    cells = [WorkloadParams.of(w, pad_to=pad) for w in workloads]
+    return WorkloadParams(*(np.stack(leaves)
+                            for leaves in zip(*cells)))
+
+
+def as_workload_batch(workload, batch_size: int) -> WorkloadParams:
+    """Normalize the workload argument of a batched run to [B, F] leaves.
+
+    Accepts one shared ``Workload`` (replicated across the batch), a
+    per-scenario sequence of ``Workload``s (padded + stacked), or an
+    already-stacked ``WorkloadParams``.
+    """
+    if isinstance(workload, WorkloadParams):
+        if workload.is_inter.ndim != 2 or \
+                workload.is_inter.shape[0] != batch_size:
+            raise ValueError(
+                f"as_workload_batch: expected [B={batch_size}, F] stacked "
+                f"WorkloadParams, got shape {workload.is_inter.shape}")
+        return workload
+    if isinstance(workload, Workload):
+        workloads = [workload] * batch_size
+    else:
+        workloads = list(workload)
+        if len(workloads) != batch_size:
+            raise ValueError(
+                f"as_workload_batch: {len(workloads)} workloads for "
+                f"{batch_size} scenarios — pass one per scenario (or one "
+                f"shared Workload)")
+    return stack_workload_params(workloads)
 
 
 @dataclass(frozen=True)
@@ -50,6 +142,10 @@ class Workload:
             "period_us": np.array([x.period_us for x in f], np.float32),
             "duty": np.array([x.duty for x in f], np.float32),
         }
+
+    def params(self, pad_to: int = 0) -> WorkloadParams:
+        """The traced per-scenario side of the workload axis."""
+        return WorkloadParams.of(self, pad_to=pad_to)
 
 
 def throughput_workload(msg_size: float, concurrency: int,

@@ -1,0 +1,63 @@
+"""Regenerate the golden netsim traces pinning scheme-refactor parity.
+
+The .npz produced here was captured from the PRE-Scheme-API monolithic
+``fluid.make_step_fn`` (PR 1 state, commit 98b8c0e) and is compared
+bit-for-bit by ``tests/test_scheme_api.py::test_golden_parity_*``: the
+registry-backed hook decomposition must emit the numerically identical
+program. Re-running this script on post-refactor code simply re-captures
+the current behaviour — only do that deliberately, when the simulator's
+physics (not its API) changes, and say so in the PR.
+
+    PYTHONPATH=src python tests/golden/generate_goldens.py
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.config.base import NetConfig
+from repro.netsim import simulate, simulate_batch
+from repro.netsim.workload import congestion_workload, throughput_workload
+
+OUT = os.path.join(os.path.dirname(__file__), "netsim_scheme_traces.npz")
+
+SCHEMES = ("dcqcn", "pseudo_ack", "themis", "matchrdma")
+SEQ_HORIZON_US = 10_000.0
+BATCH_HORIZON_US = 8_000.0
+BATCH_DISTS = (1.0, 300.0)
+
+
+def main():
+    arrays = {}
+    # single-cell: the congestion workload exercises inter + intra flows,
+    # ECN/PFC, CNPs and (for matchrdma) the full slot/budget/channel loop.
+    cfg = NetConfig(distance_km=100.0)
+    wl = congestion_workload(num_inter=4, num_intra=4,
+                             burst_start_us=3_000.0, burst_len_us=4_000.0,
+                             horizon_us=SEQ_HORIZON_US)
+    for scheme in SCHEMES:
+        final, traces = simulate(cfg, wl, scheme, SEQ_HORIZON_US)
+        for k, v in traces.items():
+            arrays[f"seq/{scheme}/traces/{k}"] = np.asarray(v)
+        for k in ("sent", "acked", "delivered", "done_at_us"):
+            arrays[f"seq/{scheme}/final/{k}"] = np.asarray(getattr(final, k))
+
+    # batched: two distances through the padded-ring batch engine.
+    cfgs = [NetConfig(distance_km=d) for d in BATCH_DISTS]
+    bwl = throughput_workload(msg_size=1 << 20, concurrency=1, num_flows=4)
+    for scheme in SCHEMES:
+        final, traces = simulate_batch(cfgs, bwl, scheme, BATCH_HORIZON_US)
+        for k in ("q_src", "q_dst", "q_leaf", "pause_dst", "thr_inter",
+                  "thr_intra", "budget", "budget_at_src", "cons_err"):
+            arrays[f"batch/{scheme}/traces/{k}"] = np.asarray(traces[k])
+        arrays[f"batch/{scheme}/final/delivered"] = np.asarray(final.delivered)
+
+    np.savez_compressed(OUT, **arrays)
+    print(f"wrote {OUT} ({os.path.getsize(OUT)} bytes, {len(arrays)} arrays)")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,8 +8,8 @@ from _hypo import given, settings, st
 
 from repro.config.base import NetConfig
 from repro.netsim import (
-    SCHEMES, FlowSpec, Workload, congestion_workload, run_experiment,
-    simulate, throughput_workload,
+    SCHEMES, FlowSpec, Workload, congestion_workload, get_scheme,
+    run_experiment, simulate, throughput_workload,
 )
 
 CFG100 = NetConfig(distance_km=100.0)
@@ -20,7 +20,7 @@ def thr_results():
     wl = throughput_workload(msg_size=1 << 20, concurrency=1, num_flows=4)
     out = {}
     for scheme in ("dcqcn", "pseudo_ack", "themis", "matchrdma"):
-        out[scheme] = run_experiment(CFG100, wl, scheme, 100_000.0)
+        out[scheme] = run_experiment(CFG100, wl, get_scheme(scheme), 100_000.0)
     return out
 
 
@@ -28,7 +28,7 @@ def test_conservation(thr_results):
     """delivered <= sent and every queue is non-negative, every scheme."""
     wl = throughput_workload(msg_size=1 << 20, concurrency=1, num_flows=4)
     for scheme in ("dcqcn", "matchrdma"):
-        final, traces = simulate(CFG100, wl, scheme, 30_000.0)
+        final, traces = simulate(CFG100, wl, get_scheme(scheme), 30_000.0)
         sent = np.asarray(final.sent)
         deliv = np.asarray(final.delivered)
         # fp32 accumulators at ~3e7 bytes carry a few bytes of ulp noise
@@ -45,7 +45,7 @@ def test_per_flow_byte_conservation(scheme):
     wl = congestion_workload(num_inter=4, num_intra=4,
                             burst_start_us=5_000.0, burst_len_us=8_000.0,
                             horizon_us=20_000.0)
-    _, traces = simulate(CFG100, wl, scheme, 20_000.0)
+    _, traces = simulate(CFG100, wl, get_scheme(scheme), 20_000.0)
     cons = np.asarray(traces["cons_err"])
     assert cons.shape[0] == traces["q_dst"].shape[0]   # every step traced
     assert float(cons.max()) < 1e-3, (scheme, float(cons.max()))
@@ -56,7 +56,7 @@ def test_ack_limit_law():
     concurrency*msg/RTT (the paper's bottleneck #1)."""
     cfg = NetConfig(distance_km=1000.0)
     wl = throughput_workload(msg_size=1 << 20, concurrency=1, num_flows=4)
-    r = run_experiment(cfg, wl, "dcqcn", 150_000.0)
+    r = run_experiment(cfg, wl, get_scheme("dcqcn"), 150_000.0)
     rtt = 2 * cfg.one_way_delay_us * 1e-6
     pred = 4 * (1 << 20) / rtt * 8 / 1e9
     assert abs(r["throughput_gbps"] - pred) / pred < 0.1
@@ -79,7 +79,7 @@ def test_matchrdma_buffer_and_pause_lower_than_pseudo_ack(thr_results):
 def test_congestion_scenario_ordering():
     """Fig. 3(c,d): MatchRDMA lowest buffer stress and pause ratio."""
     wl = congestion_workload()
-    res = {s: run_experiment(CFG100, wl, s, 80_000.0)
+    res = {s: run_experiment(CFG100, wl, get_scheme(s), 80_000.0)
            for s in ("dcqcn", "pseudo_ack", "matchrdma")}
     assert res["matchrdma"]["p99_buffer_mb"] < res["dcqcn"]["p99_buffer_mb"]
     assert res["matchrdma"]["p99_buffer_mb"] < res["pseudo_ack"]["p99_buffer_mb"]
@@ -97,5 +97,5 @@ def test_finite_flows_complete(seed, msg):
                       start_us=float(rng.uniform(0, 5000)))
              for _ in range(3)]
     wl = Workload(tuple(flows))
-    r = run_experiment(CFG100, wl, "matchrdma", 150_000.0)
+    r = run_experiment(CFG100, wl, get_scheme("matchrdma"), 150_000.0)
     assert r["completion_frac"] == 1.0

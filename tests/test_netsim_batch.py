@@ -1,6 +1,7 @@
-"""Batched scenario engine: batch/sequential equivalence, the static-vs-
-traced config split, heterogeneous per-scenario grids, and the Fig. 3
-scheme-ordering regression at 1000 km."""
+"""Batched scenario engine: batch/sequential equivalence on BOTH scenario
+axes (config grids and padded workload grids), the static-vs-traced config
+split, heterogeneous per-scenario grids, and the Fig. 3 scheme-ordering
+regression at 1000 km."""
 import dataclasses
 
 import numpy as np
@@ -9,8 +10,9 @@ from _hypo import given, settings, st
 
 from repro.config.base import NetConfig, NetParams, stack_net_params
 from repro.netsim import (
-    batch_padding, congestion_workload, run_experiment, run_experiment_batch,
-    simulate, simulate_batch, sweep, sweep_grid, throughput_workload,
+    batch_padding, congestion_workload, get_scheme, run_experiment,
+    run_experiment_batch, simulate, simulate_batch, sweep, sweep_grid,
+    throughput_workload,
 )
 
 WL = throughput_workload(msg_size=1 << 20, concurrency=1, num_flows=4)
@@ -34,7 +36,7 @@ def test_batch_matches_sequential_grid():
     for scheme in ("dcqcn", "matchrdma"):
         batch_rows = run_experiment_batch(cfgs, WL, scheme, 60_000.0)
         for cfg, row in zip(cfgs, batch_rows):
-            ref = run_experiment(cfg, WL, scheme, 60_000.0,
+            ref = run_experiment(cfg, WL, get_scheme(scheme), 60_000.0,
                                  delay_pad=pad, history_slots=hist)
             for m in METRICS:
                 assert _rel(row[m], ref[m]) < 1e-3, (scheme, cfg.distance_km,
@@ -47,7 +49,7 @@ def test_batch_traces_match_sequential_traces():
     pad, hist = batch_padding(cfgs)
     _, batch_traces = simulate_batch(cfgs, WL, "matchrdma", 20_000.0)
     for i, cfg in enumerate(cfgs):
-        _, ref_traces = simulate(cfg, WL, "matchrdma", 20_000.0,
+        _, ref_traces = simulate(cfg, WL, get_scheme("matchrdma"), 20_000.0,
                                  delay_pad=pad, history_slots=hist)
         for k in ("thr_inter", "q_dst", "pause_dst"):
             a = np.asarray(ref_traces[k])
@@ -129,6 +131,40 @@ def test_batch_rejects_mixed_static_structure():
         simulate_batch(cfgs, WL, "dcqcn", 10_000.0)
 
 
+def test_delay_ring_sizing_f32_consistent():
+    """Distances whose delays are f32-equal must produce identical rings
+    and bit-identical traces — regression for the f64 static sizing
+    undercutting the f32 traced wrap index (ring rows were silently
+    aliased through JAX index clamping, inflating throughput)."""
+    a = simulate(NetConfig(distance_km=3.4999999), WL,
+                 get_scheme("dcqcn"), 5_000.0)
+    b = simulate(NetConfig(distance_km=3.5), WL,
+                 get_scheme("dcqcn"), 5_000.0)
+    for k in a[1]:
+        np.testing.assert_array_equal(np.asarray(a[1][k]),
+                                      np.asarray(b[1][k]), err_msg=k)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(1, 8), st.sampled_from([64 << 10, 1 << 20]))
+def test_workload_axis_equivalence_property(num_flows, msg):
+    """Property: ANY workload run inside a padded (config x workload) batch
+    matches its sequential twin — the active_mask keeps padding inert even
+    when the cell is padded far above its own flow count."""
+    wls = [throughput_workload(msg_size=msg, concurrency=1,
+                               num_flows=num_flows),
+           congestion_workload(num_inter=8, num_intra=8,
+                               burst_start_us=3_000.0, burst_len_us=4_000.0,
+                               horizon_us=12_000.0)]
+    cfgs = [NetConfig(distance_km=100.0), NetConfig(distance_km=400.0)]
+    pad, hist = batch_padding(cfgs)
+    rows = run_experiment_batch(cfgs, wls, "matchrdma", 12_000.0)
+    ref = run_experiment(cfgs[0], wls[0], get_scheme("matchrdma"), 12_000.0,
+                         delay_pad=pad, history_slots=hist)
+    for m in METRICS + ("goodput_bytes",):
+        assert _rel(rows[0][m], ref[m]) < 1e-3, (m, rows[0][m], ref[m])
+
+
 @settings(max_examples=3, deadline=None)
 @given(st.integers(1, 500), st.sampled_from([100.0, 400.0]))
 def test_batch_sequential_equivalence_property(distance_km, dst_gbps):
@@ -138,7 +174,7 @@ def test_batch_sequential_equivalence_property(distance_km, dst_gbps):
             NetConfig(distance_km=500.0)]
     pad, hist = batch_padding(cfgs)
     rows = run_experiment_batch(cfgs, WL, "matchrdma", 15_000.0)
-    ref = run_experiment(cfgs[0], WL, "matchrdma", 15_000.0,
+    ref = run_experiment(cfgs[0], WL, get_scheme("matchrdma"), 15_000.0,
                          delay_pad=pad, history_slots=hist)
     for m in METRICS:
         assert _rel(rows[0][m], ref[m]) < 1e-3, (m, rows[0][m], ref[m])

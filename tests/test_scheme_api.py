@@ -1,0 +1,284 @@
+"""Scheme API: golden parity vs the pre-refactor monolith, the registry,
+custom-scheme end-to-end plumbing, the unified workload/Scenario axis, and
+the deprecated string entrypoints."""
+import os
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import NetConfig
+from repro.netsim import (
+    SCHEMES, Scenario, Scheme, available_schemes, batch_padding, get_scheme,
+    register_scheme, run_experiment, run_experiment_batch, simulate,
+    simulate_batch, sweep_grid, throughput_workload,
+)
+from repro.netsim.schemes import unregister_scheme
+from repro.netsim.workload import (
+    WorkloadParams, congestion_workload, stack_workload_params,
+)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "netsim_scheme_traces.npz")
+WL = throughput_workload(msg_size=1 << 20, concurrency=1, num_flows=4)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return np.load(GOLDEN)
+
+
+# ---------------------------------------------------------------------------
+# Golden parity: the hook decomposition must emit the numerically identical
+# program as the pre-refactor string-switched monolith (PR 1, commit
+# 98b8c0e) — traces captured by tests/golden/generate_goldens.py.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_golden_parity_sequential(golden, scheme):
+    cfg = NetConfig(distance_km=100.0)
+    wl = congestion_workload(num_inter=4, num_intra=4,
+                             burst_start_us=3_000.0, burst_len_us=4_000.0,
+                             horizon_us=10_000.0)
+    final, traces = simulate(cfg, wl, get_scheme(scheme), 10_000.0)
+    for k, v in traces.items():
+        ref = golden[f"seq/{scheme}/traces/{k}"]
+        np.testing.assert_array_equal(
+            ref, np.asarray(v), err_msg=f"{scheme}/{k} diverged bit-for-bit")
+    for k in ("sent", "acked", "delivered", "done_at_us"):
+        np.testing.assert_array_equal(
+            golden[f"seq/{scheme}/final/{k}"],
+            np.asarray(getattr(final, k)),
+            err_msg=f"{scheme} final.{k} diverged")
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_golden_parity_batched(golden, scheme):
+    cfgs = [NetConfig(distance_km=d) for d in (1.0, 300.0)]
+    final, traces = simulate_batch(cfgs, WL, get_scheme(scheme), 8_000.0)
+    for k in ("q_src", "q_dst", "q_leaf", "pause_dst", "thr_inter",
+              "thr_intra", "budget", "budget_at_src", "cons_err"):
+        np.testing.assert_array_equal(
+            golden[f"batch/{scheme}/traces/{k}"], np.asarray(traces[k]),
+            err_msg=f"batched {scheme}/{k} diverged bit-for-bit")
+    np.testing.assert_array_equal(
+        golden[f"batch/{scheme}/final/delivered"],
+        np.asarray(final.delivered))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_builtins_registered():
+    names = available_schemes()
+    for s in SCHEMES:
+        assert s in names
+        assert get_scheme(s).name == s
+    # instances pass through untouched
+    inst = get_scheme("matchrdma")
+    assert get_scheme(inst) is inst
+
+
+def test_unknown_scheme_is_a_loud_error():
+    with pytest.raises(ValueError, match="unknown scheme 'nope'"):
+        get_scheme("nope")
+    with pytest.raises(ValueError, match="unknown scheme"):
+        simulate(NetConfig(), WL, get_scheme, 1_000.0)  # non-str non-Scheme
+
+
+def test_duplicate_registration_rejected():
+    name = "_test_dup_scheme"
+    try:
+        register_scheme(name, Scheme())
+        with pytest.raises(ValueError, match="already registered"):
+            register_scheme(name, Scheme())
+        register_scheme(name, Scheme(), override=True)   # explicit wins
+    finally:
+        unregister_scheme(name)
+    assert name not in available_schemes()
+
+
+def test_custom_scheme_end_to_end():
+    """A toy scheme registers via the decorator and runs through simulate,
+    run_experiment_batch and sweep_grid WITHOUT any fluid.py change: a
+    per-flow sender rate cap, visible as capped throughput."""
+    cap_bps = 10e9 / 8.0     # 10 Gbps per flow
+
+    name = "_test_toy_cap"
+    try:
+        @register_scheme(name)
+        class ToyCapScheme(Scheme):
+            def sender_rate(self, ctx, state, base_rate):
+                return jnp.minimum(jnp.minimum(state.cc.rc, base_rate),
+                                   cap_bps)
+
+        cfgs = [NetConfig(distance_km=1.0)]
+        rows = sweep_grid(cfgs, WL, (name, "dcqcn"), horizon_us=20_000.0)
+        toy, dcqcn = rows[0], rows[1]
+        assert toy["scheme"] == name
+        # 4 flows x 10 Gbps cap (+5% fluid tolerance); strictly below the
+        # uncapped baseline at 1 km
+        assert toy["throughput_gbps"] <= 4 * 10.0 * 1.05
+        assert toy["throughput_gbps"] < dcqcn["throughput_gbps"]
+        assert toy["throughput_gbps"] > 1.0     # and it actually flows
+    finally:
+        unregister_scheme(name)
+
+
+# ---------------------------------------------------------------------------
+# Unified workload axis
+# ---------------------------------------------------------------------------
+
+def test_workload_padding_mask_shapes():
+    wls = [throughput_workload(1 << 20, 1, num_flows=3),
+           congestion_workload(num_inter=4, num_intra=4)]
+    stacked = stack_workload_params(wls)
+    fmax = max(w.num_flows for w in wls)
+    for leaf in stacked:
+        assert leaf.shape == (2, fmax)
+    np.testing.assert_array_equal(stacked.active_mask.sum(axis=1),
+                                  [w.num_flows for w in wls])
+    # padded flows are inert: no inter-DC membership, zero bytes
+    pad = stacked.active_mask == 0
+    assert (stacked.is_inter[pad] == 0).all()
+    assert (stacked.total_bytes[pad] == 0).all()
+
+
+def test_padded_workload_batch_matches_sequential():
+    """A heterogeneous (config x workload) grid run as ONE vmapped launch
+    must match per-cell sequential runs — including the cell whose flow
+    array was padded up by the active_mask."""
+    cfgs = [NetConfig(distance_km=100.0), NetConfig(distance_km=300.0)]
+    wls = [throughput_workload(1 << 20, 1, num_flows=3),      # padded cell
+           congestion_workload(num_inter=4, num_intra=4,
+                               burst_start_us=3_000.0, burst_len_us=4_000.0,
+                               horizon_us=12_000.0)]
+    pad, hist = batch_padding(cfgs)
+    rows = run_experiment_batch(cfgs, wls, "matchrdma", 12_000.0)
+    for i, (c, w) in enumerate(zip(cfgs, wls)):
+        ref = run_experiment(c, w, get_scheme("matchrdma"), 12_000.0,
+                             delay_pad=pad, history_slots=hist)
+        for m in ("throughput_gbps", "peak_buffer_mb", "mean_buffer_mb",
+                  "pause_ratio", "completion_frac", "goodput_bytes"):
+            a, b = rows[i][m], ref[m]
+            rel = abs(a - b) / max(abs(a), abs(b), 1e-4)
+            assert rel < 1e-3, (i, m, a, b)
+
+
+def test_scenario_sweep_grid_joint_launch():
+    """Scenario cells (config AND workload per cell) through sweep_grid:
+    row order is scenario-major, schemes resolve by name, cells keep their
+    own workload semantics (the finite-flow cell reports FCT)."""
+    scens = [
+        Scenario(NetConfig(distance_km=100.0),
+                 throughput_workload(1 << 20, 1, num_flows=4)),
+        Scenario(NetConfig(distance_km=300.0, num_otn_links=4),
+                 congestion_workload(num_inter=4, num_intra=4,
+                                     burst_start_us=3_000.0,
+                                     burst_len_us=4_000.0,
+                                     horizon_us=12_000.0)),
+    ]
+    rows = sweep_grid(scens, ("dcqcn", "matchrdma"), horizon_us=12_000.0)
+    assert [r["scheme"] for r in rows] == ["dcqcn", "matchrdma"] * 2
+    assert [r["distance_km"] for r in rows] == [100.0, 100.0, 300.0, 300.0]
+    for r in rows:
+        assert np.isfinite(r["throughput_gbps"])
+    # keyword spelling and workload-carrying cells are mutually exclusive
+    with pytest.raises(ValueError, match="carry their own workloads"):
+        sweep_grid(scens, throughput_workload(1 << 20, 1),
+                   ("dcqcn",), horizon_us=5_000.0)
+
+
+def test_custom_extra_state_without_traces_hook():
+    """A scheme replacing the default extra-state pytree (here: None) must
+    run end-to-end without overriding extra_traces — the default trace
+    hook degrades to {} instead of dereferencing the MatchRDMA block."""
+    class BareScheme(Scheme):
+        def init_extra_state(self, cfg, params, num_flows, **kw):
+            return None
+
+    _, traces = simulate(NetConfig(distance_km=1.0), WL, BareScheme(),
+                         2_000.0)
+    assert "q_dst" in traces and "budget" not in traces
+
+
+def test_sweep_grid_lenient_call_shapes():
+    """A lone scheme name is a 1-scheme sweep; a forgotten schemes arg
+    with a stray workload fails with the purpose-built message."""
+    scens = [Scenario(NetConfig(distance_km=1.0), WL)]
+    rows = sweep_grid(scens, "dcqcn", horizon_us=2_000.0)
+    assert [r["scheme"] for r in rows] == ["dcqcn"]
+    rows = sweep_grid([NetConfig(distance_km=1.0)], WL, "dcqcn",
+                      horizon_us=2_000.0)
+    assert [r["scheme"] for r in rows] == ["dcqcn"]
+    with pytest.raises(ValueError, match="carry their own workloads"):
+        sweep_grid(scens, WL, horizon_us=2_000.0)
+
+
+def test_export_sweep_rows_strict_json(tmp_path):
+    """NaN metrics (throughput-only workloads have no FCT) must export as
+    null, keeping the JSON artifact parseable by strict readers."""
+    import json
+
+    from benchmarks.report import export_sweep_rows
+    rows = [{"scheme": "dcqcn", "distance_km": 1.0,
+             "avg_fct_us": float("nan"), "throughput_gbps": 1.0}]
+    csv_p, json_p = str(tmp_path / "r.csv"), str(tmp_path / "r.json")
+    export_sweep_rows(rows, csv_path=csv_p, json_path=json_p)
+    loaded = json.load(open(json_p))          # strict parse must succeed
+    assert loaded[0]["avg_fct_us"] is None
+    assert loaded[0]["throughput_gbps"] == 1.0
+    assert open(csv_p).readline().startswith("scheme,distance_km")
+
+
+def test_unregistered_instance_labeled_and_cached():
+    """A Scheme instance used directly (never registered) still yields
+    labeled metric rows, and two equivalent instances share one compiled
+    scan (value-based eq/hash on the jit static arg)."""
+    from repro.netsim.fluid import _run_traced
+    from repro.netsim.schemes import DcqcnScheme
+
+    cfg = NetConfig(distance_km=1.0)
+    r = run_experiment(cfg, WL, DcqcnScheme(), 2_000.0)
+    assert r["scheme"] == "DcqcnScheme"
+    n0 = _run_traced._cache_size()
+    run_experiment(cfg, WL, DcqcnScheme(), 2_000.0)   # fresh instance
+    assert _run_traced._cache_size() == n0, "equivalent instance recompiled"
+
+
+def test_sweep_grid_requires_schemes():
+    """Omitting schemes must be a loud error, not an empty row list."""
+    with pytest.raises(ValueError, match="no schemes given"):
+        sweep_grid([NetConfig()], WL, horizon_us=2_000.0)
+    with pytest.raises(ValueError, match="no schemes given"):
+        sweep_grid([Scenario(NetConfig(), WL)], horizon_us=2_000.0)
+
+
+def test_workload_batch_size_mismatch_rejected():
+    cfgs = [NetConfig(), NetConfig(distance_km=200.0)]
+    wls = [throughput_workload(1 << 20, 1)] * 3
+    with pytest.raises(ValueError, match="3 workloads for 2 scenarios"):
+        run_experiment_batch(cfgs, wls, "dcqcn", 5_000.0)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated string entrypoints
+# ---------------------------------------------------------------------------
+
+def test_string_scheme_shims_warn_but_work():
+    cfg = NetConfig(distance_km=1.0)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        r = run_experiment(cfg, WL, "dcqcn", 2_000.0)
+        _, traces = simulate(cfg, WL, "dcqcn", 2_000.0)
+    assert r["scheme"] == "dcqcn" and "q_dst" in traces
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 2
+    assert "get_scheme" in str(dep[0].message)
+    # the batched grid APIs keep names first-class: no warning
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        run_experiment_batch([cfg], WL, "dcqcn", 2_000.0)
+    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
