@@ -3,13 +3,19 @@
 #   make deps               - install dev/test dependencies (best-effort: the
 #                             suite also runs without them via tests/_hypo.py)
 #   make test               - the tier-1 suite (ROADMAP.md "Tier-1 verify")
-#   make bench-netsim-smoke - tiny sweep-bench grid (seconds, no json append)
-#                             so CI exercises the benchmark path
+#   make bench-netsim-smoke - tiny sweep-bench grid (seconds, no json append);
+#                             also times a streaming-mode cell and ASSERTS
+#                             streaming <= materialized wall-clock
 #   make ci                 - deps + test + bench-netsim-smoke
-#   make bench-netsim       - batched-vs-sequential sweep micro-bench; appends
-#                             results to BENCH_netsim_sweep.json
+#   make bench-netsim       - batched-vs-sequential + streaming-vs-full sweep
+#                             micro-bench; appends to BENCH_netsim_sweep.json
 
 PYTHON ?= python
+
+# The netsim string-scheme deprecation becomes an ERROR when it fires from
+# inside repro.netsim itself — the shims must never regress back into the
+# engine. Test modules exercising the shims still see a plain warning.
+PYTEST_W = -W "error:passing a scheme name string:DeprecationWarning:repro\.netsim"
 
 .PHONY: deps test ci bench-netsim bench-netsim-smoke
 
@@ -18,7 +24,7 @@ deps:
 	  echo "pip install failed; continuing (tests degrade gracefully)"
 
 test:
-	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_W)
 
 bench-netsim-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.netsim_sweep_bench --smoke

@@ -283,7 +283,11 @@ def netsim_tune(variant: str, iters: int = 4, scheme: str = "matchrdma"):
             # the hillclimb reuses the same compiled program.
             cfgs = [NetConfig(distance_km=d, **{knob: val})
                     for val in candidates for d in dists]
-            rows = run_experiment_batch(cfgs, wl, scheme, 80_000.0)
+            # streaming metrics: the tuner only consumes scalar columns
+            # (p99 via the in-scan histogram), so no [B, T] trace block is
+            # ever materialized across hillclimb iterations
+            rows = run_experiment_batch(cfgs, wl, scheme, 80_000.0,
+                                        trace_mode="metrics")
             for j, val in enumerate(candidates):
                 cell = rows[j * len(dists):(j + 1) * len(dists)]
                 thr = sum(r["throughput_gbps"] for r in cell) / len(cell)

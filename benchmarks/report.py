@@ -111,9 +111,12 @@ def export_sweep_rows(rows, csv_path=None, json_path=None):
     return written
 
 
-def netsim_demo_grid(out_dir: str):
+def netsim_demo_grid(out_dir: str, trace_mode: str = "metrics"):
     """Run a small heterogeneous (config × workload) Scenario grid through
-    ``sweep_grid`` and export the rows as CSV + JSON artifacts."""
+    ``sweep_grid`` and export the rows as CSV + JSON artifacts. The default
+    ``trace_mode="metrics"`` streams all reductions in-scan (O(B) device
+    memory) and adds the scheme-streamed columns (``mean_budget_gbps``,
+    ...) to the artifacts; pass ``full`` for the trace-materialized path."""
     from repro.config.base import NetConfig
     from repro.netsim import (
         Scenario, congestion_workload, sweep_grid, throughput_workload,
@@ -125,7 +128,8 @@ def netsim_demo_grid(out_dir: str):
                  throughput_workload(1 << 20, 1, num_flows=4)),
         Scenario(NetConfig(distance_km=100.0), congestion_workload()),
     ]
-    rows = sweep_grid(scens, ("dcqcn", "matchrdma"), horizon_us=40_000.0)
+    rows = sweep_grid(scens, ("dcqcn", "matchrdma"), horizon_us=40_000.0,
+                      trace_mode=trace_mode)
     paths = export_sweep_rows(
         rows,
         csv_path=os.path.join(out_dir, "netsim_sweep.csv"),
@@ -144,9 +148,13 @@ def main():
                     help="run the demo netsim Scenario grid and write "
                          "DIR/netsim_sweep.{csv,json} instead of the "
                          "dryrun tables")
+    ap.add_argument("--trace-mode", default="metrics",
+                    choices=["full", "decimate", "metrics"],
+                    help="execution mode of the --netsim-out demo grid "
+                         "(default: streaming in-scan metrics)")
     args = ap.parse_args()
     if args.netsim_out:
-        netsim_demo_grid(args.netsim_out)
+        netsim_demo_grid(args.netsim_out, trace_mode=args.trace_mode)
         return
     cells = load(args.dir)
     if args.which in ("dryrun", "both"):

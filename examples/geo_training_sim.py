@@ -57,8 +57,11 @@ def main():
 
         wl = training_workload(model, par, train, num_flows=16)
         for scheme in schemes:
-            # one vmapped launch covers every distance of the grid
-            rows = run_experiment_batch(nets, wl, scheme, 120_000.0)
+            # one vmapped launch covers every distance of the grid;
+            # streaming mode keeps device memory O(B) — the 24k-step
+            # horizon never materializes as [B, T] traces
+            rows = run_experiment_batch(nets, wl, scheme, 120_000.0,
+                                        trace_mode="metrics")
             for r in rows:
                 eff = r["throughput_gbps"] / (16 * 100)
                 t_comm = t.inter_pod_bytes / max(

@@ -24,7 +24,10 @@ def main():
     print(f"{'scheme':12s} {'throughput':>12s} {'peak dst-OTN buf':>18s} "
           f"{'pause ratio':>12s}")
     for scheme in SCHEMES:                   # every registered paper scheme
-        r = run_experiment_batch([cfg], workload, scheme, 100_000.0)[0]
+        # trace_mode="metrics": reductions stream inside the scan — no
+        # [B, T] trace array exists, only O(B) accumulators reach the host
+        r = run_experiment_batch([cfg], workload, scheme, 100_000.0,
+                                 trace_mode="metrics")[0]
         print(f"{scheme:12s} {r['throughput_gbps']:9.1f} Gbps "
               f"{r['peak_buffer_mb']:15.1f} MB {r['pause_ratio']:12.3f}")
     print("\nMatchRDMA: distance-insensitive throughput (budget-gated "

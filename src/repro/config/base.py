@@ -371,6 +371,13 @@ class NetConfig:
     def otn_capacity_gbps(self) -> float:
         return self.num_otn_links * self.link_gbps
 
+    def horizon_steps(self, horizon_us: float = None) -> int:
+        """Scan length for a horizon (default: this config's) — the single
+        definition both ``simulate`` and ``simulate_batch`` size their scans
+        (and warm-up cutoffs) with."""
+        h = self.horizon_us if horizon_us is None else horizon_us
+        return int(round(h / self.dt_us))
+
     def params(self) -> NetParams:
         """The traced per-scenario side of the static/traced split."""
         return NetParams.of(self)

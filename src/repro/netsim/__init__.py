@@ -3,14 +3,19 @@
 Public surface:
   * schemes  — pluggable control schemes (``Scheme``, ``register_scheme``,
                ``get_scheme``; the paper's four ship registered).
-  * fluid    — the scheme-agnostic engine (``simulate``, ``simulate_batch``).
+  * fluid    — the scheme-agnostic engine (``simulate``, ``simulate_batch``;
+               execution modes ``TRACE_MODES`` = full / decimate / metrics,
+               streaming accumulators ``MetricAcc`` + ``hist_quantile``,
+               device sharding via ``shard_scenario_axis``).
   * runner   — metric extraction + grid sweeps (``Scenario``, ``sweep``,
-               ``sweep_grid``, ``run_experiment_batch``).
+               ``sweep_grid``, ``run_experiment_batch``) over chunked,
+               device-sharded launch plans.
   * workload — flow sets (``Workload``) and their traced batch form
                (``WorkloadParams``, ``stack_workload_params``).
 """
 from repro.netsim.fluid import (
-    SimState, batch_padding, simulate, simulate_batch,
+    TRACE_MODES, MetricAcc, SimState, batch_padding, hist_quantile,
+    shard_scenario_axis, simulate, simulate_batch,
 )
 from repro.netsim.runner import (
     Scenario, run_experiment, run_experiment_batch, sweep, sweep_grid,
@@ -25,8 +30,10 @@ from repro.netsim.workload import (
 )
 
 __all__ = [
-    "SCHEMES", "Scheme", "Scenario", "SimState", "WorkloadParams",
-    "available_schemes", "batch_padding", "get_scheme", "register_scheme",
+    "MetricAcc", "SCHEMES", "Scheme", "Scenario", "SimState",
+    "TRACE_MODES", "WorkloadParams",
+    "available_schemes", "batch_padding", "get_scheme", "hist_quantile",
+    "register_scheme", "shard_scenario_axis",
     "simulate", "simulate_batch", "run_experiment", "run_experiment_batch",
     "stack_workload_params", "sweep", "sweep_grid",
     "BIG", "FlowSpec", "Workload", "aicb_workload", "congestion_workload",

@@ -37,10 +37,32 @@ Static vs traced scenario split (the batched scenario engine):
   ``lax.scan`` and run the whole scenario grid in a single device launch.
   Delay lines are allocated at a static padded length (``delay_pad``) while
   the ring index wraps at the traced actual ``delay_steps``.
+
+Execution modes (``trace_mode``):
+  ``full``      every per-step trace key materializes as a [T] (or [B, T])
+                array — figures, goldens, debugging.
+  ``decimate``  every ``decimate``-th step is kept: [T/k] traces, O(B·T/k)
+                memory — long-horizon figures.
+  ``metrics``   NO per-step arrays exist anywhere: the ``lax.scan`` carry
+                accumulates the Fig. 3 reductions online (Kahan-compensated
+                warm-step sums, running maxes, a fixed-bin log-histogram of
+                ``q_dst`` for p99) in a ``MetricAcc``, so device memory is
+                O(B) per trace key instead of O(B·T) and nothing but final
+                states + accumulators ever transfers to host. Schemes
+                stream their own reductions through the
+                ``Scheme.init_metric_acc``/``accumulate_metrics``/
+                ``finalize_metrics`` hooks (mirroring ``extra_traces``).
+
+Device sharding: ``shard_scenario_axis`` splits the stacked [B] scenario
+leaves across ``jax.devices()`` (jax.sharding over the vmapped axis), and
+``simulate_batch`` applies it automatically whenever the device count
+evenly splits the batch — one SPMD launch sweeps the grid on every
+accelerator. The runner's launch plans pad chunks to a device multiple so
+the split always holds.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 from typing import NamedTuple, Optional, Sequence
 
 import jax
@@ -58,7 +80,92 @@ from repro.netsim.schemes.base import Scheme, SchemeCtx, SchemeSignals
 from repro.netsim.workload import WorkloadParams, as_workload_batch
 
 MTU = 1500.0
-INF = jnp.float32(1e30)
+# np (not jnp): a module-level jax array would initialize the backend at
+# import time; as an f32 numpy scalar it traces identically
+INF = np.float32(1e30)
+
+WARMUP_FRAC = 0.1   # fraction of the horizon discarded as startup transient
+
+TRACE_MODES = ("full", "decimate", "metrics")
+
+# engine-owned streaming reductions over the per-step trace dict: warm-step
+# sums (-> means) and all-step running maxes
+STREAM_SUM_KEYS = ("q_src", "q_dst", "q_leaf", "pause_dst",
+                   "thr_inter", "thr_intra")
+STREAM_MAX_KEYS = ("q_src", "q_dst", "q_leaf", "cons_err")
+
+# fixed-bin log histogram of q_dst for the streaming p99: bin 0 holds
+# everything below HIST_MIN_BYTES, bins 1..HIST_BINS-1 are log-spaced over
+# [HIST_MIN_BYTES, HIST_MAX_BYTES). Inverting it bounds the quantile
+# estimate's relative error by the bin ratio (~5.6% at 512 bins / 12
+# decades), independent of the horizon length.
+HIST_BINS = 512
+HIST_MIN_BYTES = 1.0
+HIST_MAX_BYTES = 1e12
+
+
+class MetricAcc(NamedTuple):
+    """O(1)-per-scenario scan carry of the Fig. 3 reductions
+    (``trace_mode="metrics"``). Under the batched engine every leaf gains a
+    leading [B] axis; nothing here scales with the step count."""
+    sum_s: dict       # STREAM_SUM_KEYS -> Kahan running sum over warm steps
+    sum_c: dict       # STREAM_SUM_KEYS -> Kahan compensation term
+    maxes: dict       # STREAM_MAX_KEYS -> running max over ALL steps
+    hist: jax.Array   # [HIST_BINS] i32 warm-step log-histogram of q_dst
+                      # (integer counts: f32 would silently saturate past
+                      # 2^24 increments per bin on long horizons)
+    scheme: object    # scheme-private accumulator (Scheme.init_metric_acc)
+
+
+def _hist_bin_index(q: jax.Array) -> jax.Array:
+    span = float(np.log(HIST_MAX_BYTES) - np.log(HIST_MIN_BYTES))
+    frac = (jnp.log(jnp.maximum(q, HIST_MIN_BYTES))
+            - float(np.log(HIST_MIN_BYTES))) / span
+    idx = 1 + jnp.floor(frac * (HIST_BINS - 1)).astype(jnp.int32)
+    return jnp.where(q < HIST_MIN_BYTES, 0, jnp.clip(idx, 1, HIST_BINS - 1))
+
+
+def hist_bin_centers() -> np.ndarray:
+    """Representative value per histogram bin: 0 for the zero bin,
+    geometric bin centers for the log bins (host-side numpy)."""
+    edges = np.exp(np.linspace(np.log(HIST_MIN_BYTES),
+                               np.log(HIST_MAX_BYTES), HIST_BINS))
+    return np.concatenate([[0.0], np.sqrt(edges[:-1] * edges[1:])])
+
+
+def hist_quantile(hist, q: float) -> np.ndarray:
+    """Invert a streamed ``MetricAcc.hist`` (leading axes preserved) into
+    the q-quantile estimate in bytes."""
+    hist = np.asarray(hist, np.float64)
+    rank = q * hist.sum(axis=-1, keepdims=True)
+    idx = (np.cumsum(hist, axis=-1) < rank).sum(axis=-1)
+    return hist_bin_centers()[np.clip(idx, 0, HIST_BINS - 1)]
+
+
+def _init_metric_acc(scheme, ctx, state0) -> MetricAcc:
+    z = jnp.float32(0.0)
+    return MetricAcc(
+        sum_s={k: z for k in STREAM_SUM_KEYS},
+        sum_c={k: z for k in STREAM_SUM_KEYS},
+        maxes={k: z for k in STREAM_MAX_KEYS},
+        hist=jnp.zeros((HIST_BINS,), jnp.int32),
+        scheme=scheme.init_metric_acc(ctx, state0),
+    )
+
+
+def _accumulate_engine(acc: MetricAcc, out: dict, inc: jax.Array) -> MetricAcc:
+    sum_s, sum_c = {}, {}
+    for k in STREAM_SUM_KEYS:
+        # Kahan-compensated so the streaming mean matches the numpy trace
+        # mean to ~ulp — "metrics" mode is a drop-in for figure numbers
+        y = out[k] * inc - acc.sum_c[k]
+        t = acc.sum_s[k] + y
+        sum_c[k] = (t - acc.sum_s[k]) - y
+        sum_s[k] = t
+    maxes = {k: jnp.maximum(acc.maxes[k], out[k]) for k in STREAM_MAX_KEYS}
+    hist = acc.hist.at[_hist_bin_index(out["q_dst"])].add(
+        inc.astype(jnp.int32))
+    return acc._replace(sum_s=sum_s, sum_c=sum_c, maxes=maxes, hist=hist)
 
 
 class SimState(NamedTuple):
@@ -302,19 +409,75 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         out.update(scheme.extra_traces(ctx, state))
         return new_state, out
 
+    step.ctx = ctx      # shared per-run quantities for the metric machinery
     return step
+
+
+def _scan_with_mode(step, scheme, state0, steps: int, mode: str,
+                    decimate: int, warm: int):
+    """Drive the per-step transition under one of the execution modes.
+
+    Returns ``(final_state, aux)`` where ``aux`` is the [T]-stacked trace
+    dict (``full``), the [T//decimate]-stacked trace dict of every
+    ``decimate``-th step (``decimate``), or a ``MetricAcc`` (``metrics`` —
+    no per-step array is ever allocated).
+    """
+    ts = jnp.arange(steps, dtype=jnp.int32)
+    if mode == "metrics":
+        acc0 = _init_metric_acc(scheme, step.ctx, state0)
+
+        def mstep(carry, t):
+            state, acc = carry
+            state, out = step(state, t)
+            inc = (t >= warm).astype(jnp.float32)
+            acc = _accumulate_engine(acc, out, inc)
+            acc = acc._replace(scheme=scheme.accumulate_metrics(
+                step.ctx, acc.scheme, state, out, inc))
+            return (state, acc), None
+
+        (final, acc), _ = jax.lax.scan(mstep, (state0, acc0), ts)
+        return final, acc
+    if mode == "decimate" and decimate > 1:
+        k = decimate
+        nblocks = steps // k
+
+        def block(state, b):
+            # the inner [k]-stacked traces are transient per outer step:
+            # live memory is O(T/k + k), never O(T)
+            state, outs = jax.lax.scan(step, state,
+                                       b * k + jnp.arange(k, dtype=jnp.int32))
+            return state, jax.tree.map(lambda x: x[-1], outs)
+
+        final, traces = jax.lax.scan(block, state0,
+                                     jnp.arange(nblocks, dtype=jnp.int32))
+        rem = steps - nblocks * k
+        if rem:
+            final, _ = jax.lax.scan(
+                step, final, nblocks * k + jnp.arange(rem, dtype=jnp.int32))
+        return final, traces
+    return jax.lax.scan(step, state0, ts)
+
+
+def _check_trace_mode(trace_mode: str, decimate: int) -> None:
+    if trace_mode not in TRACE_MODES:
+        raise ValueError(f"unknown trace_mode {trace_mode!r}; "
+                         f"expected one of {TRACE_MODES}")
+    if decimate < 1:
+        raise ValueError(f"decimate must be >= 1, got {decimate}")
 
 
 def simulate(cfg: NetConfig, workload, scheme,
              horizon_us: Optional[float] = None, period_slots: int = 0,
-             delay_pad: int = 0, history_slots: int = 0):
-    """Run one simulation; returns (final_state, traces dict of [T] arrays).
+             delay_pad: int = 0, history_slots: int = 0,
+             trace_mode: str = "full", decimate: int = 1):
+    """Run one simulation; returns (final_state, traces dict of [T] arrays)
+    — or ``(final_state, MetricAcc)`` under ``trace_mode="metrics"``.
 
     ``workload``: a ``Workload`` (or prebuilt ``WorkloadParams``);
     ``scheme``: a registered name or ``Scheme`` instance.
     ``delay_pad``/``history_slots`` override the static ring sizes (0 = size
     for ``cfg``) — pass the batch padding to reproduce a ``simulate_batch``
-    cell bit-for-bit.
+    cell bit-for-bit. ``trace_mode``/``decimate``: see the module docstring.
     """
     if isinstance(scheme, str):
         import warnings
@@ -324,27 +487,28 @@ def simulate(cfg: NetConfig, workload, scheme,
             "remain first-class in the batched sweep APIs)",
             DeprecationWarning, stacklevel=2)
     scheme = get_scheme(scheme)
-    horizon = horizon_us if horizon_us is not None else cfg.horizon_us
-    steps = int(round(horizon / cfg.dt_us))
+    _check_trace_mode(trace_mode, decimate)
+    steps = cfg.horizon_steps(horizon_us)
     wlp = workload if isinstance(workload, WorkloadParams) \
         else workload.params()
     wlp = WorkloadParams(*(jnp.asarray(v) for v in wlp))
     return _run_traced(cfg, wlp, scheme, steps, period_slots,
-                       delay_pad, history_slots)
+                       delay_pad, history_slots, trace_mode, decimate,
+                       int(steps * WARMUP_FRAC))
 
 
 @partial(jax.jit, static_argnames=("scheme", "steps", "period_slots", "cfg",
-                                   "delay_pad", "history_slots"))
+                                   "delay_pad", "history_slots", "mode",
+                                   "decimate", "warm"))
 def _run_traced(cfg, wlp, scheme, steps, period_slots,
-                delay_pad=0, history_slots=0):
+                delay_pad=0, history_slots=0, mode="full", decimate=1,
+                warm=0):
     f = wlp.is_inter.shape[0]
     state0 = init_state(cfg, f, delay_pad=delay_pad,
                         history_slots=history_slots, scheme=scheme)
     step = make_step_fn(cfg, wlp, scheme, period_slots,
                         delay_pad=delay_pad)
-    final, traces = jax.lax.scan(step, state0,
-                                 jnp.arange(steps, dtype=jnp.int32))
-    return final, traces
+    return _scan_with_mode(step, scheme, state0, steps, mode, decimate, warm)
 
 
 # ---------------------------------------------------------------------------
@@ -360,8 +524,40 @@ def batch_padding(cfgs: Sequence[NetConfig]):
     return delay_pad, default_history_slots(far)
 
 
+def shard_scenario_axis(params: NetParams, wlp: WorkloadParams,
+                        devices: Optional[Sequence] = None):
+    """Place stacked [B]-leading scenario leaves so the batch axis is split
+    across ``devices`` (default: all of ``jax.devices()``). The computation
+    is embarrassingly parallel along [B], so a jit over the sharded inputs
+    partitions the whole vmapped scan with zero cross-device traffic.
+    Requires the device count to divide B (even split); no-op on a single
+    device."""
+    devices = list(devices) if devices is not None else jax.devices()
+    if len(devices) <= 1:
+        return params, wlp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+    b = int(np.shape(params.one_way_delay_us)[0])
+    if b % len(devices):
+        raise ValueError(
+            f"shard_scenario_axis: {len(devices)} devices do not evenly "
+            f"split a batch of {b} scenarios — pad the batch to a device "
+            f"multiple (runner launch plans do this automatically)")
+    mesh = Mesh(np.array(devices), ("scenario",))
+
+    def put(x):
+        x = jnp.asarray(x)
+        spec = PartitionSpec("scenario", *([None] * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, params), jax.tree.map(put, wlp)
+
+
 def simulate_batch(cfgs: Sequence[NetConfig], workload, scheme,
-                   horizon_us: Optional[float] = None, period_slots: int = 0):
+                   horizon_us: Optional[float] = None, period_slots: int = 0,
+                   trace_mode: str = "full", decimate: int = 1,
+                   delay_pad: int = 0, history_slots: int = 0,
+                   devices: Optional[Sequence] = None,
+                   warm_steps: Optional[int] = None):
     """Run a whole scenario grid as ONE vmapped computation.
 
     ``cfgs``: the per-scenario configs (distance / capacity / buffer grids);
@@ -372,29 +568,45 @@ def simulate_batch(cfgs: Sequence[NetConfig], workload, scheme,
     ``WorkloadParams``), or a prebuilt [B, F] ``WorkloadParams`` — the
     workload axis is vmapped jointly with the config axis.
     One compile per (scheme, grid-shape); every cell runs in a single
-    device launch. Returns (final_states, traces) with a leading [B] axis
-    on every leaf.
+    device launch (sharded across devices whenever the device count
+    evenly splits B). Returns (final_states, traces) with a leading [B]
+    axis on every leaf — or ``(final_states, MetricAcc)`` under
+    ``trace_mode="metrics"`` (O(B) device memory, no [B, T] arrays).
+    ``delay_pad``/``history_slots`` set MINIMUM static ring sizes (so
+    chunked launches of one big grid share a compiled program);
+    ``warm_steps`` overrides the warm-up cutoff of the streaming
+    reductions (default ``WARMUP_FRAC`` of the horizon).
     """
     cfgs = list(cfgs)
     if not cfgs:
         raise ValueError("simulate_batch: empty config batch")
     scheme = get_scheme(scheme)
+    _check_trace_mode(trace_mode, decimate)
     tmpl = batch_template(cfgs)
-    horizon = horizon_us if horizon_us is not None else max(
-        c.horizon_us for c in cfgs)
-    steps = int(round(horizon / tmpl.dt_us))
-    delay_pad, history_slots = batch_padding(cfgs)
+    steps = tmpl.horizon_steps(
+        horizon_us if horizon_us is not None
+        else max(c.horizon_us for c in cfgs))
+    warm = int(steps * WARMUP_FRAC) if warm_steps is None else int(warm_steps)
+    dp, hs = batch_padding(cfgs)
+    delay_pad, history_slots = max(delay_pad, dp), max(history_slots, hs)
     params = stack_net_params(cfgs)
     wlp = as_workload_batch(workload, len(cfgs))
-    wlp = WorkloadParams(*(jnp.asarray(v) for v in wlp))
+    # fresh host-backed buffers: the jitted runner donates its batch inputs
+    # (harmless on CPU where donation is skipped), so caller-held device
+    # arrays must never be passed through as-is
+    params = NetParams(*(jnp.asarray(np.asarray(v)) for v in params))
+    wlp = WorkloadParams(*(jnp.asarray(np.asarray(v)) for v in wlp))
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) > 1 and len(cfgs) % len(devs) == 0:
+        params, wlp = shard_scenario_axis(params, wlp, devs)
     return _run_traced_batch(tmpl, params, wlp, scheme, steps,
-                             period_slots, delay_pad, history_slots)
+                             period_slots, delay_pad, history_slots,
+                             trace_mode, decimate, warm)
 
 
-@partial(jax.jit, static_argnames=("cfg", "scheme", "steps", "period_slots",
-                                   "delay_pad", "history_slots"))
-def _run_traced_batch(cfg, params, wlp, scheme, steps, period_slots,
-                      delay_pad, history_slots):
+def _run_traced_batch_impl(cfg, params, wlp, scheme, steps, period_slots,
+                           delay_pad, history_slots, mode="full",
+                           decimate=1, warm=0):
     f = wlp.is_inter.shape[-1]
 
     def one_scenario(p, w):
@@ -402,6 +614,30 @@ def _run_traced_batch(cfg, params, wlp, scheme, steps, period_slots,
                             history_slots=history_slots, scheme=scheme)
         step = make_step_fn(cfg, w, scheme, period_slots,
                             params=p, delay_pad=delay_pad)
-        return jax.lax.scan(step, state0, jnp.arange(steps, dtype=jnp.int32))
+        return _scan_with_mode(step, scheme, state0, steps, mode, decimate,
+                               warm)
 
     return jax.vmap(one_scenario)(params, wlp)
+
+
+@lru_cache(maxsize=1)
+def _jitted_traced_batch():
+    """Build the jitted batch runner on FIRST use, not at import: the
+    donation decision needs ``jax.default_backend()``, which initializes
+    the backend — importing ``repro.netsim`` must never do that. The
+    stacked batch inputs are donated so giant-grid chunk launches reuse
+    their buffers in place (XLA ignores donation on CPU and would warn
+    about it, hence none there)."""
+    donate = () if jax.default_backend() == "cpu" else (1, 2)
+    return partial(jax.jit,
+                   static_argnames=("cfg", "scheme", "steps", "period_slots",
+                                    "delay_pad", "history_slots", "mode",
+                                    "decimate", "warm"),
+                   donate_argnums=donate)(_run_traced_batch_impl)
+
+
+def _run_traced_batch(*args, **kwargs):
+    return _jitted_traced_batch()(*args, **kwargs)
+
+
+_run_traced_batch._cache_size = lambda: _jitted_traced_batch()._cache_size()

@@ -1,40 +1,62 @@
 """Experiment runner: simulate + extract the paper's Fig. 3 metrics.
 
-The batched path is canonical: ``run_experiment_batch`` executes a whole
-scenario grid — heterogeneous configs AND workloads (``Scenario``) — in ONE
-vmapped device launch per scheme and extracts the Fig. 3 metric set
-batch-wide in one numpy pass over the [B, T] traces. ``sweep`` /
-``sweep_grid`` are built on it.
+The batched path is canonical: every grid — heterogeneous configs AND
+workloads (``Scenario``) — executes through a *launch plan*: the scenario
+axis is stacked once, split into equal-size chunks (auto-sized so a launch's
+trace block stays in bounded memory), and each (scheme, chunk) pair becomes
+one vmapped device launch. All chunks of a grid share one compiled program
+(the last chunk is padded by repeating its final cell) and shard across
+devices whenever the chunk divides the device count.
 
-``run_experiment`` remains as the single-cell entry; ``_metrics_row`` is
-its per-cell fallback extractor. Passing a scheme NAME to the single-cell
-entrypoints is deprecated (resolve through ``repro.netsim.schemes
-.get_scheme`` instead); names remain first-class for the grid APIs, where
-``schemes=("dcqcn", "matchrdma")`` is the natural spelling.
+Execution modes (``trace_mode`` — see ``fluid.py``):
+  * ``full``     [B, T] traces materialize; metrics come from one vectorized
+                 numpy pass (``_metrics_batch``).
+  * ``decimate`` every k-th step materializes; same extractor, approximate
+                 means/percentiles.
+  * ``metrics``  nothing per-step ever exists: the scan carry streams the
+                 Fig. 3 reductions (``MetricAcc``) and only O(B) accumulators
+                 + final states transfer to host (``_metrics_streaming``).
+                 Schemes append their own columns via
+                 ``Scheme.finalize_metrics``.
+
+``run_experiment`` is a thin B=1 delegation onto the same batch-wide
+extractors — there is exactly one copy of the Fig. 3 metric definitions.
+Passing a scheme NAME to the single-cell entrypoints is deprecated (resolve
+through ``repro.netsim.schemes.get_scheme``); names remain first-class for
+the grid APIs, where ``schemes=("dcqcn", "matchrdma")`` is the natural
+spelling.
 """
 from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence
 
+import jax
 import numpy as np
 
-from repro.config.base import NetConfig
-from repro.netsim.fluid import simulate, simulate_batch
+from repro.config.base import NetConfig, batch_template
+from repro.netsim.fluid import (
+    WARMUP_FRAC, MetricAcc, batch_padding, hist_quantile, simulate_batch,
+)
 from repro.netsim.schemes import get_scheme
 from repro.netsim.workload import (
     BIG, Workload, WorkloadParams, as_workload_batch,
 )
 
-WARMUP_FRAC = 0.1   # discard the initial transient for steady-state metrics
+# Auto-chunk targets of the launch plan: a full-trace launch keeps its
+# materialized [B_chunk, T] block under ~256 MB of f32; a streaming launch
+# is O(B) anyway and only caps per-launch compile/host-row cost.
+MAX_TRACE_FLOATS = 64 * 1024 * 1024
+METRICS_CHUNK_CELLS = 4096
+_TRACE_KEYS_EST = 12        # 8 engine trace keys + scheme extras (estimate)
 
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """One cell of the unified scenario axis: a network config AND the
     workload that runs over it. ``sweep_grid`` accepts heterogeneous
-    ``Scenario`` grids and executes them in one launch per scheme."""
+    ``Scenario`` grids and executes them in one launch plan per scheme."""
     net: NetConfig
     workload: Workload
 
@@ -47,74 +69,20 @@ def _warn_string_scheme(fn_name: str) -> None:
         DeprecationWarning, stacklevel=3)
 
 
-def _metrics_row(cfg: NetConfig, wl: WorkloadParams, scheme_name: str,
-                 final_np: dict, traces_np: dict) -> Dict[str, float]:
-    """Fig. 3 metric set from one cell's numpy traces/final state — the
-    single-cell fallback of the batch-wide extractor below."""
-    steps = traces_np["q_dst"].shape[0]
-    warm = int(steps * WARMUP_FRAC)
-
-    is_inter = np.asarray(wl.is_inter) > 0
-    delivered = final_np["delivered"]
-    done_at = final_np["done_at_us"]
-    start = np.asarray(wl.start_us)
-
-    # throughput: steady-state inter-DC goodput (bytes/s and Gbps)
-    thr = float(traces_np["thr_inter"][warm:].mean())
-    # destination-OTN runtime buffer occupancy
-    q_dst = traces_np["q_dst"]
-    # pause-time ratio: fraction of time the long-haul PFC pause is asserted
-    pause_ratio = float(traces_np["pause_dst"][warm:].mean())
-    # FCT of finite inter-DC flows
-    finite = is_inter & (np.asarray(wl.total_bytes) < BIG / 2)
-    if finite.any():
-        fct = done_at[finite] - start[finite]
-        completed = np.isfinite(fct) & (fct < 1e29)
-        avg_fct = float(fct[completed].mean()) if completed.any() else float("inf")
-        completion = float(completed.mean())
-    else:
-        avg_fct, completion = float("nan"), 1.0
-
-    return {
-        "scheme": scheme_name,
-        "distance_km": cfg.distance_km,
-        "throughput_gbps": thr * 8.0 / 1e9,
-        "goodput_bytes": float(delivered[is_inter].sum()),
-        "peak_buffer_mb": float(q_dst.max()) / 1e6,
-        "mean_buffer_mb": float(q_dst[warm:].mean()) / 1e6,
-        "p99_buffer_mb": float(np.percentile(q_dst[warm:], 99)) / 1e6,
-        "pause_ratio": pause_ratio,
-        "avg_fct_us": avg_fct,
-        "completion_frac": completion,
-        "intra_thr_gbps": float(traces_np["thr_intra"][warm:].mean()) * 8.0 / 1e9,
-    }
+# ---------------------------------------------------------------------------
+# Metric extraction (batch-wide; the ONLY copies of the Fig. 3 metric set)
+# ---------------------------------------------------------------------------
 
 
-def _metrics_batch(cfgs: Sequence[NetConfig], wl: WorkloadParams,
-                   scheme_name: str, final_np: dict,
-                   traces_np: dict) -> List[Dict[str, float]]:
-    """Fig. 3 metric set for a whole batch in ONE vectorized pass.
-
-    ``traces_np``: [B, T] arrays; ``final_np``: [B, F]; ``wl``: stacked
-    [B, F] workload leaves (padded flows carry ``is_inter == 0`` and
-    ``total_bytes == 0``, so they drop out of every mask below).
-    """
-    steps = traces_np["q_dst"].shape[1]
-    warm = int(steps * WARMUP_FRAC)
-
-    thr = traces_np["thr_inter"][:, warm:].mean(axis=1)            # [B]
-    intra_thr = traces_np["thr_intra"][:, warm:].mean(axis=1)
-    q_dst = traces_np["q_dst"]
-    peak = q_dst.max(axis=1)
-    mean = q_dst[:, warm:].mean(axis=1)
-    p99 = np.percentile(q_dst[:, warm:], 99, axis=1)
-    pause = traces_np["pause_dst"][:, warm:].mean(axis=1)
-
+def _flow_metrics(wl: WorkloadParams, final_np: dict):
+    """[B] goodput / avg-FCT / completion from final state + workload
+    leaves — per-flow quantities that never needed per-step traces. Padded
+    flows carry ``is_inter == 0`` and ``total_bytes == 0`` and drop out of
+    every mask."""
     is_inter = np.asarray(wl.is_inter) > 0                         # [B, F]
     delivered = final_np["delivered"]
     goodput = np.where(is_inter, delivered, 0.0).sum(axis=1)
 
-    # FCT of finite inter-DC flows, batch-wide with masked reductions
     total = np.asarray(wl.total_bytes)
     start = np.asarray(wl.start_us)
     done_at = final_np["done_at_us"]
@@ -129,75 +97,251 @@ def _metrics_batch(cfgs: Sequence[NetConfig], wl: WorkloadParams,
     avg_fct = np.where(n_finite > 0, avg_fct, np.nan)
     completion = np.where(n_finite > 0,
                           n_completed / np.maximum(n_finite, 1), 1.0)
+    return goodput, avg_fct, completion
 
-    return [
-        {
-            "scheme": scheme_name,
-            "distance_km": cfg.distance_km,
-            "throughput_gbps": float(thr[i]) * 8.0 / 1e9,
-            "goodput_bytes": float(goodput[i]),
-            "peak_buffer_mb": float(peak[i]) / 1e6,
-            "mean_buffer_mb": float(mean[i]) / 1e6,
-            "p99_buffer_mb": float(p99[i]) / 1e6,
-            "pause_ratio": float(pause[i]),
-            "avg_fct_us": float(avg_fct[i]),
-            "completion_frac": float(completion[i]),
-            "intra_thr_gbps": float(intra_thr[i]) * 8.0 / 1e9,
-        }
-        for i, cfg in enumerate(cfgs)
-    ]
+
+def _assemble_rows(cfgs: Sequence[NetConfig], scheme_name: str,
+                   cols: dict, extra: Optional[dict] = None
+                   ) -> List[Dict[str, float]]:
+    """[B]-column dicts -> the per-cell row list of a sweep."""
+    rows = []
+    for i, cfg in enumerate(cfgs):
+        row = {"scheme": scheme_name, "distance_km": cfg.distance_km}
+        row.update({k: float(v[i]) for k, v in cols.items()})
+        if extra:
+            row.update({k: float(np.asarray(v)[i]) for k, v in extra.items()})
+        rows.append(row)
+    return rows
+
+
+def _metrics_batch(cfgs: Sequence[NetConfig], wl: WorkloadParams,
+                   scheme_name: str, final_np: dict,
+                   traces_np: dict) -> List[Dict[str, float]]:
+    """Fig. 3 metric set from materialized [B, T] traces in ONE vectorized
+    pass (``trace_mode="full"``/``"decimate"``)."""
+    steps = traces_np["q_dst"].shape[1]
+    warm = int(steps * WARMUP_FRAC)
+
+    q_dst = traces_np["q_dst"]
+    goodput, avg_fct, completion = _flow_metrics(wl, final_np)
+    cols = {
+        "throughput_gbps":
+            traces_np["thr_inter"][:, warm:].mean(axis=1) * 8.0 / 1e9,
+        "goodput_bytes": goodput,
+        "peak_buffer_mb": q_dst.max(axis=1) / 1e6,
+        "mean_buffer_mb": q_dst[:, warm:].mean(axis=1) / 1e6,
+        "p99_buffer_mb": np.percentile(q_dst[:, warm:], 99, axis=1) / 1e6,
+        "pause_ratio": traces_np["pause_dst"][:, warm:].mean(axis=1),
+        "avg_fct_us": avg_fct,
+        "completion_frac": completion,
+        "intra_thr_gbps":
+            traces_np["thr_intra"][:, warm:].mean(axis=1) * 8.0 / 1e9,
+    }
+    return _assemble_rows(cfgs, scheme_name, cols)
+
+
+def _metrics_streaming(cfgs: Sequence[NetConfig], wl: WorkloadParams,
+                       scheme, final_np: dict, acc: MetricAcc,
+                       steps: int, warm: int) -> List[Dict[str, float]]:
+    """The same Fig. 3 metric set from the O(B) streamed accumulators
+    (``trace_mode="metrics"`` — no [B, T] array ever existed). p99 comes
+    from inverting the fixed-bin log-histogram (bounded relative error);
+    everything else is exact up to summation order."""
+    n_warm = max(steps - warm, 1)
+    sums = {k: np.asarray(v, np.float64) for k, v in acc.sum_s.items()}
+    goodput, avg_fct, completion = _flow_metrics(wl, final_np)
+    cols = {
+        "throughput_gbps": sums["thr_inter"] / n_warm * 8.0 / 1e9,
+        "goodput_bytes": goodput,
+        "peak_buffer_mb": np.asarray(acc.maxes["q_dst"]) / 1e6,
+        "mean_buffer_mb": sums["q_dst"] / n_warm / 1e6,
+        "p99_buffer_mb": hist_quantile(acc.hist, 0.99) / 1e6,
+        "pause_ratio": sums["pause_dst"] / n_warm,
+        "avg_fct_us": avg_fct,
+        "completion_frac": completion,
+        "intra_thr_gbps": sums["thr_intra"] / n_warm * 8.0 / 1e9,
+    }
+    extra = scheme.finalize_metrics(
+        jax.tree.map(np.asarray, acc.scheme), steps, n_warm)
+    return _assemble_rows(cfgs, scheme.name, cols, extra)
+
+
+# ---------------------------------------------------------------------------
+# The launch plan: (scheme x chunk) device launches over a stacked grid
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _Launch:
+    """One device launch of a sweep's plan: ``scheme`` over grid cells
+    [lo, hi), padded up to ``pad_to`` cells so every chunk of a grid shares
+    one compiled program (padding rows are dropped from the output)."""
+    scheme: object
+    lo: int
+    hi: int
+    pad_to: int
+
+
+def _chunk_cells(steps: int, trace_mode: str, decimate: int,
+                 chunk_cells: Optional[int], n_devices: int) -> int:
+    """Cells per launch: explicit override, else the bounded-memory auto
+    size; rounded up to a device multiple so chunked grids still shard.
+    (Not clamped to the grid size — ``_plan_launches`` caps the final
+    chunk at the cell count.)"""
+    if chunk_cells is None:
+        if trace_mode == "metrics":
+            chunk_cells = METRICS_CHUNK_CELLS
+        else:
+            t = max(steps // max(decimate, 1), 1)
+            chunk_cells = max(MAX_TRACE_FLOATS // (t * _TRACE_KEYS_EST), 1)
+    chunk_cells = max(int(chunk_cells), 1)
+    if n_devices > 1:
+        chunk_cells = -(-chunk_cells // n_devices) * n_devices
+    return chunk_cells
+
+
+def _plan_launches(n_cells: int, schemes: Sequence, chunk: int,
+                   n_devices: int = 1) -> List[_Launch]:
+    """Flatten (scheme x chunk) into the launch list — the per-scheme
+    Python loop of the old sweep path, folded into explicit plan entries.
+    Every launch pads to a device multiple so the scenario axis always
+    splits evenly across devices (padding rows are dropped)."""
+    pad_to = chunk if n_cells > chunk else n_cells
+    if n_devices > 1:
+        pad_to = -(-pad_to // n_devices) * n_devices
+    return [_Launch(s, lo, min(lo + chunk, n_cells), pad_to)
+            for s in schemes for lo in range(0, n_cells, chunk)]
+
+
+def _pad_chunk(cfgs, wlp: WorkloadParams, n: int):
+    """Pad a trailing chunk to ``n`` cells by repeating its last cell (the
+    duplicate rows are dropped after the launch)."""
+    pad = n - len(cfgs)
+    if pad <= 0:
+        return cfgs, wlp
+    leaves = [np.asarray(v) for v in wlp]
+    wlp = WorkloadParams(*(np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
+                           for v in leaves))
+    return list(cfgs) + [cfgs[-1]] * pad, wlp
+
+
+def _grid_static(cfgs, horizon_us, delay_pad: int, history_slots: int):
+    """The grid-wide static quantities every launch of a plan shares —
+    resolved horizon, scan length, warm cutoff, ring paddings — computed
+    ONCE over the WHOLE grid. Chunks must never re-derive them from their
+    own sub-grid, or chunked launches would stop sharing one compiled
+    program (and streaming normalizers would drift from the scan length)."""
+    dp, hs = batch_padding(cfgs)
+    horizon = (horizon_us if horizon_us is not None
+               else max(c.horizon_us for c in cfgs))
+    steps = batch_template(cfgs).horizon_steps(horizon)
+    return (horizon, steps, int(steps * WARMUP_FRAC),
+            max(delay_pad, dp), max(history_slots, hs))
+
+
+def _execute_plan(plan: Sequence[_Launch], cfgs, wlp: WorkloadParams,
+                  grid_static, period_slots, trace_mode, decimate,
+                  devices) -> Dict[object, list]:
+    """Run every launch; returns scheme -> full row list (grid order).
+    ``grid_static`` is the shared ``_grid_static`` tuple, so all chunks
+    (and all schemes) see identical static shapes, hence one compiled
+    program per scheme."""
+    horizon, steps, warm, delay_pad, history_slots = grid_static
+    wlp_np = [np.asarray(v) for v in wlp]
+
+    rows: Dict[object, list] = {}
+    for launch in plan:
+        sub_cfgs = cfgs[launch.lo:launch.hi]
+        sub_wlp = WorkloadParams(*(v[launch.lo:launch.hi] for v in wlp_np))
+        n_real = len(sub_cfgs)
+        sub_cfgs, sub_wlp = _pad_chunk(sub_cfgs, sub_wlp, launch.pad_to)
+        final, aux = simulate_batch(
+            sub_cfgs, sub_wlp, launch.scheme, horizon, period_slots,
+            trace_mode=trace_mode, decimate=decimate,
+            delay_pad=delay_pad, history_slots=history_slots,
+            devices=devices, warm_steps=warm)
+        final_np = {"delivered": np.asarray(final.delivered),
+                    "done_at_us": np.asarray(final.done_at_us)}
+        wl_np = WorkloadParams(*(np.asarray(v) for v in sub_wlp))
+        if trace_mode == "metrics":
+            sub_rows = _metrics_streaming(sub_cfgs, wl_np, launch.scheme,
+                                          final_np, aux, steps, warm)
+        else:
+            traces_np = {k: np.asarray(v) for k, v in aux.items()}
+            sub_rows = _metrics_batch(sub_cfgs, wl_np, launch.scheme.name,
+                                      final_np, traces_np)
+        rows.setdefault(launch.scheme, []).extend(sub_rows[:n_real])
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Public entrypoints
+# ---------------------------------------------------------------------------
 
 
 def run_experiment(cfg: NetConfig, workload: Workload, scheme,
                    horizon_us: Optional[float] = None,
                    period_slots: int = 0, delay_pad: int = 0,
-                   history_slots: int = 0) -> Dict[str, float]:
-    """Returns the Fig. 3 metric set for one (config, workload, scheme).
+                   history_slots: int = 0, *,
+                   trace_mode: str = "full",
+                   decimate: int = 1) -> Dict[str, float]:
+    """Returns the Fig. 3 metric set for one (config, workload, scheme) —
+    a B=1 delegation onto the batch-wide extractors (one copy of the
+    metric definitions, no single-cell fork).
 
-    Thin shim over the Scheme/Scenario engine; ``scheme`` as a bare name
-    string is deprecated here (pass ``get_scheme(name)``).
-    ``delay_pad``/``history_slots``: see ``fluid.simulate`` — pass a batch's
-    padding to reproduce one of its cells exactly."""
+    ``scheme`` as a bare name string is deprecated here (pass
+    ``get_scheme(name)``). ``delay_pad``/``history_slots``: minimum static
+    ring sizes — pass a batch's padding to reproduce one of its cells
+    exactly."""
     if isinstance(scheme, str):
         _warn_string_scheme("run_experiment")
     scheme = get_scheme(scheme)
-    final, traces = simulate(cfg, workload, scheme, horizon_us, period_slots,
-                             delay_pad=delay_pad, history_slots=history_slots)
-    traces_np = {k: np.asarray(v) for k, v in traces.items()}
-    final_np = {"delivered": np.asarray(final.delivered),
-                "done_at_us": np.asarray(final.done_at_us)}
-    return _metrics_row(cfg, workload.params(), scheme.name,
-                        final_np, traces_np)
+    return run_experiment_batch(
+        [cfg], workload, scheme, horizon_us, period_slots,
+        trace_mode=trace_mode, decimate=decimate, delay_pad=delay_pad,
+        history_slots=history_slots)[0]
 
 
 def run_experiment_batch(cfgs: Sequence[NetConfig], workload, scheme,
                          horizon_us: Optional[float] = None,
-                         period_slots: int = 0) -> List[Dict[str, float]]:
-    """Fig. 3 metrics for every scenario of a grid, from ONE device launch
-    and one vectorized metric pass. ``workload``: shared ``Workload``,
-    per-scenario sequence, or stacked ``WorkloadParams`` (see
-    ``fluid.simulate_batch``)."""
+                         period_slots: int = 0, *,
+                         trace_mode: str = "full", decimate: int = 1,
+                         chunk_cells: Optional[int] = None,
+                         devices: Optional[Sequence] = None,
+                         delay_pad: int = 0,
+                         history_slots: int = 0) -> List[Dict[str, float]]:
+    """Fig. 3 metrics for every scenario of a grid, from a chunked launch
+    plan (one compiled program per scheme) and one vectorized metric pass
+    per launch. ``workload``: shared ``Workload``, per-scenario sequence,
+    or stacked ``WorkloadParams`` (see ``fluid.simulate_batch``).
+
+    ``trace_mode="metrics"`` streams all reductions in-scan: device memory
+    is O(B), no [B, T] trace array is ever allocated or transferred, and
+    scheme-streamed columns (``Scheme.finalize_metrics``) join the rows.
+    ``chunk_cells`` caps cells per device launch (None = bounded-memory
+    auto size); ``devices`` restricts sharding of the scenario axis."""
     cfgs = list(cfgs)
     scheme = get_scheme(scheme)
     wlp = as_workload_batch(workload, len(cfgs))
-    final, traces = simulate_batch(cfgs, wlp, scheme, horizon_us,
-                                   period_slots)
-    traces_np = {k: np.asarray(v) for k, v in traces.items()}      # [B, T]
-    final_np = {"delivered": np.asarray(final.delivered),          # [B, F]
-                "done_at_us": np.asarray(final.done_at_us)}
-    wlp_np = WorkloadParams(*(np.asarray(v) for v in wlp))
-    return _metrics_batch(cfgs, wlp_np, scheme.name, final_np, traces_np)
+    grid_static = _grid_static(cfgs, horizon_us, delay_pad, history_slots)
+    n_dev = len(devices) if devices is not None else len(jax.devices())
+    chunk = _chunk_cells(grid_static[1], trace_mode, decimate,
+                         chunk_cells, n_dev)
+    plan = _plan_launches(len(cfgs), (scheme,), chunk, n_dev)
+    return _execute_plan(plan, cfgs, wlp, grid_static, period_slots,
+                         trace_mode, decimate, devices)[scheme]
 
 
 def sweep(cfg: NetConfig, workload: Workload, schemes, distances_km,
-          horizon_us: Optional[float] = None, period_slots: int = 0):
+          horizon_us: Optional[float] = None, period_slots: int = 0, **kw):
     """Cartesian (distance x scheme) sweep; returns list of metric dicts in
     the order ``for d in distances: for s in schemes``.
 
-    Batched execution: each scheme's whole distance grid is one vmapped
-    launch (one compile per scheme). All cells share one horizon — the
+    Batched execution: each scheme's whole distance grid is one launch
+    plan (one compile per scheme). All cells share one horizon — the
     longest any distance needs for CC convergence — so short-distance cells
-    simply observe a longer steady state.
+    simply observe a longer steady state. Keyword extras (``trace_mode``,
+    ``chunk_cells``, ``devices``, ...) pass through to ``sweep_grid``.
     """
     cfgs = [dataclasses.replace(cfg, distance_km=float(d))
             for d in distances_km]
@@ -206,13 +350,18 @@ def sweep(cfg: NetConfig, workload: Workload, schemes, distances_km,
         # at least 20 RTTs + fixed floor so CC converges at any distance
         h = max(cfg.horizon_us,
                 40.0 * max(c.one_way_delay_us for c in cfgs) + 20_000.0)
-    return sweep_grid(cfgs, workload, schemes, h, period_slots)
+    return sweep_grid(cfgs, workload, schemes, h, period_slots, **kw)
 
 
 def sweep_grid(scenarios, workload=None, schemes=(),
-               horizon_us: Optional[float] = None, period_slots: int = 0):
-    """Heterogeneous scenario grids × schemes — one vmapped launch per
-    scheme. Returns rows in the order ``for scenario: for scheme``.
+               horizon_us: Optional[float] = None, period_slots: int = 0, *,
+               trace_mode: str = "full", decimate: int = 1,
+               chunk_cells: Optional[int] = None,
+               devices: Optional[Sequence] = None):
+    """Heterogeneous scenario grids × schemes, executed as ONE launch plan:
+    the grid is stacked once, chunked once, and every (scheme, chunk) pair
+    is a device launch sharing the grid-wide static shapes. Returns rows in
+    the order ``for scenario: for scheme``.
 
     Two spellings:
       * unified axis — ``sweep_grid([Scenario(cfg, wl), ...], schemes)``:
@@ -220,6 +369,11 @@ def sweep_grid(scenarios, workload=None, schemes=(),
         capacities, asymmetric buffers, different flow sets — one launch);
       * config axis only — ``sweep_grid(cfgs, shared_workload, schemes)``:
         the historical form, one workload across the grid.
+
+    ``trace_mode="metrics"`` makes the whole sweep O(B) in device memory
+    (plus per-scheme streamed columns); with auto ``chunk_cells`` a
+    10k-cell grid runs in bounded memory on a single device and shards
+    across all of ``jax.devices()`` when more are visible.
     """
     scenarios = list(scenarios)
     if not scenarios:
@@ -246,8 +400,14 @@ def sweep_grid(scenarios, workload=None, schemes=(),
         raise ValueError(
             "sweep_grid: no schemes given — pass schemes=(\"dcqcn\", ...) "
             "(or positionally after the Scenario grid)")
-    by_scheme = {i: run_experiment_batch(cfgs, wl, s, horizon_us,
-                                         period_slots)
-                 for i, s in enumerate(schemes)}
-    n = len(schemes)
-    return [by_scheme[j][i] for i in range(len(cfgs)) for j in range(n)]
+    scheme_objs = [get_scheme(s) for s in schemes]
+    wlp = as_workload_batch(wl, len(cfgs))
+    grid_static = _grid_static(cfgs, horizon_us, 0, 0)
+    n_dev = len(devices) if devices is not None else len(jax.devices())
+    chunk = _chunk_cells(grid_static[1], trace_mode, decimate,
+                         chunk_cells, n_dev)
+    plan = _plan_launches(len(cfgs), scheme_objs, chunk, n_dev)
+    by_scheme = _execute_plan(plan, cfgs, wlp, grid_static, period_slots,
+                              trace_mode, decimate, devices)
+    return [by_scheme[s][i]
+            for i in range(len(cfgs)) for s in scheme_objs]

@@ -39,6 +39,17 @@ Hook contract (all jnp expressions; traced under vmap over scenarios):
                          brake, slot/budget/channel machinery).
   ``rtt_scale``          optional per-flow DCQCN fairness factor (THEMIS).
   ``extra_traces``       scheme-owned additions to the per-step trace dict.
+
+Streaming-metric hooks (``trace_mode="metrics"`` — the O(B) execution mode
+that never materializes [B, T] traces):
+
+  ``init_metric_acc``    scheme-private accumulator pytree carried in
+                         ``MetricAcc.scheme`` through the scan.
+  ``accumulate_metrics`` per-step in-scan reduction update (runs under vmap
+                         over scenarios, like every other hook).
+  ``finalize_metrics``   host-side (numpy) conversion of the accumulated
+                         leaves into named per-cell metric columns, merged
+                         into the sweep rows.
 """
 from __future__ import annotations
 
@@ -174,6 +185,39 @@ class Scheme:
                 "budget": state.extra.budget.budget,
                 "budget_at_src": state.extra.budget_at_src,
             }
+        return {}
+
+    # -- streaming-metric hooks (trace_mode="metrics") ---------------------
+    def init_metric_acc(self, ctx: SchemeCtx, state) -> dict:
+        """Scheme-private streaming accumulator (a dict pytree so subclass
+        overrides can merge ``super()``'s entries). Mirrors ``extra_traces``:
+        the default streams the destination budget's warm-step sum whenever
+        the extra block is the shared MatchRDMA state, so every scheme that
+        inherits the default extra state gets a ``mean_budget_gbps`` column
+        for free."""
+        if isinstance(state.extra, MatchRdmaState):
+            return {"budget_sum": jnp.float32(0.0)}
+        return {}
+
+    def accumulate_metrics(self, ctx: SchemeCtx, acc: dict, state,
+                           out: dict, inc: jax.Array) -> dict:
+        """Fold one step into the accumulator. ``state`` is the post-step
+        ``SimState``, ``out`` the step's trace dict, ``inc`` is 1.0 on
+        steps past the warm-up cutoff (multiply sums by it)."""
+        if "budget_sum" in acc:
+            acc = dict(acc,
+                       budget_sum=acc["budget_sum"]
+                       + state.extra.budget.budget * inc)
+        return acc
+
+    def finalize_metrics(self, acc: dict, n_steps: int, n_warm: int) -> dict:
+        """Host-side: numpy-ified accumulator leaves ([B]-leading) -> dict
+        of per-cell metric columns to merge into the sweep rows."""
+        if "budget_sum" in acc:
+            import numpy as np
+            return {"mean_budget_gbps":
+                    np.asarray(acc["budget_sum"]) / max(n_warm, 1)
+                    * 8.0 / 1e9}
         return {}
 
     def __repr__(self):

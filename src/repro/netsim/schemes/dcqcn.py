@@ -8,15 +8,38 @@ short intra-DC feedback loop cannot starve them.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+import numpy as np
+
 from repro.core.cc_proxy import themis_rtt_scale
 from repro.netsim.schemes.base import Scheme, SchemeCtx
 
 
 class DcqcnScheme(Scheme):
-    """Conventional e2e RDMA — the paper's primary baseline."""
+    """Conventional e2e RDMA — the paper's primary baseline.
+
+    Streams the mean inter-DC DCQCN sender rate (the quantity the
+    long-feedback-loop bottleneck suppresses) as ``mean_cc_rate_gbps``.
+    """
+
+    def init_metric_acc(self, ctx: SchemeCtx, state) -> dict:
+        return dict(super().init_metric_acc(ctx, state),
+                    cc_rate_sum=jnp.float32(0.0))
+
+    def accumulate_metrics(self, ctx: SchemeCtx, acc, state, out, inc):
+        acc = super().accumulate_metrics(ctx, acc, state, out, inc)
+        n_inter = jnp.maximum(jnp.sum(ctx.is_inter), 1.0)
+        rc = jnp.sum(state.cc.rc * ctx.is_inter) / n_inter
+        return dict(acc, cc_rate_sum=acc["cc_rate_sum"] + rc * inc)
+
+    def finalize_metrics(self, acc: dict, n_steps: int, n_warm: int) -> dict:
+        cols = super().finalize_metrics(acc, n_steps, n_warm)
+        cols["mean_cc_rate_gbps"] = (np.asarray(acc["cc_rate_sum"])
+                                     / max(n_warm, 1) * 8.0 / 1e9)
+        return cols
 
 
-class ThemisScheme(Scheme):
+class ThemisScheme(DcqcnScheme):
     """e2e RDMA with RTT-fairness-corrected DCQCN gains."""
 
     def rtt_scale(self, ctx: SchemeCtx):

@@ -17,6 +17,7 @@ Three coordinated segments, expressed as hook overrides:
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.budget import fair_share
 from repro.core.matchrdma import (
@@ -28,6 +29,25 @@ from repro.netsim.schemes.base import Feedback, Scheme, SchemeCtx, SchemeSignals
 
 class MatchRdmaScheme(Scheme):
     """Segmented, rate-matched long-haul RDMA (the paper)."""
+
+    # -- streaming metrics: on top of the inherited destination-budget
+    # mean, stream the D-delayed budget as the SOURCE sees it — the rate
+    # the release shaping actually enforced.
+    def init_metric_acc(self, ctx: SchemeCtx, state) -> dict:
+        return dict(super().init_metric_acc(ctx, state),
+                    budget_at_src_sum=jnp.float32(0.0))
+
+    def accumulate_metrics(self, ctx: SchemeCtx, acc, state, out, inc):
+        acc = super().accumulate_metrics(ctx, acc, state, out, inc)
+        return dict(acc, budget_at_src_sum=acc["budget_at_src_sum"]
+                    + state.extra.budget_at_src * inc)
+
+    def finalize_metrics(self, acc: dict, n_steps: int, n_warm: int) -> dict:
+        cols = super().finalize_metrics(acc, n_steps, n_warm)
+        cols["mean_budget_at_src_gbps"] = (
+            np.asarray(acc["budget_at_src_sum"]) / max(n_warm, 1)
+            * 8.0 / 1e9)
+        return cols
 
     def ack_view(self, ctx: SchemeCtx, state, ack_arr):
         return state.extra.pseudo.packed

@@ -8,6 +8,9 @@ Fig. 3(c,d). Congestion control stays end-to-end.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+import numpy as np
+
 from repro.core.budget import fair_share
 from repro.core.pseudo_ack import step_pseudo_ack
 from repro.netsim.schemes.base import Feedback, Scheme, SchemeCtx, SchemeSignals
@@ -17,6 +20,26 @@ class PseudoAckScheme(Scheme):
     """Source-OTN pseudo-ACK, ungated; CC still e2e."""
 
     gated = False
+
+    # -- streaming metrics: the pseudo-ACK "lead" — bytes acknowledged to
+    # the sender that have not actually been delivered yet. The ungated
+    # variant's lead is exactly the optimism that floods the destination
+    # OTN (Fig. 3c); the budget-gated scheme keeps it near one BDP.
+    def init_metric_acc(self, ctx: SchemeCtx, state) -> dict:
+        return dict(super().init_metric_acc(ctx, state),
+                    pseudo_lead_sum=jnp.float32(0.0))
+
+    def accumulate_metrics(self, ctx: SchemeCtx, acc, state, out, inc):
+        acc = super().accumulate_metrics(ctx, acc, state, out, inc)
+        lead = jnp.sum(jnp.maximum(
+            state.extra.pseudo.packed - state.delivered, 0.0) * ctx.is_inter)
+        return dict(acc, pseudo_lead_sum=acc["pseudo_lead_sum"] + lead * inc)
+
+    def finalize_metrics(self, acc: dict, n_steps: int, n_warm: int) -> dict:
+        cols = super().finalize_metrics(acc, n_steps, n_warm)
+        cols["mean_pseudo_lead_mb"] = (np.asarray(acc["pseudo_lead_sum"])
+                                       / max(n_warm, 1) / 1e6)
+        return cols
 
     def ack_view(self, ctx: SchemeCtx, state, ack_arr):
         # the sender sees the source OTN's pseudo-ACK ledger, one step old

@@ -236,16 +236,19 @@ def test_export_sweep_rows_strict_json(tmp_path):
 def test_unregistered_instance_labeled_and_cached():
     """A Scheme instance used directly (never registered) still yields
     labeled metric rows, and two equivalent instances share one compiled
-    scan (value-based eq/hash on the jit static arg)."""
-    from repro.netsim.fluid import _run_traced
+    scan (value-based eq/hash on the jit static arg). ``run_experiment``
+    delegates to the batched runner, so the batch jit cache is the one that
+    must not grow."""
+    from repro.netsim.fluid import _run_traced_batch
     from repro.netsim.schemes import DcqcnScheme
 
     cfg = NetConfig(distance_km=1.0)
     r = run_experiment(cfg, WL, DcqcnScheme(), 2_000.0)
     assert r["scheme"] == "DcqcnScheme"
-    n0 = _run_traced._cache_size()
+    n0 = _run_traced_batch._cache_size()
     run_experiment(cfg, WL, DcqcnScheme(), 2_000.0)   # fresh instance
-    assert _run_traced._cache_size() == n0, "equivalent instance recompiled"
+    assert _run_traced_batch._cache_size() == n0, \
+        "equivalent instance recompiled"
 
 
 def test_sweep_grid_requires_schemes():

@@ -1,0 +1,337 @@
+"""Streaming in-scan metrics (``trace_mode="metrics"``), the chunked /
+device-sharded launch plan, and the O(B) memory guarantee.
+
+Covers: streaming-vs-materialized metric parity for all four builtin
+schemes, the jaxpr proof that metrics mode allocates no [B, T] buffer,
+chunked kilocell sweeps sharing one compiled program, sharded-vs-single-
+device equivalence (subprocess, 4 forced host devices), the B=1 delegation
+of ``run_experiment``, and the bench JSON dedupe."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import NetConfig, batch_template, stack_net_params
+from repro.netsim import (
+    SCHEMES, get_scheme, run_experiment, run_experiment_batch, simulate,
+    simulate_batch, sweep_grid, throughput_workload,
+)
+from repro.netsim import fluid, runner
+from repro.netsim.workload import (
+    WorkloadParams, as_workload_batch, congestion_workload,
+)
+
+WL = throughput_workload(msg_size=1 << 20, concurrency=1, num_flows=4)
+CWL = congestion_workload(num_inter=4, num_intra=4, burst_start_us=3_000.0,
+                          burst_len_us=4_000.0, horizon_us=12_000.0)
+
+TIGHT = ("throughput_gbps", "intra_thr_gbps", "mean_buffer_mb",
+         "peak_buffer_mb", "pause_ratio", "goodput_bytes",
+         "completion_frac")
+
+
+def _rel(a, b, floor=1e-4):
+    return abs(a - b) / max(abs(a), abs(b), floor)
+
+
+# ---------------------------------------------------------------------------
+# Parity: streaming reductions == trace-materialized metrics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_streaming_matches_materialized(scheme):
+    """For every builtin scheme, the in-scan streamed Fig. 3 metrics must
+    match the [B, T]-trace numpy extraction: tight for means/max/pause
+    (exact up to summation order), bounded relative error for the
+    histogram-inverted p99 (bin ratio ~5.6%)."""
+    cfgs = [NetConfig(distance_km=d) for d in (100.0, 1000.0)]
+    full = run_experiment_batch(cfgs, CWL, scheme, 12_000.0)
+    stream = run_experiment_batch(cfgs, CWL, scheme, 12_000.0,
+                                  trace_mode="metrics")
+    for f, s in zip(full, stream):
+        for m in TIGHT:
+            assert _rel(f[m], s[m]) < 1e-3, (scheme, f["distance_km"], m,
+                                             f[m], s[m])
+        assert _rel(f["p99_buffer_mb"], s["p99_buffer_mb"], floor=1e-3) \
+            < 0.1, (scheme, f["p99_buffer_mb"], s["p99_buffer_mb"])
+        # congestion workload has no finite flows: FCT is NaN either way
+        assert np.isnan(f["avg_fct_us"]) == np.isnan(s["avg_fct_us"])
+
+
+def test_batch_metrics_match_unbatched_simulate_oracle():
+    """``run_experiment`` now delegates to the batched engine, so the old
+    batch-vs-sequential metric tests compare batch against batch. Keep one
+    INDEPENDENT oracle: metrics computed by hand here from the truly
+    unbatched ``simulate()`` traces (no vmap anywhere) must match the
+    batch rows — a vmap-level masking/padding regression cannot hide."""
+    cfgs = [NetConfig(distance_km=d) for d in (100.0, 300.0)]
+    pad, hist = fluid.batch_padding(cfgs)
+    rows = run_experiment_batch(cfgs, CWL, "matchrdma", 12_000.0)
+    for cfg, row in zip(cfgs, rows):
+        _, traces = simulate(cfg, CWL, get_scheme("matchrdma"), 12_000.0,
+                             delay_pad=pad, history_slots=hist)
+        thr = np.asarray(traces["thr_inter"])
+        warm = int(thr.shape[0] * 0.1)
+        q = np.asarray(traces["q_dst"])
+        pause = np.asarray(traces["pause_dst"])
+        assert _rel(row["throughput_gbps"],
+                    float(thr[warm:].mean()) * 8.0 / 1e9) < 1e-3
+        assert _rel(row["peak_buffer_mb"], float(q.max()) / 1e6) < 1e-3
+        assert _rel(row["mean_buffer_mb"],
+                    float(q[warm:].mean()) / 1e6) < 1e-3
+        assert _rel(row["pause_ratio"], float(pause[warm:].mean())) < 1e-3
+
+
+def test_streaming_rows_carry_scheme_columns():
+    """Scheme-streamed reductions (``Scheme.finalize_metrics``) join the
+    rows in metrics mode only — each builtin streams its own diagnostic."""
+    cfgs = [NetConfig(distance_km=100.0)]
+    expect = {"dcqcn": "mean_cc_rate_gbps",
+              "themis": "mean_cc_rate_gbps",
+              "pseudo_ack": "mean_pseudo_lead_mb",
+              "matchrdma": "mean_budget_at_src_gbps"}
+    for scheme, col in expect.items():
+        s = run_experiment_batch(cfgs, WL, scheme, 6_000.0,
+                                 trace_mode="metrics")[0]
+        f = run_experiment_batch(cfgs, WL, scheme, 6_000.0)[0]
+        assert col in s and np.isfinite(s[col]), (scheme, col)
+        assert "mean_budget_gbps" in s      # inherited default accumulator
+        assert col not in f                 # full mode keeps the legacy set
+
+
+# ---------------------------------------------------------------------------
+# The O(B) guarantee: no [B, T] buffer exists anywhere in the program
+# ---------------------------------------------------------------------------
+
+def _walk_jaxprs(obj):
+    """Yield every (sub)jaxpr reachable from a jaxpr/closed-jaxpr —
+    pjit/scan/cond bodies included."""
+    if hasattr(obj, "jaxpr"):              # ClosedJaxpr
+        obj = obj.jaxpr
+    if not hasattr(obj, "eqns"):
+        return
+    yield obj
+    for eqn in obj.eqns:
+        for v in eqn.params.values():
+            for x in (v if isinstance(v, (list, tuple)) else (v,)):
+                if hasattr(x, "jaxpr") or hasattr(x, "eqns"):
+                    yield from _walk_jaxprs(x)
+
+
+def _max_buffer_elems(jaxpr) -> int:
+    best = 0
+    for j in _walk_jaxprs(jaxpr):
+        for eqn in j.eqns:
+            for v in list(eqn.outvars) + list(eqn.invars):
+                aval = getattr(v, "aval", None)
+                if aval is not None and getattr(aval, "shape", None) is not None:
+                    best = max(best, int(np.prod(aval.shape) or 1))
+    return best
+
+
+def test_metrics_mode_allocates_no_bt_buffers():
+    """Walk the WHOLE jaxpr of a streaming batch launch (scan body, vmap,
+    pjit — everything): no intermediate or output may reach B*T elements.
+    Full mode on the same grid is the positive control — its stacked trace
+    output is exactly [B, T]."""
+    cfgs = [NetConfig(distance_km=d) for d in (1.0, 5.0, 10.0, 2.0)]
+    steps, b = 2000, len(cfgs)
+    wl = congestion_workload(num_inter=4, num_intra=4,
+                             burst_start_us=1_000.0, burst_len_us=2_000.0,
+                             horizon_us=10_000.0)
+    wlp = as_workload_batch(wl, b)
+    wlp = WorkloadParams(*(jnp.asarray(np.asarray(v)) for v in wlp))
+    tmpl = batch_template(cfgs)
+    params = stack_net_params(cfgs)
+    pad, hist = fluid.batch_padding(cfgs)
+    scheme = get_scheme("matchrdma")
+
+    def trace(mode):
+        return jax.make_jaxpr(
+            lambda p, w: fluid._run_traced_batch(
+                tmpl, p, w, scheme, steps, 0, pad, hist, mode, 1,
+                steps // 10))(params, wlp)
+
+    assert _max_buffer_elems(trace("metrics")) < b * steps, \
+        "streaming mode materialized an O(B*T) buffer"
+    assert _max_buffer_elems(trace("full")) >= b * steps, \
+        "positive control failed: the detector missed the [B, T] traces"
+
+
+# ---------------------------------------------------------------------------
+# Launch plan: chunking + sharding
+# ---------------------------------------------------------------------------
+
+def test_chunked_matches_unchunked():
+    cfgs = [NetConfig(distance_km=d)
+            for d in (1.0, 40.0, 80.0, 120.0, 160.0)]
+    a = run_experiment_batch(cfgs, WL, "dcqcn", 6_000.0,
+                             trace_mode="metrics", chunk_cells=2)
+    b = run_experiment_batch(cfgs, WL, "dcqcn", 6_000.0,
+                             trace_mode="metrics")
+    assert len(a) == len(b) == len(cfgs)
+    for ra, rb in zip(a, b):
+        for m in TIGHT:
+            assert _rel(ra[m], rb[m]) < 1e-6, (m, ra[m], rb[m])
+
+
+def test_chunked_kilocell_sweep_single_compile():
+    """A >1000-cell grid in streaming mode: bounded memory (256-cell
+    launches, O(chunk) accumulators), ONE compiled program across all
+    chunks (the padded trailing chunk shares the shape), row order
+    preserved."""
+    dists = np.linspace(1.0, 20.0, 1008)
+    cfgs = [NetConfig(distance_km=float(d)) for d in dists]
+    n0 = fluid._run_traced_batch._cache_size()
+    rows = sweep_grid(cfgs, WL, ("matchrdma",), horizon_us=1_500.0,
+                      trace_mode="metrics", chunk_cells=256)
+    assert len(rows) == len(cfgs)
+    assert fluid._run_traced_batch._cache_size() - n0 == 1, \
+        "chunked launches did not share one compiled program"
+    assert all(np.isfinite(r["throughput_gbps"]) for r in rows)
+    assert [r["distance_km"] for r in rows] == [float(d) for d in dists]
+
+
+def test_auto_chunk_bounds_full_mode_traces():
+    """The auto chunk size keeps a full-trace launch's [B_chunk, T] block
+    under the MAX_TRACE_FLOATS budget, and streaming launches use the flat
+    cell ceiling (rounded up to a device multiple)."""
+    t = 100_000
+    chunk = runner._chunk_cells(t, "full", 1, None, 1)
+    assert chunk * t * runner._TRACE_KEYS_EST <= runner.MAX_TRACE_FLOATS
+    assert chunk >= 1
+    assert runner._chunk_cells(t, "metrics", 1, None, 1) \
+        == runner.METRICS_CHUNK_CELLS
+    assert runner._chunk_cells(t, "metrics", 1, 30, 4) == 32
+
+
+_SUBPROC_SHARDED = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    sys.path.insert(0, "src")
+    import numpy as np
+    import jax
+    from repro.config.base import NetConfig
+    from repro.netsim import run_experiment_batch, throughput_workload
+    assert len(jax.devices()) == 4
+    wl = throughput_workload(1 << 20, 1, num_flows=4)
+    # 6 cells on 4 devices: the launch plan must pad to 8 so the device
+    # count evenly splits the batch, then drop the padding rows
+    cfgs = [NetConfig(distance_km=d)
+            for d in (1.0, 50.0, 100.0, 200.0, 400.0, 800.0)]
+    multi = run_experiment_batch(cfgs, wl, "matchrdma", 8_000.0,
+                                 trace_mode="metrics")
+    assert len(multi) == len(cfgs)
+    single = run_experiment_batch(cfgs, wl, "matchrdma", 8_000.0,
+                                  trace_mode="metrics",
+                                  devices=jax.devices()[:1])
+    for a, b in zip(multi, single):
+        for k, va in a.items():
+            if not isinstance(va, float) or not np.isfinite(va):
+                continue
+            vb = b[k]
+            assert abs(va - vb) <= 1e-6 * max(abs(va), abs(vb), 1e-9), \\
+                (k, va, vb)
+    print("SHARDED_OK")
+""")
+
+
+def test_sharded_matches_single_device():
+    """The scenario axis sharded over 4 (forced host) devices must produce
+    the same rows as the single-device launch — sharding only places the
+    embarrassingly parallel [B] axis, it never changes the program."""
+    r = subprocess.run([sys.executable, "-c", _SUBPROC_SHARDED],
+                       capture_output=True, text=True, cwd=".", timeout=300)
+    assert "SHARDED_OK" in r.stdout, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# Mode plumbing + single-cell delegation
+# ---------------------------------------------------------------------------
+
+def test_trace_mode_validation():
+    with pytest.raises(ValueError, match="unknown trace_mode"):
+        simulate(NetConfig(distance_km=1.0), WL, get_scheme("dcqcn"),
+                 1_000.0, trace_mode="bogus")
+    with pytest.raises(ValueError, match="decimate must be"):
+        simulate_batch([NetConfig(distance_km=1.0)], WL, "dcqcn", 1_000.0,
+                       trace_mode="decimate", decimate=0)
+
+
+def test_decimate_mode_keeps_every_kth_step():
+    cfg = NetConfig(distance_km=10.0)
+    _, full = simulate(cfg, WL, get_scheme("dcqcn"), 5_000.0)
+    _, dec = simulate(cfg, WL, get_scheme("dcqcn"), 5_000.0,
+                      trace_mode="decimate", decimate=5)
+    steps = np.asarray(full["q_dst"]).shape[0]
+    assert np.asarray(dec["q_dst"]).shape[0] == steps // 5
+    # block k keeps the trace of its LAST step: index k*5 + 4 of the full run
+    np.testing.assert_array_equal(np.asarray(dec["q_dst"]),
+                                  np.asarray(full["q_dst"])[4::5])
+
+
+def test_run_experiment_delegates_to_batch():
+    """Single-cell metrics ARE the batch-wide path at B=1: identical row
+    (bit-for-bit — same code), and the hand-kept single-cell extractor is
+    gone."""
+    cfg = NetConfig(distance_km=100.0)
+    row = run_experiment(cfg, WL, get_scheme("dcqcn"), 6_000.0)
+    batch_row = run_experiment_batch([cfg], WL, "dcqcn", 6_000.0)[0]
+    assert set(row) == set(batch_row)
+    for k, v in row.items():
+        if isinstance(v, float) and np.isnan(v):
+            assert np.isnan(batch_row[k]), k
+        else:
+            assert v == batch_row[k], k
+    assert not hasattr(runner, "_metrics_row"), \
+        "_metrics_row resurrected — the metric set must have ONE definition"
+    srow = run_experiment(cfg, WL, get_scheme("matchrdma"), 6_000.0,
+                          trace_mode="metrics")
+    assert "mean_budget_gbps" in srow
+
+
+# ---------------------------------------------------------------------------
+# Streaming quantile + bench record hygiene
+# ---------------------------------------------------------------------------
+
+def test_hist_quantile_bounded_error():
+    """Inverting the fixed-bin log-histogram bounds the quantile estimate's
+    relative error by the bin ratio, independent of sample count."""
+    from repro.netsim.fluid import HIST_BINS, _hist_bin_index, hist_quantile
+    rng = np.random.default_rng(0)
+    vals = np.exp(rng.uniform(np.log(1e3), np.log(1e9),
+                              size=20_000)).astype(np.float32)
+    idx = np.asarray(_hist_bin_index(jnp.asarray(vals)))
+    hist = np.bincount(idx, minlength=HIST_BINS).astype(np.float64)
+    for q in (0.5, 0.9, 0.99):
+        est = float(hist_quantile(hist, q))
+        ref = float(np.quantile(vals, q))
+        assert abs(est - ref) / ref < 0.08, (q, est, ref)
+    # the zero bin: all-below-min samples invert to exactly 0
+    zhist = np.zeros(HIST_BINS)
+    zhist[0] = 100.0
+    assert float(hist_quantile(zhist, 0.99)) == 0.0
+
+
+def test_bench_append_stamps_rev_and_dedupes(tmp_path, monkeypatch):
+    """BENCH json appends: every record carries a git rev, and re-running
+    at the same (grid, backend, rev) replaces the entry instead of
+    stacking near-duplicates."""
+    from benchmarks import netsim_sweep_bench as bench
+    p = tmp_path / "bench.json"
+    monkeypatch.setattr(bench, "BENCH_PATH", str(p))
+    rec = {"grid": {"cells": 4}, "backend": "cpu",
+           "git_rev": bench._git_rev(), "speedup_warm": 1.0}
+    assert rec["git_rev"]               # stamped, non-empty
+    bench._append_record(dict(rec))
+    bench._append_record(dict(rec, speedup_warm=2.0))
+    hist = json.load(open(p))
+    assert len(hist) == 1 and hist[0]["speedup_warm"] == 2.0
+    assert "timestamp" in hist[0]
+    bench._append_record(dict(rec, git_rev=rec["git_rev"] + "x"))
+    assert len(json.load(open(p))) == 2
