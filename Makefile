@@ -1,14 +1,24 @@
 # Tier-1 CI entry points.
 #
-#   make deps               - install dev/test dependencies (best-effort: the
-#                             suite also runs without them via tests/_hypo.py)
-#   make test               - the tier-1 suite (ROADMAP.md "Tier-1 verify")
-#   make bench-netsim-smoke - tiny sweep-bench grid (seconds, no json append);
-#                             also times a streaming-mode cell and ASSERTS
-#                             streaming <= materialized wall-clock
-#   make ci                 - deps + test + bench-netsim-smoke
-#   make bench-netsim       - batched-vs-sequential + streaming-vs-full sweep
-#                             micro-bench; appends to BENCH_netsim_sweep.json
+#   make deps                 - install dev/test dependencies (best-effort:
+#                               the suite also runs without them via
+#                               tests/_hypo.py)
+#   make test                 - the tier-1 suite (ROADMAP.md "Tier-1 verify")
+#   make bench-netsim-smoke   - tiny sweep-bench grid (seconds, no json
+#                               append); also times a streaming-mode cell and
+#                               ASSERTS streaming <= materialized wall-clock
+#   make bench-scheme-compare-smoke
+#                             - six-scheme comparison sweep on a tiny grid;
+#                               asserts complete rows (streamed columns
+#                               included) for every registered scheme
+#   make docs-check           - docs lint: intra-repo links in README/docs,
+#                               scheme-table completeness, hook coverage
+#   make ci                   - deps + test + smokes + docs-check
+#   make bench-netsim         - batched-vs-sequential + streaming-vs-full
+#                               sweep micro-bench; appends to
+#                               BENCH_netsim_sweep.json
+#   make bench-scheme-compare - full six-scheme Fig. 3-style sweep; appends
+#                               to BENCH_netsim_sweep.json
 
 PYTHON ?= python
 
@@ -17,7 +27,8 @@ PYTHON ?= python
 # engine. Test modules exercising the shims still see a plain warning.
 PYTEST_W = -W "error:passing a scheme name string:DeprecationWarning:repro\.netsim"
 
-.PHONY: deps test ci bench-netsim bench-netsim-smoke
+.PHONY: deps test ci bench-netsim bench-netsim-smoke \
+	bench-scheme-compare bench-scheme-compare-smoke docs-check
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt || \
@@ -29,7 +40,16 @@ test:
 bench-netsim-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.netsim_sweep_bench --smoke
 
-ci: deps test bench-netsim-smoke
+bench-scheme-compare-smoke:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --smoke
+
+docs-check:
+	PYTHONPATH=src $(PYTHON) tools/docs_check.py
+
+ci: deps test bench-netsim-smoke bench-scheme-compare-smoke docs-check
 
 bench-netsim:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.netsim_sweep_bench
+
+bench-scheme-compare:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare

@@ -47,9 +47,12 @@ BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
 
 
 def _git_rev() -> str:
+    """Short HEAD rev, with a ``-dirty`` suffix when the worktree has
+    uncommitted changes — a bench row must never attribute dirty-tree
+    results to the clean commit."""
     try:
         out = subprocess.run(
-            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            ["git", "describe", "--always", "--dirty"], capture_output=True,
             text=True, timeout=10, cwd=os.path.dirname(BENCH_PATH) or ".")
         return out.stdout.strip() or "unknown"
     except (OSError, subprocess.SubprocessError):

@@ -1,0 +1,146 @@
+"""Fig. 3-style comparison sweep across ALL six registered schemes.
+
+The paper's Fig. 3 compares four control planes across distance; the
+related-work pack (PR 4) extends the comparison to six: ``dcqcn``,
+``pseudo_ack``, ``themis``, ``matchrdma``, ``geopipe``, ``sdr_rdma``. Every
+(distance x scheme) cell runs through ONE ``sweep_grid`` launch plan per
+scheme in streaming mode (``trace_mode="metrics"`` — O(B) device memory,
+scheme-streamed columns included), on the congestion workload whose
+mid-run intra-DC burst is the paper's "downstream forwarding temporarily
+slowed" scenario.
+
+Output: CSV rows per cell plus a per-scheme summary (throughput at the
+longest distance, worst-case buffer, mean pause ratio), appended to
+``BENCH_netsim_sweep.json`` (git-rev-stamped, deduped — same mechanism as
+``netsim_sweep_bench``). ``--smoke`` shrinks the grid to seconds, asserts
+every scheme produces complete finite rows with its streamed columns, and
+appends nothing: it exists so ``make ci`` proves the six-scheme path on
+every run.
+
+    PYTHONPATH=src python -m benchmarks.scheme_compare [--smoke] [--full]
+"""
+from __future__ import annotations
+
+import time
+
+from repro.config.base import NetConfig
+from repro.netsim import sweep_grid
+from repro.netsim.runner import convergence_horizon_us
+from repro.netsim.schemes import ALL_SCHEMES
+from repro.netsim.workload import congestion_workload
+
+from benchmarks.netsim_sweep_bench import _append_record, _git_rev
+
+# scheme-streamed columns that must appear in every scheme's rows
+STREAMED_COLS = {
+    "dcqcn": ("mean_cc_rate_gbps",),
+    "themis": ("mean_cc_rate_gbps",),
+    "pseudo_ack": ("mean_pseudo_lead_mb",),
+    "matchrdma": ("mean_budget_gbps", "mean_budget_at_src_gbps"),
+    "geopipe": ("mean_credit_mb", "credit_stall_frac"),
+    "sdr_rdma": ("mean_ack_lag_mb", "mean_retx_reserve_frac"),
+}
+
+
+def _workload(horizon_us: float):
+    """The Fig. 3(c,d) congestion scenario scaled to the horizon: inter-DC
+    load plus an intra-DC burst through the middle third of the run."""
+    return congestion_workload(num_inter=4, num_intra=4,
+                               burst_start_us=horizon_us / 3.0,
+                               burst_len_us=horizon_us / 3.0,
+                               horizon_us=horizon_us)
+
+
+def run(full: bool = False, smoke: bool = False):
+    dists = (1.0, 10.0, 50.0, 100.0, 300.0, 500.0, 1000.0)
+    if full:
+        dists = dists + (30.0, 700.0, 2000.0)
+    if smoke:
+        # plumbing assertion, not a measurement: tiny grid, short horizon
+        dists = (1.0, 300.0)
+    cfgs = [NetConfig(distance_km=float(d)) for d in sorted(dists)]
+    # shared convergence-aware horizon: the measured steady state must be
+    # past the CC transient even at the farthest distance
+    horizon_us = (4_000.0 if smoke
+                  else max(convergence_horizon_us(cfgs), 30_000.0))
+    wl = _workload(horizon_us)
+
+    t0 = time.time()
+    rows = sweep_grid(cfgs, wl, ALL_SCHEMES, horizon_us,
+                      trace_mode="metrics")
+    wall_s = time.time() - t0
+
+    by_scheme = {}
+    for r in rows:
+        by_scheme.setdefault(r["scheme"], []).append(r)
+    far = max(dists)
+    summary = {}
+    for name, rs in by_scheme.items():
+        assert len(rs) == len(cfgs), (name, len(rs))
+        expect_cols = STREAMED_COLS.get(name)
+        assert expect_cols is not None, (
+            f"{name}: new registered scheme — declare its streamed columns "
+            f"in scheme_compare.STREAMED_COLS")
+        for col in expect_cols:
+            bad = [r["distance_km"] for r in rs
+                   if col not in r or not _finite(r[col])]
+            assert not bad, f"{name}: streamed column {col} missing at {bad}"
+        assert all(_finite(r["throughput_gbps"]) for r in rs), name
+        summary[name] = {
+            "throughput_gbps_at_max_dist":
+                round(next(r for r in rs if r["distance_km"] == far)
+                      ["throughput_gbps"], 2),
+            "peak_buffer_mb_worst":
+                round(max(r["peak_buffer_mb"] for r in rs), 2),
+            "pause_ratio_mean":
+                round(sum(r["pause_ratio"] for r in rs) / len(rs), 4),
+        }
+
+    if not smoke:
+        _append_record({
+            "grid": {"bench": "scheme_compare",
+                     "distances_km": [float(d) for d in sorted(dists)],
+                     "schemes": list(ALL_SCHEMES),
+                     "horizon_us": horizon_us,
+                     "cells": len(cfgs) * len(ALL_SCHEMES)},
+            "git_rev": _git_rev(),
+            "wall_s": round(wall_s, 3),
+            "summary": summary,
+            "backend": __import__("jax").default_backend(),
+        })
+    return rows, summary, wall_s
+
+
+def _finite(v) -> bool:
+    import math
+    return isinstance(v, float) and math.isfinite(v)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI grid, seconds, no BENCH json append; "
+                         "asserts complete rows for all six schemes")
+    args = ap.parse_args()
+    rows, summary, wall_s = run(full=args.full, smoke=args.smoke)
+    cols = ("scheme", "distance_km", "throughput_gbps", "peak_buffer_mb",
+            "mean_buffer_mb", "p99_buffer_mb", "pause_ratio",
+            "intra_thr_gbps")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+                       for c in cols))
+    print(f"# {len(rows)} cells in {wall_s:.1f}s "
+          f"({len(rows) / max(wall_s, 1e-9):.1f} cells/s, streaming mode)")
+    for name, s in summary.items():
+        print(f"# {name}: thr@far={s['throughput_gbps_at_max_dist']} Gbps, "
+              f"worst peak={s['peak_buffer_mb_worst']} MB, "
+              f"mean pause={s['pause_ratio_mean']}")
+    if args.smoke:
+        print("SCHEME_COMPARE_SMOKE_OK")
+
+
+if __name__ == "__main__":
+    main()

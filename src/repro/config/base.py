@@ -253,6 +253,12 @@ class NetParams(NamedTuple):
     queue_thresh_kb: Any         # f32 — dst-OTN backlog threshold (slots)
     budget_floor_mbps: Any       # f32 — budget floor
     budget_headroom: Any         # f32 — inject <= headroom * estimated r_out
+    # related-work scheme knobs (consumed only by their schemes; traced so
+    # a knob grid sweeps batch-wide in one compiled launch)
+    geopipe_credit_bdp_frac: Any  # f32 — geopipe segment credit window (BDP x)
+    sdr_window_bdp_frac: Any     # f32 — sdr_rdma selective-repeat window (BDP x)
+    sdr_ack_coalesce_us: Any     # f32 — sdr_rdma ACK coalescing interval
+    sdr_retx_budget_frac: Any    # f32 — sdr_rdma rate share reserved for repair
 
     @classmethod
     def of(cls, cfg: "NetConfig") -> "NetParams":
@@ -262,7 +268,9 @@ class NetParams(NamedTuple):
             cfg.nic_gbps, cfg.pfc_xoff_kb, cfg.pfc_xon_kb,
             cfg.otn_buffer_bdp_frac, cfg.ecn_kmin_kb, cfg.ecn_kmax_kb,
             cfg.queue_thresh_kb, cfg.budget_floor_mbps,
-            cfg.budget_headroom)))
+            cfg.budget_headroom, cfg.geopipe_credit_bdp_frac,
+            cfg.sdr_window_bdp_frac, cfg.sdr_ack_coalesce_us,
+            cfg.sdr_retx_budget_frac)))
 
     def delay_steps(self, dt_us: float):
         """Traced step count of the long-haul delay (>= 1)."""
@@ -289,7 +297,9 @@ NET_TRACED_FIELDS = ("distance_km", "num_otn_links", "link_gbps",
                      "dst_dc_gbps", "nic_gbps", "pfc_xoff_kb", "pfc_xon_kb",
                      "otn_buffer_bdp_frac", "ecn_kmin_kb", "ecn_kmax_kb",
                      "queue_thresh_kb", "budget_floor_mbps",
-                     "budget_headroom")
+                     "budget_headroom", "geopipe_credit_bdp_frac",
+                     "sdr_window_bdp_frac", "sdr_ack_coalesce_us",
+                     "sdr_retx_budget_frac")
 
 
 def batch_template(cfgs: Sequence["NetConfig"]) -> "NetConfig":
@@ -362,6 +372,22 @@ class NetConfig:
     budget_floor_mbps: float = 500.0
     control_proc_slots: int = 1           # OTN processing delay (slots)
 
+    # Related-work scheme knobs (traced NetParams leaves — sweep batch-wide).
+    # GeoPipe-style lossless pipeline shaping: the source OTN may hold at
+    # most frac x (2D x C_otn) bytes outstanding toward the destination
+    # segment (credits return with one-way delay D; 1.0 is exactly
+    # rate-sustaining at line rate). The default provisions the window
+    # WITHIN the segment buffer (< otn_buffer_bdp_frac), so pacing stays
+    # PFC-free: the credit gate, not a pause frame, is the backpressure.
+    geopipe_credit_bdp_frac: float = 0.08
+    # SDR-RDMA-style software-defined reliability: per-flow selective-repeat
+    # receive window as a BDP fraction, receiver ACK-coalescing interval,
+    # and the sender rate share reserved for repair traffic under loss
+    # (scaled by the observed congestion level).
+    sdr_window_bdp_frac: float = 1.0
+    sdr_ack_coalesce_us: float = 50.0
+    sdr_retx_budget_frac: float = 0.05
+
     @property
     def one_way_delay_us(self) -> float:
         # 5 µs per km (paper: 1 km -> 5 µs ... 1000 km -> 5 ms)
@@ -370,6 +396,25 @@ class NetConfig:
     @property
     def otn_capacity_gbps(self) -> float:
         return self.num_otn_links * self.link_gbps
+
+    @property
+    def control_proc_steps(self) -> int:
+        """Control-subchannel OTN processing delay in fluid steps — the one
+        definition every control channel (budget, credit grants) sizes its
+        delay line with."""
+        return int(self.control_proc_slots * self.slot_us / self.dt_us)
+
+    @property
+    def static_delay_steps(self) -> int:
+        """STATIC one-way-delay step count — the one definition every
+        delay-ring allocation shares. Uses the same f32 arithmetic as the
+        traced ``NetParams.delay_steps`` so a static ring size can never
+        undercut the traced wrap index (f64 here could round 3.4999...
+        down where the f32 leaf rounds up — the ring would then be written
+        through a clamped out-of-range index)."""
+        import numpy as np
+        return max(int(np.round(np.float32(self.one_way_delay_us)
+                                / np.float32(self.dt_us))), 1)
 
     def horizon_steps(self, horizon_us: float = None) -> int:
         """Scan length for a horizon (default: this config's) — the single

@@ -136,11 +136,14 @@ class ControlChannel(NamedTuple):
 
 
 def init_channel(delay_steps: int, cfg: NetConfig,
-                 params: NetParams = None, actual_delay=None) -> ControlChannel:
+                 params: NetParams = None, actual_delay=None,
+                 fill=None) -> ControlChannel:
     """``delay_steps`` sizes the (static) line; ``actual_delay`` (traced int,
-    defaults to ``delay_steps``) is the wrap point actually used."""
+    defaults to ``delay_steps``) is the wrap point actually used. ``fill``
+    overrides the line's initial value (default: the proactive initial
+    budget; cumulative credit-grant channels pass 0.0)."""
     dst = cfg.dst_dc_gbps if params is None else params.dst_dc_gbps
-    start = dst * 1e9 / 8.0 * 0.25
+    start = dst * 1e9 / 8.0 * 0.25 if fill is None else fill
     d = max(delay_steps, 1)
     if actual_delay is None:
         actual_delay = d

@@ -65,10 +65,9 @@ def init_matchrdma(cfg: NetConfig, num_flows: int,
     delay comes from ``params``)."""
     if history_slots <= 0:
         history_slots = default_history_slots(cfg)
-    proc_steps = int(cfg.control_proc_slots * cfg.slot_us / cfg.dt_us)
+    proc_steps = cfg.control_proc_steps
     if chan_delay_pad <= 0:
-        chan_delay_pad = (max(int(round(cfg.one_way_delay_us / cfg.dt_us)), 1)
-                          + proc_steps)
+        chan_delay_pad = cfg.static_delay_steps + proc_steps
     if params is None:
         actual_delay = chan_delay_pad
     else:

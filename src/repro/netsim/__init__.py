@@ -1,15 +1,21 @@
 """Fluid-flow network simulator of the dual AI-DC leaf-spine-OTN topology.
 
 Public surface:
-  * schemes  — pluggable control schemes (``Scheme``, ``register_scheme``,
-               ``get_scheme``; the paper's four ship registered).
+  * schemes  — registry-backed pluggable control schemes (``Scheme``,
+               ``register_scheme``, ``get_scheme``). Six ship registered:
+               the paper's four (``SCHEMES`` = dcqcn / pseudo_ack / themis /
+               matchrdma) plus the related-work pack (``RELATED_SCHEMES`` =
+               geopipe / sdr_rdma); ``ALL_SCHEMES`` concatenates them and
+               ``available_schemes()`` reflects the live registry. The hook
+               contract is documented in ``docs/scheme-api.md`` and the
+               worked tutorial in ``docs/writing-a-scheme.md``.
   * fluid    — the scheme-agnostic engine (``simulate``, ``simulate_batch``;
                execution modes ``TRACE_MODES`` = full / decimate / metrics,
                streaming accumulators ``MetricAcc`` + ``hist_quantile``,
                device sharding via ``shard_scenario_axis``).
   * runner   — metric extraction + grid sweeps (``Scenario``, ``sweep``,
-               ``sweep_grid``, ``run_experiment_batch``) over chunked,
-               device-sharded launch plans.
+               ``sweep_grid``, ``run_experiment_batch``) over chunked
+               (``chunk_cells``), device-sharded launch plans.
   * workload — flow sets (``Workload``) and their traced batch form
                (``WorkloadParams``, ``stack_workload_params``).
 """
@@ -18,10 +24,12 @@ from repro.netsim.fluid import (
     shard_scenario_axis, simulate, simulate_batch,
 )
 from repro.netsim.runner import (
-    Scenario, run_experiment, run_experiment_batch, sweep, sweep_grid,
+    Scenario, chunk_cells, run_experiment, run_experiment_batch, sweep,
+    sweep_grid,
 )
 from repro.netsim.schemes import (
-    SCHEMES, Scheme, available_schemes, get_scheme, register_scheme,
+    ALL_SCHEMES, RELATED_SCHEMES, SCHEMES, Scheme, available_schemes,
+    get_scheme, register_scheme,
 )
 from repro.netsim.workload import (
     BIG, FlowSpec, Workload, WorkloadParams, aicb_workload,
@@ -30,10 +38,10 @@ from repro.netsim.workload import (
 )
 
 __all__ = [
-    "MetricAcc", "SCHEMES", "Scheme", "Scenario", "SimState",
-    "TRACE_MODES", "WorkloadParams",
-    "available_schemes", "batch_padding", "get_scheme", "hist_quantile",
-    "register_scheme", "shard_scenario_axis",
+    "ALL_SCHEMES", "MetricAcc", "RELATED_SCHEMES", "SCHEMES", "Scheme",
+    "Scenario", "SimState", "TRACE_MODES", "WorkloadParams",
+    "available_schemes", "batch_padding", "chunk_cells", "get_scheme",
+    "hist_quantile", "register_scheme", "shard_scenario_axis",
     "simulate", "simulate_batch", "run_experiment", "run_experiment_batch",
     "stack_workload_params", "sweep", "sweep_grid",
     "BIG", "FlowSpec", "Workload", "aicb_workload", "congestion_workload",

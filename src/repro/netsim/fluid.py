@@ -20,11 +20,13 @@ Feedback paths:
 Schemes (pluggable — ``repro.netsim.schemes``):
   ``make_step_fn`` is a scheme-agnostic skeleton; everything a control
   scheme decides (ACK view, sender rate law, source-OTN release, CNP
-  routing, extra-state updates) enters through the ``Scheme`` hooks. The
-  paper's four schemes ship registered (``dcqcn``, ``pseudo_ack``,
-  ``themis``, ``matchrdma``); third-party schemes register with
+  routing, extra-state updates) enters through the ``Scheme`` hooks. Six
+  schemes ship registered — the paper's four (``dcqcn``, ``pseudo_ack``,
+  ``themis``, ``matchrdma``) plus the related-work pack (``geopipe``,
+  ``sdr_rdma``); third-party schemes register with
   ``@register_scheme("name")`` and are usable from every entrypoint.
-  Scheme arguments accept a registered name or a ``Scheme`` instance.
+  Scheme arguments accept a registered name or a ``Scheme`` instance;
+  the hook contract is documented in ``docs/scheme-api.md``.
 
 Static vs traced scenario split (the batched scenario engine):
   ``NetConfig`` stays the hashable compile-time side — it fixes ``dt_us``,
@@ -191,19 +193,13 @@ class SimState(NamedTuple):
 
 
 def _delay_steps(cfg: NetConfig) -> int:
-    """STATIC delay-step count — sizes the delay-line padding.
-
-    Uses the same f32 arithmetic as the traced ``NetParams.delay_steps``
-    so the static ring size can never undercut the traced wrap index
-    (f64 here could round 3.4999... down where the f32 leaf rounds up —
-    the rings would then be written through a clamped out-of-range index).
-    """
-    return max(int(np.round(np.float32(cfg.one_way_delay_us)
-                            / np.float32(cfg.dt_us))), 1)
+    """STATIC delay-step count — sizes the delay-line padding (the shared
+    f32-aware definition lives on ``NetConfig.static_delay_steps``)."""
+    return cfg.static_delay_steps
 
 
 def _proc_steps(cfg: NetConfig) -> int:
-    return int(cfg.control_proc_slots * cfg.slot_us / cfg.dt_us)
+    return cfg.control_proc_steps
 
 
 def init_state(cfg: NetConfig, num_flows: int, params: NetParams = None,

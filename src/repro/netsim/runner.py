@@ -182,12 +182,22 @@ class _Launch:
     pad_to: int
 
 
-def _chunk_cells(steps: int, trace_mode: str, decimate: int,
-                 chunk_cells: Optional[int], n_devices: int) -> int:
-    """Cells per launch: explicit override, else the bounded-memory auto
-    size; rounded up to a device multiple so chunked grids still shard.
-    (Not clamped to the grid size — ``_plan_launches`` caps the final
-    chunk at the cell count.)"""
+def chunk_cells(steps: int, trace_mode: str = "full", decimate: int = 1,
+                chunk_cells: Optional[int] = None,
+                n_devices: int = 1) -> int:
+    """Scenario cells per device launch of a sweep's plan.
+
+    Returns the explicit ``chunk_cells`` override when given, else the
+    bounded-memory auto size: in ``full``/``decimate`` modes the chunk is
+    sized so one launch's materialized trace block stays under
+    ``MAX_TRACE_FLOATS`` f32 values (~256 MB); in ``metrics`` mode the
+    launch is O(B) anyway and the flat ``METRICS_CHUNK_CELLS`` ceiling only
+    caps per-launch compile/host-row cost. The result is rounded up to a
+    multiple of ``n_devices`` so chunked grids still shard the scenario
+    axis evenly. (Not clamped to the grid size — ``_plan_launches`` caps
+    the final chunk at the cell count and pads the trailing chunk so every
+    launch shares one compiled program.)
+    """
     if chunk_cells is None:
         if trace_mode == "metrics":
             chunk_cells = METRICS_CHUNK_CELLS
@@ -198,6 +208,10 @@ def _chunk_cells(steps: int, trace_mode: str, decimate: int,
     if n_devices > 1:
         chunk_cells = -(-chunk_cells // n_devices) * n_devices
     return chunk_cells
+
+
+# historical private name (pre-PR 4); the launch planner below uses it
+_chunk_cells = chunk_cells
 
 
 def _plan_launches(n_cells: int, schemes: Sequence, chunk: int,
@@ -332,6 +346,17 @@ def run_experiment_batch(cfgs: Sequence[NetConfig], workload, scheme,
                          trace_mode, decimate, devices)[scheme]
 
 
+def convergence_horizon_us(cfgs: Sequence[NetConfig],
+                           floor_us: float = 20_000.0) -> float:
+    """Horizon long enough for CC to converge at EVERY distance of a grid:
+    at least 20 RTTs at the farthest scenario plus a fixed floor. The one
+    definition of the convergence margin — distance sweeps
+    (``sweep``, ``benchmarks/scheme_compare.py``) size their shared
+    horizon with it so short-distance cells simply observe a longer
+    steady state."""
+    return 40.0 * max(c.one_way_delay_us for c in cfgs) + floor_us
+
+
 def sweep(cfg: NetConfig, workload: Workload, schemes, distances_km,
           horizon_us: Optional[float] = None, period_slots: int = 0, **kw):
     """Cartesian (distance x scheme) sweep; returns list of metric dicts in
@@ -339,17 +364,16 @@ def sweep(cfg: NetConfig, workload: Workload, schemes, distances_km,
 
     Batched execution: each scheme's whole distance grid is one launch
     plan (one compile per scheme). All cells share one horizon — the
-    longest any distance needs for CC convergence — so short-distance cells
-    simply observe a longer steady state. Keyword extras (``trace_mode``,
+    longest any distance needs for CC convergence
+    (``convergence_horizon_us``) — so short-distance cells simply observe
+    a longer steady state. Keyword extras (``trace_mode``,
     ``chunk_cells``, ``devices``, ...) pass through to ``sweep_grid``.
     """
     cfgs = [dataclasses.replace(cfg, distance_km=float(d))
             for d in distances_km]
     h = horizon_us
     if h is None:
-        # at least 20 RTTs + fixed floor so CC converges at any distance
-        h = max(cfg.horizon_us,
-                40.0 * max(c.one_way_delay_us for c in cfgs) + 20_000.0)
+        h = max(cfg.horizon_us, convergence_horizon_us(cfgs))
     return sweep_grid(cfgs, workload, schemes, h, period_slots, **kw)
 
 

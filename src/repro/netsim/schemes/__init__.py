@@ -1,4 +1,5 @@
-"""Registry-backed scheme package: the four paper schemes + the plug-in API.
+"""Registry-backed scheme package: the paper's four schemes, the related-work
+pack, and the plug-in API.
 
     from repro.netsim.schemes import get_scheme, register_scheme, Scheme
 
@@ -8,16 +9,25 @@
     class MyScheme(Scheme):
         ...
 
-See ``base.py`` for the hook contract and README "Scheme API" for a worked
-example.
+Six schemes ship registered: the paper's four (``SCHEMES`` — the stable
+builtin tuple pinned against pre-refactor goldens) plus the related-work
+pack (``RELATED_SCHEMES``): GeoPipe-style lossless pipeline shaping and
+SDR-RDMA-style software-defined reliability. ``ALL_SCHEMES`` is their
+concatenation; the registry may grow beyond it.
+
+See ``base.py`` for the hook contract, ``docs/scheme-api.md`` for the
+authoritative reference, and ``docs/writing-a-scheme.md`` for a worked
+tutorial.
 """
 from repro.netsim.schemes.base import (
     Feedback, Scheme, SchemeCtx, SchemeLike, SchemeSignals,
     available_schemes, get_scheme, register_scheme, unregister_scheme,
 )
 from repro.netsim.schemes.dcqcn import DcqcnScheme, ThemisScheme
+from repro.netsim.schemes.geopipe import GeoPipeScheme, GeoPipeState
 from repro.netsim.schemes.matchrdma import MatchRdmaScheme
 from repro.netsim.schemes.pseudo_ack import PseudoAckScheme
+from repro.netsim.schemes.sdr_rdma import SdrRdmaScheme, SdrRdmaState
 
 # The paper's four schemes (Fig. 3). ``SCHEMES`` stays the stable builtin
 # tuple (tests/benchmarks iterate it); the registry may grow beyond it.
@@ -28,9 +38,19 @@ register_scheme("matchrdma", MatchRdmaScheme)
 
 SCHEMES = ("dcqcn", "pseudo_ack", "themis", "matchrdma")
 
+# The related-work pack (PR 4): pinned against their own goldens and swept
+# alongside the paper schemes by ``benchmarks/scheme_compare.py``.
+register_scheme("geopipe", GeoPipeScheme)
+register_scheme("sdr_rdma", SdrRdmaScheme)
+
+RELATED_SCHEMES = ("geopipe", "sdr_rdma")
+ALL_SCHEMES = SCHEMES + RELATED_SCHEMES
+
 __all__ = [
-    "Feedback", "Scheme", "SchemeCtx", "SchemeLike", "SchemeSignals",
-    "SCHEMES", "DcqcnScheme", "ThemisScheme", "MatchRdmaScheme",
-    "PseudoAckScheme", "available_schemes", "get_scheme", "register_scheme",
+    "ALL_SCHEMES", "Feedback", "RELATED_SCHEMES", "SCHEMES", "Scheme",
+    "SchemeCtx", "SchemeLike", "SchemeSignals",
+    "DcqcnScheme", "GeoPipeScheme", "GeoPipeState", "MatchRdmaScheme",
+    "PseudoAckScheme", "SdrRdmaScheme", "SdrRdmaState", "ThemisScheme",
+    "available_schemes", "get_scheme", "register_scheme",
     "unregister_scheme",
 ]

@@ -63,6 +63,14 @@ from repro.core.matchrdma import MatchRdmaState, init_matchrdma
 from repro.netsim.queues import drain_proportional
 
 
+def long_haul_bdp(ctx: "SchemeCtx") -> jax.Array:
+    """Long-haul bandwidth-delay product in bytes (2D x C_otn, traced) —
+    the reference quantity BDP-fraction knobs (geopipe credit window,
+    sdr_rdma receive window) scale against. Matches the engine's OTN
+    buffer provisioning base in ``fluid.make_step_fn``."""
+    return ctx.c_otn * 2.0 * ctx.params.one_way_delay_us * 1e-6
+
+
 class SchemeCtx(NamedTuple):
     """Per-run quantities shared by every hook, built once per trace by
     ``make_step_fn``. Traced leaves (capacities, delays) come from

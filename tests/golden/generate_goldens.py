@@ -1,12 +1,21 @@
-"""Regenerate the golden netsim traces pinning scheme-refactor parity.
+"""Regenerate the golden netsim traces pinning scheme behaviour bit-for-bit.
 
-The .npz produced here was captured from the PRE-Scheme-API monolithic
-``fluid.make_step_fn`` (PR 1 state, commit 98b8c0e) and is compared
-bit-for-bit by ``tests/test_scheme_api.py::test_golden_parity_*``: the
-registry-backed hook decomposition must emit the numerically identical
-program. Re-running this script on post-refactor code simply re-captures
-the current behaviour — only do that deliberately, when the simulator's
-physics (not its API) changes, and say so in the PR.
+Two families of pins live in the .npz:
+
+  * The paper's four schemes (``SCHEMES``): captured from the PRE-Scheme-API
+    monolithic ``fluid.make_step_fn`` (PR 1 state, commit 98b8c0e) and
+    compared bit-for-bit by ``tests/test_scheme_api.py::test_golden_*`` —
+    the registry-backed hook decomposition must emit the numerically
+    identical program.
+  * The related-work pack (``RELATED_SCHEMES``: geopipe, sdr_rdma, PR 4):
+    captured from their first registered implementation — the pin freezes
+    their physics against accidental drift.
+
+Re-running this script simply re-captures current behaviour — only do that
+deliberately, when a simulator's or a scheme's physics (not its API)
+changes, and say so in the PR. When regenerating, diff the four paper
+schemes' arrays against the previous file: they must stay bit-identical
+unless the engine physics changed.
 
     PYTHONPATH=src python tests/golden/generate_goldens.py
 """
@@ -19,12 +28,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 from repro.config.base import NetConfig
-from repro.netsim import simulate, simulate_batch
+from repro.netsim import get_scheme, simulate, simulate_batch
+from repro.netsim.schemes import ALL_SCHEMES
 from repro.netsim.workload import congestion_workload, throughput_workload
 
 OUT = os.path.join(os.path.dirname(__file__), "netsim_scheme_traces.npz")
 
-SCHEMES = ("dcqcn", "pseudo_ack", "themis", "matchrdma")
 SEQ_HORIZON_US = 10_000.0
 BATCH_HORIZON_US = 8_000.0
 BATCH_DISTS = (1.0, 300.0)
@@ -38,21 +47,22 @@ def main():
     wl = congestion_workload(num_inter=4, num_intra=4,
                              burst_start_us=3_000.0, burst_len_us=4_000.0,
                              horizon_us=SEQ_HORIZON_US)
-    for scheme in SCHEMES:
-        final, traces = simulate(cfg, wl, scheme, SEQ_HORIZON_US)
+    for scheme in ALL_SCHEMES:
+        final, traces = simulate(cfg, wl, get_scheme(scheme), SEQ_HORIZON_US)
         for k, v in traces.items():
             arrays[f"seq/{scheme}/traces/{k}"] = np.asarray(v)
         for k in ("sent", "acked", "delivered", "done_at_us"):
             arrays[f"seq/{scheme}/final/{k}"] = np.asarray(getattr(final, k))
 
-    # batched: two distances through the padded-ring batch engine.
+    # batched: two distances through the padded-ring batch engine. Every
+    # per-scheme trace key is captured (scheme-owned extras included).
     cfgs = [NetConfig(distance_km=d) for d in BATCH_DISTS]
     bwl = throughput_workload(msg_size=1 << 20, concurrency=1, num_flows=4)
-    for scheme in SCHEMES:
-        final, traces = simulate_batch(cfgs, bwl, scheme, BATCH_HORIZON_US)
-        for k in ("q_src", "q_dst", "q_leaf", "pause_dst", "thr_inter",
-                  "thr_intra", "budget", "budget_at_src", "cons_err"):
-            arrays[f"batch/{scheme}/traces/{k}"] = np.asarray(traces[k])
+    for scheme in ALL_SCHEMES:
+        final, traces = simulate_batch(cfgs, bwl, get_scheme(scheme),
+                                       BATCH_HORIZON_US)
+        for k, v in traces.items():
+            arrays[f"batch/{scheme}/traces/{k}"] = np.asarray(v)
         arrays[f"batch/{scheme}/final/delivered"] = np.asarray(final.delivered)
 
     np.savez_compressed(OUT, **arrays)

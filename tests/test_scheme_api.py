@@ -1,4 +1,5 @@
-"""Scheme API: golden parity vs the pre-refactor monolith, the registry,
+"""Scheme API: golden parity vs the pre-refactor monolith (paper schemes)
+and the first-registration pins (related-work pack), the registry,
 custom-scheme end-to-end plumbing, the unified workload/Scenario axis, and
 the deprecated string entrypoints."""
 import os
@@ -14,7 +15,7 @@ from repro.netsim import (
     register_scheme, run_experiment, run_experiment_batch, simulate,
     simulate_batch, sweep_grid, throughput_workload,
 )
-from repro.netsim.schemes import unregister_scheme
+from repro.netsim.schemes import ALL_SCHEMES, RELATED_SCHEMES, unregister_scheme
 from repro.netsim.workload import (
     WorkloadParams, congestion_workload, stack_workload_params,
 )
@@ -30,18 +31,24 @@ def golden():
 
 
 # ---------------------------------------------------------------------------
-# Golden parity: the hook decomposition must emit the numerically identical
-# program as the pre-refactor string-switched monolith (PR 1, commit
-# 98b8c0e) — traces captured by tests/golden/generate_goldens.py.
+# Golden parity. For the paper's four schemes the pin is the pre-refactor
+# string-switched monolith (PR 1, commit 98b8c0e): the hook decomposition
+# must emit the numerically identical program. For the related-work pack
+# (geopipe, sdr_rdma) the pin is their first registered implementation.
+# Traces captured by tests/golden/generate_goldens.py.
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
 def test_golden_parity_sequential(golden, scheme):
     cfg = NetConfig(distance_km=100.0)
     wl = congestion_workload(num_inter=4, num_intra=4,
                              burst_start_us=3_000.0, burst_len_us=4_000.0,
                              horizon_us=10_000.0)
     final, traces = simulate(cfg, wl, get_scheme(scheme), 10_000.0)
+    golden_keys = {k.rsplit("/", 1)[1] for k in golden.files
+                   if k.startswith(f"seq/{scheme}/traces/")}
+    assert set(traces) == golden_keys, \
+        f"{scheme} trace-key set drifted — regenerate goldens deliberately"
     for k, v in traces.items():
         ref = golden[f"seq/{scheme}/traces/{k}"]
         np.testing.assert_array_equal(
@@ -53,12 +60,14 @@ def test_golden_parity_sequential(golden, scheme):
             err_msg=f"{scheme} final.{k} diverged")
 
 
-@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
 def test_golden_parity_batched(golden, scheme):
     cfgs = [NetConfig(distance_km=d) for d in (1.0, 300.0)]
     final, traces = simulate_batch(cfgs, WL, get_scheme(scheme), 8_000.0)
-    for k in ("q_src", "q_dst", "q_leaf", "pause_dst", "thr_inter",
-              "thr_intra", "budget", "budget_at_src", "cons_err"):
+    keys = [k.rsplit("/", 1)[1] for k in golden.files
+            if k.startswith(f"batch/{scheme}/traces/")]
+    assert set(keys) == set(traces), f"{scheme} batched trace-key set drifted"
+    for k in keys:
         np.testing.assert_array_equal(
             golden[f"batch/{scheme}/traces/{k}"], np.asarray(traces[k]),
             err_msg=f"batched {scheme}/{k} diverged bit-for-bit")
@@ -79,6 +88,109 @@ def test_builtins_registered():
     # instances pass through untouched
     inst = get_scheme("matchrdma")
     assert get_scheme(inst) is inst
+
+
+def test_registry_lists_all_six():
+    """The shipped registry is exactly the paper's four plus the
+    related-work pack, every name round-trips through ``get_scheme``, and
+    the six are what ``available_schemes`` advertises (tests that register
+    extras clean up after themselves)."""
+    assert len(ALL_SCHEMES) == 6
+    assert set(ALL_SCHEMES) == set(SCHEMES) | set(RELATED_SCHEMES)
+    assert set(available_schemes()) == set(ALL_SCHEMES), \
+        "registry leak: some test registered a scheme without cleanup"
+    for name in ALL_SCHEMES:
+        inst = get_scheme(name)
+        assert inst.name == name
+        assert get_scheme(inst) is inst              # instance passthrough
+        assert get_scheme(inst.name) is inst         # name round-trip
+
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_streaming_full_equivalence_all_six(scheme):
+    """Every registered scheme — related-work pack included — survives the
+    streaming/full equivalence check: ``trace_mode="metrics"`` rows match
+    the materialized-trace extraction (tight for means/max/pause, bounded
+    relative error for the histogram-inverted p99), and the scheme's
+    streamed columns are present and finite. This is the ONE copy of the
+    parity check (it superseded the PR 3 four-scheme version in
+    tests/test_streaming_metrics.py)."""
+    cfgs = [NetConfig(distance_km=d) for d in (100.0, 700.0)]
+    wl = congestion_workload(num_inter=4, num_intra=4,
+                             burst_start_us=3_000.0, burst_len_us=4_000.0,
+                             horizon_us=10_000.0)
+    full = run_experiment_batch(cfgs, wl, scheme, 10_000.0)
+    stream = run_experiment_batch(cfgs, wl, scheme, 10_000.0,
+                                  trace_mode="metrics")
+    for f, s in zip(full, stream):
+        for m in ("throughput_gbps", "intra_thr_gbps", "mean_buffer_mb",
+                  "peak_buffer_mb", "pause_ratio", "goodput_bytes",
+                  "completion_frac"):
+            rel = abs(f[m] - s[m]) / max(abs(f[m]), abs(s[m]), 1e-4)
+            assert rel < 1e-3, (scheme, f["distance_km"], m, f[m], s[m])
+        # p99 comes from the fixed-bin log-histogram: bin-ratio-bounded
+        p99_rel = (abs(f["p99_buffer_mb"] - s["p99_buffer_mb"])
+                   / max(abs(f["p99_buffer_mb"]), abs(s["p99_buffer_mb"]),
+                         1e-3))
+        assert p99_rel < 0.1, (scheme, f["p99_buffer_mb"], s["p99_buffer_mb"])
+        # congestion workload has no finite flows: FCT is NaN either way
+        assert np.isnan(f["avg_fct_us"]) == np.isnan(s["avg_fct_us"])
+        # streamed scheme columns exist beyond the engine metric set and
+        # carry finite values
+        extra_cols = set(s) - set(f)
+        assert extra_cols, f"{scheme} streamed no scheme-specific columns"
+        assert all(np.isfinite(s[c]) for c in extra_cols), (scheme, s)
+
+
+def test_related_knobs_sweep_batchwide():
+    """The related-work knobs are traced ``NetParams`` leaves: a knob grid
+    runs as ONE compiled launch (no per-cell recompile) and the knob
+    actually bites — a tighter geopipe credit window / sdr receive window
+    throttles throughput monotonically."""
+    from repro.netsim import fluid
+    wl = throughput_workload(msg_size=4 << 20, concurrency=8, num_flows=4)
+
+    cfgs = [NetConfig(distance_km=100.0, geopipe_credit_bdp_frac=f)
+            for f in (0.02, 0.08, 1.0)]
+    n0 = fluid._run_traced_batch._cache_size()
+    rows = run_experiment_batch(cfgs, wl, "geopipe", 10_000.0,
+                                trace_mode="metrics")
+    assert fluid._run_traced_batch._cache_size() - n0 <= 1, \
+        "knob grid recompiled per cell — the knobs are not traced leaves"
+    thr = [r["throughput_gbps"] for r in rows]
+    assert thr[0] < thr[1] < thr[2], thr
+
+    cfgs = [NetConfig(distance_km=100.0, sdr_window_bdp_frac=f)
+            for f in (0.02, 0.1, 1.0)]
+    rows = run_experiment_batch(cfgs, wl, "sdr_rdma", 10_000.0,
+                                trace_mode="metrics")
+    thr = [r["throughput_gbps"] for r in rows]
+    assert thr[0] < thr[1] < thr[2], thr
+    # ack coalescing: a coarser interval strictly grows the held-back lag
+    cfgs = [NetConfig(distance_km=100.0, sdr_ack_coalesce_us=u)
+            for u in (5.0, 500.0)]
+    rows = run_experiment_batch(cfgs, wl, "sdr_rdma", 10_000.0,
+                                trace_mode="metrics")
+    assert rows[0]["mean_ack_lag_mb"] < rows[1]["mean_ack_lag_mb"]
+
+
+def test_geopipe_default_is_pfc_free_under_congestion():
+    """GeoPipe's identity: with the default credit window provisioned
+    inside the segment buffer, a downstream intra-DC burst never drives the
+    long-haul pause ratio above zero — while conventional e2e DCQCN pauses
+    — and throughput still clears the DCQCN baseline (the credit gate
+    replaces the long CNP loop)."""
+    cfg = NetConfig(distance_km=100.0)
+    wl = congestion_workload(num_inter=4, num_intra=4,
+                             burst_start_us=3_000.0, burst_len_us=4_000.0,
+                             horizon_us=12_000.0)
+    rows = sweep_grid([cfg], wl, ("geopipe", "dcqcn"),
+                      horizon_us=12_000.0, trace_mode="metrics")
+    gp, dc = rows[0], rows[1]
+    assert gp["pause_ratio"] == 0.0, gp
+    assert dc["pause_ratio"] > 0.0, dc
+    assert gp["throughput_gbps"] > dc["throughput_gbps"]
+    assert gp["peak_buffer_mb"] < dc["peak_buffer_mb"]
 
 
 def test_unknown_scheme_is_a_loud_error():

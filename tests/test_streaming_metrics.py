@@ -1,11 +1,12 @@
 """Streaming in-scan metrics (``trace_mode="metrics"``), the chunked /
 device-sharded launch plan, and the O(B) memory guarantee.
 
-Covers: streaming-vs-materialized metric parity for all four builtin
-schemes, the jaxpr proof that metrics mode allocates no [B, T] buffer,
-chunked kilocell sweeps sharing one compiled program, sharded-vs-single-
-device equivalence (subprocess, 4 forced host devices), the B=1 delegation
-of ``run_experiment``, and the bench JSON dedupe."""
+Covers: the vmap-independent metric oracle (the per-scheme streaming/full
+parity check lives in tests/test_scheme_api.py, parametrized over all six
+registered schemes), the jaxpr proof that metrics mode allocates no [B, T]
+buffer, chunked kilocell sweeps sharing one compiled program,
+sharded-vs-single-device equivalence (subprocess, 4 forced host devices),
+the B=1 delegation of ``run_experiment``, and the bench JSON dedupe."""
 import json
 import subprocess
 import sys
@@ -18,7 +19,7 @@ import pytest
 
 from repro.config.base import NetConfig, batch_template, stack_net_params
 from repro.netsim import (
-    SCHEMES, get_scheme, run_experiment, run_experiment_batch, simulate,
+    get_scheme, run_experiment, run_experiment_batch, simulate,
     simulate_batch, sweep_grid, throughput_workload,
 )
 from repro.netsim import fluid, runner
@@ -40,28 +41,11 @@ def _rel(a, b, floor=1e-4):
 
 
 # ---------------------------------------------------------------------------
-# Parity: streaming reductions == trace-materialized metrics
+# Parity: streaming reductions == trace-materialized metrics. The per-scheme
+# streaming/full equivalence check lives in tests/test_scheme_api.py
+# (test_streaming_full_equivalence_all_six — parametrized over ALL six
+# registered schemes); this module keeps the vmap-independent oracle.
 # ---------------------------------------------------------------------------
-
-@pytest.mark.parametrize("scheme", SCHEMES)
-def test_streaming_matches_materialized(scheme):
-    """For every builtin scheme, the in-scan streamed Fig. 3 metrics must
-    match the [B, T]-trace numpy extraction: tight for means/max/pause
-    (exact up to summation order), bounded relative error for the
-    histogram-inverted p99 (bin ratio ~5.6%)."""
-    cfgs = [NetConfig(distance_km=d) for d in (100.0, 1000.0)]
-    full = run_experiment_batch(cfgs, CWL, scheme, 12_000.0)
-    stream = run_experiment_batch(cfgs, CWL, scheme, 12_000.0,
-                                  trace_mode="metrics")
-    for f, s in zip(full, stream):
-        for m in TIGHT:
-            assert _rel(f[m], s[m]) < 1e-3, (scheme, f["distance_km"], m,
-                                             f[m], s[m])
-        assert _rel(f["p99_buffer_mb"], s["p99_buffer_mb"], floor=1e-3) \
-            < 0.1, (scheme, f["p99_buffer_mb"], s["p99_buffer_mb"])
-        # congestion workload has no finite flows: FCT is NaN either way
-        assert np.isnan(f["avg_fct_us"]) == np.isnan(s["avg_fct_us"])
-
 
 def test_batch_metrics_match_unbatched_simulate_oracle():
     """``run_experiment`` now delegates to the batched engine, so the old

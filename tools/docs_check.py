@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Docs lint (``make docs-check``): fail CI on documentation drift.
+
+Three checks, all against the live code so the docs cannot silently rot:
+
+  1. Intra-repo links in ``README.md`` and ``docs/*.md`` resolve — every
+     relative ``[text](path)`` target must exist on disk (anchors are
+     stripped; absolute http(s)/mailto links are skipped).
+  2. Scheme-table completeness — every name in
+     ``repro.netsim.schemes.available_schemes()`` appears in a table row of
+     ``docs/scheme-api.md``, so registering a scheme without documenting it
+     breaks the build.
+  3. Hook coverage — every public hook method on ``Scheme`` (introspected,
+     not hard-coded) is documented in ``docs/scheme-api.md``.
+
+Exit status is the error count (0 = clean).
+
+    PYTHONPATH=src python tools/docs_check.py
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCHEME_API_MD = os.path.join(ROOT, "docs", "scheme-api.md")
+
+# [text](target) — excluding images' inner brackets is unnecessary here;
+# nested ![alt](img) links resolve the same way
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _md_files():
+    files = [os.path.join(ROOT, "README.md")]
+    files += sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    return [f for f in files if os.path.exists(f)]
+
+
+def check_links(errors: list) -> None:
+    for md in _md_files():
+        base = os.path.dirname(md)
+        text = open(md, encoding="utf-8").read()
+        for target in _LINK_RE.findall(text):
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = os.path.normpath(os.path.join(base, path))
+            if not os.path.exists(resolved):
+                errors.append(
+                    f"{os.path.relpath(md, ROOT)}: broken intra-repo link "
+                    f"-> {target}")
+
+
+def check_scheme_table(errors: list) -> None:
+    from repro.netsim.schemes import Scheme, available_schemes
+
+    if not os.path.exists(SCHEME_API_MD):
+        errors.append("docs/scheme-api.md is missing")
+        return
+    text = open(SCHEME_API_MD, encoding="utf-8").read()
+    table_rows = [ln for ln in text.splitlines() if ln.lstrip().startswith("|")]
+    for name in available_schemes():
+        if not any(f"`{name}`" in row for row in table_rows):
+            errors.append(
+                f"docs/scheme-api.md: registered scheme {name!r} missing "
+                f"from the scheme table — document it (see "
+                f"docs/writing-a-scheme.md step 6)")
+
+    # hook coverage: every public callable on Scheme must be documented
+    hooks = [m for m, v in vars(Scheme).items()
+             if callable(v) and not m.startswith("_")]
+    for hook in hooks:
+        if f"`{hook}" not in text:
+            errors.append(
+                f"docs/scheme-api.md: Scheme hook {hook!r} undocumented")
+
+
+def main() -> int:
+    errors: list = []
+    check_links(errors)
+    check_scheme_table(errors)
+    for e in errors:
+        print(f"docs-check: {e}", file=sys.stderr)
+    n_files = len(_md_files())
+    if not errors:
+        print(f"docs-check: OK ({n_files} markdown files, links + scheme "
+              f"table + hook coverage)")
+    return min(len(errors), 100)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
