@@ -11,6 +11,12 @@
 #                             - six-scheme comparison sweep on a tiny grid;
 #                               asserts complete rows (streamed columns
 #                               included) for every registered scheme
+#   make bench-impairment-smoke
+#                             - six-scheme loss/jitter grid on the 'impaired'
+#                               channel model (tiny, seconds, no json append);
+#                               asserts channel columns, one compile per
+#                               scheme, sdr_rdma's repair-latency advantage,
+#                               and ideal-channel row parity
 #   make docs-check           - docs lint: intra-repo links in README/docs,
 #                               scheme-table completeness, hook coverage
 #   make ci                   - deps + test + smokes + docs-check
@@ -19,6 +25,8 @@
 #                               BENCH_netsim_sweep.json
 #   make bench-scheme-compare - full six-scheme Fig. 3-style sweep; appends
 #                               to BENCH_netsim_sweep.json
+#   make bench-impairment     - full six-scheme impairment grid; appends to
+#                               BENCH_netsim_sweep.json
 
 PYTHON ?= python
 
@@ -28,7 +36,8 @@ PYTHON ?= python
 PYTEST_W = -W "error:passing a scheme name string:DeprecationWarning:repro\.netsim"
 
 .PHONY: deps test ci bench-netsim bench-netsim-smoke \
-	bench-scheme-compare bench-scheme-compare-smoke docs-check
+	bench-scheme-compare bench-scheme-compare-smoke \
+	bench-impairment bench-impairment-smoke docs-check
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt || \
@@ -43,13 +52,20 @@ bench-netsim-smoke:
 bench-scheme-compare-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --smoke
 
+bench-impairment-smoke:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --impairment-grid --smoke
+
 docs-check:
 	PYTHONPATH=src $(PYTHON) tools/docs_check.py
 
-ci: deps test bench-netsim-smoke bench-scheme-compare-smoke docs-check
+ci: deps test bench-netsim-smoke bench-scheme-compare-smoke \
+	bench-impairment-smoke docs-check
 
 bench-netsim:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.netsim_sweep_bench
 
 bench-scheme-compare:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare
+
+bench-impairment:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --impairment-grid

@@ -17,7 +17,19 @@ every scheme produces complete finite rows with its streamed columns, and
 appends nothing: it exists so ``make ci`` proves the six-scheme path on
 every run.
 
-    PYTHONPATH=src python -m benchmarks.scheme_compare [--smoke] [--full]
+``--impairment-grid`` switches to the channel-subsystem comparison: all
+six schemes over a loss_rate x jitter_us grid on the ``impaired`` channel
+model (knobs are traced ``NetParams`` leaves — the whole grid is ONE
+compiled launch plan per scheme, streaming mode). Rows gain the channel
+columns (``goodput_gbps``, ``wire_gbps``, ``retx_frac``,
+``p99_repair_latency_us``); the run asserts the subsystem's headline
+physics — at every lossy jitter-free cell sdr_rdma's reserved retransmit
+budget repairs with strictly lower p99 latency than e2e dcqcn — and the
+zero-impairment rows are cross-checked against an ideal-channel run of
+the same cells (the channel must be invisible at its defaults).
+
+    PYTHONPATH=src python -m benchmarks.scheme_compare \
+        [--smoke] [--full] [--impairment-grid]
 """
 from __future__ import annotations
 
@@ -49,6 +61,103 @@ def _workload(horizon_us: float):
                                burst_start_us=horizon_us / 3.0,
                                burst_len_us=horizon_us / 3.0,
                                horizon_us=horizon_us)
+
+
+# channel metric columns every scheme's rows must carry on a lossy grid
+CHANNEL_COLS = ("goodput_gbps", "wire_gbps", "retx_frac",
+                "p99_repair_latency_us")
+
+
+def run_impairment_grid(full: bool = False, smoke: bool = False):
+    """Six schemes x (loss_rate x jitter_us) on the ``impaired`` channel at
+    a fixed 50 km: one streaming launch plan per scheme for the WHOLE
+    impairment grid (the knobs are traced leaves)."""
+    from repro.netsim import fluid
+
+    loss_rates = (0.0, 0.005, 0.02)
+    jitters = (0.0, 25.0)
+    if full:
+        loss_rates = loss_rates + (0.001, 0.05)
+        jitters = jitters + (100.0,)
+    if smoke:
+        loss_rates, jitters = (0.0, 0.02), (0.0,)
+    cells = [(lr, j) for lr in sorted(loss_rates) for j in sorted(jitters)]
+    cfgs = [NetConfig(distance_km=50.0, loss_rate=lr, loss_burst_len=4.0,
+                      jitter_us=j) for lr, j in cells]
+    horizon_us = 6_000.0 if smoke else 20_000.0
+    wl = _workload(horizon_us)
+
+    t0 = time.time()
+    n0 = fluid._run_traced_batch._cache_size()
+    rows = sweep_grid(cfgs, wl, ALL_SCHEMES, horizon_us,
+                      trace_mode="metrics", channel="impaired")
+    compiles = fluid._run_traced_batch._cache_size() - n0
+    wall_s = time.time() - t0
+    assert compiles <= len(ALL_SCHEMES), (
+        f"{compiles} compiles for {len(ALL_SCHEMES)} schemes — the "
+        f"impairment knobs stopped being traced leaves")
+
+    by_scheme = {}
+    for r in rows:
+        by_scheme.setdefault(r["scheme"], []).append(r)
+    for name, rs in by_scheme.items():
+        assert len(rs) == len(cells), (name, len(rs))
+        for col in CHANNEL_COLS:
+            assert all(col in r and _finite(r[col]) for r in rs), (name, col)
+
+    # headline physics: sdr_rdma repairs strictly faster than e2e dcqcn at
+    # every lossy jitter-free cell where both schemes actually have
+    # pending repairs (at very low loss a realization can hand one scheme
+    # a loss-free warm window — p99 = 0 — leaving nothing to compare);
+    # at least one cell must yield a real comparison
+    compared = 0
+    for i, (lr, j) in enumerate(cells):
+        if lr > 0 and j == 0.0:
+            dc = by_scheme["dcqcn"][i]["p99_repair_latency_us"]
+            sdr = by_scheme["sdr_rdma"][i]["p99_repair_latency_us"]
+            if dc > 0 and sdr > 0:
+                assert sdr < dc, (lr, sdr, dc)
+                compared += 1
+    assert compared > 0, "no lossy cell produced pending repairs to compare"
+
+    # the channel must be invisible at its defaults: the zero-impairment
+    # rows match an ideal-channel run of the same cells
+    zero_idx = [i for i, (lr, j) in enumerate(cells) if lr == 0 and j == 0]
+    ideal_rows = sweep_grid([cfgs[i] for i in zero_idx], wl, ALL_SCHEMES,
+                            horizon_us, trace_mode="metrics")
+    for k, i in enumerate(zero_idx):
+        for s, name in enumerate(ALL_SCHEMES):
+            a = by_scheme[name][i]
+            b = ideal_rows[k * len(ALL_SCHEMES) + s]
+            for m in ("throughput_gbps", "mean_buffer_mb", "pause_ratio"):
+                assert abs(a[m] - b[m]) <= 1e-6 * max(abs(a[m]), abs(b[m]),
+                                                      1.0), (name, m, a, b)
+
+    summary = {}
+    for name, rs in by_scheme.items():
+        worst = max((r for r in rs), key=lambda r: r["retx_frac"])
+        summary[name] = {
+            "goodput_gbps_worst_cell": round(worst["goodput_gbps"], 2),
+            "retx_frac_worst_cell": round(worst["retx_frac"], 4),
+            "p99_repair_latency_us_worst_cell":
+                round(worst["p99_repair_latency_us"], 1),
+        }
+
+    if not smoke:
+        _append_record({
+            "grid": {"bench": "scheme_compare_impairment",
+                     "loss_rates": [float(x) for x in sorted(loss_rates)],
+                     "jitter_us": [float(x) for x in sorted(jitters)],
+                     "distance_km": 50.0, "channel": "impaired",
+                     "schemes": list(ALL_SCHEMES),
+                     "horizon_us": horizon_us,
+                     "cells": len(cells) * len(ALL_SCHEMES)},
+            "git_rev": _git_rev(),
+            "wall_s": round(wall_s, 3),
+            "summary": summary,
+            "backend": __import__("jax").default_backend(),
+        })
+    return rows, cells, summary, wall_s
 
 
 def run(full: bool = False, smoke: bool = False):
@@ -123,7 +232,36 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI grid, seconds, no BENCH json append; "
                          "asserts complete rows for all six schemes")
+    ap.add_argument("--impairment-grid", action="store_true",
+                    help="six schemes x (loss_rate x jitter_us) on the "
+                         "'impaired' channel model — one compiled launch "
+                         "plan per scheme; asserts sdr_rdma's repair-"
+                         "latency advantage over dcqcn and ideal-channel "
+                         "row parity")
     args = ap.parse_args()
+    if args.impairment_grid:
+        rows, cells, summary, wall_s = run_impairment_grid(
+            full=args.full, smoke=args.smoke)
+        cols = ("scheme", "loss_rate", "jitter_us", "throughput_gbps",
+                "goodput_gbps", "wire_gbps", "retx_frac",
+                "p99_repair_latency_us")
+        print(",".join(cols))
+        per_scheme = len(rows) // len(cells)
+        for i, r in enumerate(rows):
+            lr, j = cells[i // per_scheme]
+            vals = dict(r, loss_rate=lr, jitter_us=j)
+            print(",".join(f"{vals[c]:.4g}" if isinstance(vals[c], float)
+                           else str(vals[c]) for c in cols))
+        print(f"# {len(rows)} cells in {wall_s:.1f}s (impairment grid, "
+              f"streaming mode, one compile per scheme)")
+        for name, s in summary.items():
+            print(f"# {name}: worst-cell goodput="
+                  f"{s['goodput_gbps_worst_cell']} Gbps, retx_frac="
+                  f"{s['retx_frac_worst_cell']}, p99 repair="
+                  f"{s['p99_repair_latency_us_worst_cell']} us")
+        if args.smoke:
+            print("SCHEME_COMPARE_IMPAIRMENT_SMOKE_OK")
+        return
     rows, summary, wall_s = run(full=args.full, smoke=args.smoke)
     cols = ("scheme", "distance_km", "throughput_gbps", "peak_buffer_mb",
             "mean_buffer_mb", "p99_buffer_mb", "pause_ratio",

@@ -259,6 +259,14 @@ class NetParams(NamedTuple):
     sdr_window_bdp_frac: Any     # f32 — sdr_rdma selective-repeat window (BDP x)
     sdr_ack_coalesce_us: Any     # f32 — sdr_rdma ACK coalescing interval
     sdr_retx_budget_frac: Any    # f32 — sdr_rdma rate share reserved for repair
+    # channel-impairment knobs (consumed only by non-ideal channel models —
+    # repro.netsim.channel; traced so impairment grids vmap jointly with
+    # scheme knobs and workloads in one compiled program per scheme)
+    loss_rate: Any               # f32 — stationary long-haul byte-loss frac
+    loss_burst_len: Any          # f32 — mean Gilbert–Elliott burst (steps)
+    jitter_us: Any               # f32 — mean stochastic extra delay
+    flap_period_us: Any          # f32 — OTN protection-switch period (0=off)
+    flap_depth: Any              # f32 — capacity cut inside a flap dip [0,1]
 
     @classmethod
     def of(cls, cfg: "NetConfig") -> "NetParams":
@@ -270,7 +278,8 @@ class NetParams(NamedTuple):
             cfg.queue_thresh_kb, cfg.budget_floor_mbps,
             cfg.budget_headroom, cfg.geopipe_credit_bdp_frac,
             cfg.sdr_window_bdp_frac, cfg.sdr_ack_coalesce_us,
-            cfg.sdr_retx_budget_frac)))
+            cfg.sdr_retx_budget_frac, cfg.loss_rate, cfg.loss_burst_len,
+            cfg.jitter_us, cfg.flap_period_us, cfg.flap_depth)))
 
     def delay_steps(self, dt_us: float):
         """Traced step count of the long-haul delay (>= 1)."""
@@ -299,7 +308,8 @@ NET_TRACED_FIELDS = ("distance_km", "num_otn_links", "link_gbps",
                      "queue_thresh_kb", "budget_floor_mbps",
                      "budget_headroom", "geopipe_credit_bdp_frac",
                      "sdr_window_bdp_frac", "sdr_ack_coalesce_us",
-                     "sdr_retx_budget_frac")
+                     "sdr_retx_budget_frac", "loss_rate", "loss_burst_len",
+                     "jitter_us", "flap_period_us", "flap_depth")
 
 
 def batch_template(cfgs: Sequence["NetConfig"]) -> "NetConfig":
@@ -387,6 +397,20 @@ class NetConfig:
     sdr_window_bdp_frac: float = 1.0
     sdr_ack_coalesce_us: float = 50.0
     sdr_retx_budget_frac: float = 0.05
+
+    # Channel-impairment knobs (traced NetParams leaves — an impairment
+    # grid sweeps batch-wide in one compiled program per scheme). Only
+    # non-ideal channel models (repro.netsim.channel) consume them; the
+    # defaults describe a perfect pipe, so the `ideal` channel and a zeroed
+    # lossy channel are bit-identical.
+    loss_rate: float = 0.0        # stationary fraction of long-haul bytes lost
+    loss_burst_len: float = 1.0   # mean Gilbert–Elliott Bad dwell (steps);
+                                  # 1.0 degenerates to i.i.d. Bernoulli
+    jitter_us: float = 0.0        # mean stochastic extra one-way delay
+    flap_period_us: float = 0.0   # OTN protection-switch period (0 = off)
+    flap_depth: float = 0.0       # long-haul capacity cut inside a dip [0,1]
+    channel_seed: int = 0         # static PRNG seed of the impairment draws
+                                  # (counter-based: folded with the scan step)
 
     @property
     def one_way_delay_us(self) -> float:

@@ -59,12 +59,12 @@ def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, dict]
         # over the batch axes makes routing shard-local BY CONSTRUCTION;
         # expert compute stays auto. Requires expert weights replicated over
         # the batch axes (ShardingRules does this when moe_group_by_batch).
-        mesh = jax.sharding.get_abstract_mesh()
+        from repro.parallel.compat import get_ambient_mesh, shard_map
+        mesh = get_ambient_mesh()
         axes = tuple(a for a in ("pod", "data")
                      if mesh is not None and a in (mesh.axis_names or ()))
-        if axes and not mesh.empty:
+        if axes:
             from jax.sharding import PartitionSpec as P2
-            auto = frozenset(a for a in mesh.axis_names if a not in axes)
 
             def local_fn(xt, pp):
                 b, s, d = xt.shape
@@ -75,7 +75,7 @@ def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, dict]
             # FULL-manual shard_map (all mesh axes): expert weights are
             # replicated (EP->DP for grouped mode), so the entire MoE layer
             # is collective-free and shard-local by construction.
-            fn = jax.shard_map(
+            fn = shard_map(
                 local_fn, mesh=mesh,
                 in_specs=(P2(axes, None, None),
                           jax.tree.map(lambda _: P2(), p)),

@@ -9,6 +9,13 @@ Public surface:
                ``available_schemes()`` reflects the live registry. The hook
                contract is documented in ``docs/scheme-api.md`` and the
                worked tutorial in ``docs/writing-a-scheme.md``.
+  * channel  — registry-backed long-haul channel models (``ChannelModel``,
+               ``register_channel_model``, ``get_channel_model``). Five
+               ship registered (``CHANNEL_MODELS`` = ideal /
+               bernoulli_loss / jitter / otn_flap / impaired); every
+               entrypoint takes ``channel=`` and non-ideal models activate
+               the engine's loss-repair accounting. Documented in
+               ``docs/channel-models.md``.
   * fluid    — the scheme-agnostic engine (``simulate``, ``simulate_batch``;
                execution modes ``TRACE_MODES`` = full / decimate / metrics,
                streaming accumulators ``MetricAcc`` + ``hist_quantile``,
@@ -19,6 +26,10 @@ Public surface:
   * workload — flow sets (``Workload``) and their traced batch form
                (``WorkloadParams``, ``stack_workload_params``).
 """
+from repro.netsim.channel import (
+    CHANNEL_MODELS, ChannelModel, available_channel_models,
+    get_channel_model, register_channel_model,
+)
 from repro.netsim.fluid import (
     TRACE_MODES, MetricAcc, SimState, batch_padding, hist_quantile,
     shard_scenario_axis, simulate, simulate_batch,
@@ -38,10 +49,13 @@ from repro.netsim.workload import (
 )
 
 __all__ = [
-    "ALL_SCHEMES", "MetricAcc", "RELATED_SCHEMES", "SCHEMES", "Scheme",
+    "ALL_SCHEMES", "CHANNEL_MODELS", "ChannelModel", "MetricAcc",
+    "RELATED_SCHEMES", "SCHEMES", "Scheme",
     "Scenario", "SimState", "TRACE_MODES", "WorkloadParams",
-    "available_schemes", "batch_padding", "chunk_cells", "get_scheme",
-    "hist_quantile", "register_scheme", "shard_scenario_axis",
+    "available_channel_models", "available_schemes", "batch_padding",
+    "chunk_cells", "get_channel_model", "get_scheme",
+    "hist_quantile", "register_channel_model", "register_scheme",
+    "shard_scenario_axis",
     "simulate", "simulate_batch", "run_experiment", "run_experiment_batch",
     "stack_workload_params", "sweep", "sweep_grid",
     "BIG", "FlowSpec", "Workload", "aicb_workload", "congestion_workload",

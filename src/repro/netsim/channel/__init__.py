@@ -1,0 +1,41 @@
+"""Registry-backed channel-model package: stochastic long-haul impairments.
+
+    from repro.netsim.channel import get_channel_model, register_channel_model
+
+    ch = get_channel_model("bernoulli_loss")   # resolve a registered name
+
+    @register_channel_model("my_channel")      # add one — no fluid.py edits
+    class MyChannel(ChannelModel):
+        ...
+
+Five models ship registered: ``ideal`` (the default — the perfect pipe the
+engine always modeled, structurally bit-identical), ``bernoulli_loss``
+(i.i.d. + Gilbert–Elliott bursty loss), ``jitter`` (stochastic delay
+perturbation), ``otn_flap`` (OTN protection-switch capacity dips) and
+``impaired`` (their composite, for joint impairment grids).
+``CHANNEL_MODELS`` is the stable builtin tuple; the registry may grow
+beyond it.
+
+See ``base.py`` for the hook contract and ``docs/channel-models.md`` for
+the authoritative reference.
+"""
+from repro.netsim.channel.base import (
+    ChannelEffects, ChannelInputs, ChannelLike, ChannelModel,
+    available_channel_models, get_channel_model, register_channel_model,
+    unregister_channel_model,
+)
+from repro.netsim.channel.models import (
+    FLAP_DUTY, IdealChannel, ImpairState, ImpairedChannel, scenario_key,
+)
+
+# The stable builtin tuple (tests/benchmarks/docs iterate it); the registry
+# may grow beyond it.
+CHANNEL_MODELS = ("ideal", "bernoulli_loss", "jitter", "otn_flap",
+                  "impaired")
+
+__all__ = [
+    "CHANNEL_MODELS", "ChannelEffects", "ChannelInputs", "ChannelLike",
+    "ChannelModel", "FLAP_DUTY", "IdealChannel", "ImpairState",
+    "ImpairedChannel", "available_channel_models", "get_channel_model",
+    "register_channel_model", "scenario_key", "unregister_channel_model",
+]

@@ -1,0 +1,257 @@
+"""The pluggable long-haul channel-model interface + registry.
+
+A *channel model* is the stochastic physics of the long haul — what the
+inter-DC segment does to bytes in flight that no control scheme can decide
+away: traced loss (i.i.d. + Gilbert–Elliott bursts), stochastic delay
+jitter, and OTN protection-switch capacity dips. ``fluid.make_step_fn``
+gains exactly one channel hook point (between the pipe exit and the
+destination OTN, plus a capacity tap on the source-OTN line); everything
+model-specific lives in a ``ChannelModel`` subclass registered under a
+name, mirroring the Scheme API:
+
+    from repro.netsim.channel import ChannelModel, register_channel_model
+
+    @register_channel_model("my_channel")
+    class MyChannel(ChannelModel):
+        def apply_impairments(self, ctx, chan, inp):
+            ...
+
+Five models ship registered (``ideal`` — the default, today's perfect
+pipe — plus ``bernoulli_loss``, ``jitter``, ``otn_flap`` and the composite
+``impaired``; see ``models.py``). Registered names are usable from every
+engine entrypoint via the ``channel=`` argument of ``simulate`` /
+``simulate_batch`` / ``run_experiment[_batch]`` / ``sweep`` /
+``sweep_grid``.
+
+Division of labour with the engine (who owns what):
+
+  * The MODEL owns the impairment draw: which bytes drop, which bytes are
+    held back, how much line capacity survives a flap — updated through
+    its private ``chan`` pytree. All randomness is counter-based
+    (``jax.random`` keys folded from the scan step + a per-scenario salt),
+    so runs are deterministic, resume-safe inside ``lax.scan``, and use
+    common random numbers across schemes (paired comparisons).
+  * The ENGINE owns reliability accounting: lost bytes travel back on a
+    loss-notification ring (one-way delay D), enter a per-flow retransmit
+    backlog at the source, and are re-injected with priority over new data
+    at the rate the scheme's ``retx_rate`` hook grants — so schemes
+    compete on repair latency, not on bookkeeping. The engine also emits
+    the ``chan_*`` trace keys the metric hooks below reduce.
+
+Hook contract (all jnp expressions; traced under vmap over scenarios):
+
+  ``init_channel_state``   model-private pytree carried in ``SimState.chan``
+                           (``None`` = stateless model).
+  ``apply_impairments``    the per-step transform: consumes the bytes
+                           leaving the pipe + this step's source-OTN
+                           capacity, returns what actually arrives, what
+                           was lost, the (possibly dimmed) capacity and the
+                           updated private state.
+  ``held_bytes``           [F] bytes the model is currently holding between
+                           the pipe and the destination OTN (jitter
+                           buffers) — folded into the engine's per-flow
+                           conservation residual so impairments cannot
+                           silently create or destroy bytes.
+
+Streaming-metric hooks (``trace_mode="metrics"`` — mirror the Scheme
+hooks; the accumulator rides in ``MetricAcc.chan``):
+
+  ``init_metric_acc``      channel-private accumulator pytree.
+  ``accumulate_metrics``   per-step in-scan reduction over the engine's
+                           ``chan_*`` trace keys.
+  ``finalize_metrics``     host-side (numpy) conversion into named per-cell
+                           metric columns (``goodput_gbps``, ``retx_frac``,
+                           ``p99_repair_latency_us``).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import NetConfig, NetParams
+from repro.netsim.streaming import (
+    HIST_BINS, hist_bin_index, hist_quantile, kahan_add,
+)
+
+
+class ChannelInputs(NamedTuple):
+    """What the step skeleton hands ``apply_impairments`` each step."""
+    t: jax.Array          # step index (i32)
+    key: jax.Array        # counter-based PRNG key for THIS step (folded
+                          # from channel_seed, a per-scenario salt, and t)
+    pipe_out: jax.Array   # [F] bytes leaving the long-haul pipe this step
+    cap_src: jax.Array    # scalar — source-OTN line capacity this step
+                          # (bytes; already zeroed while long-haul PFC
+                          # pauses the source)
+
+
+class ChannelEffects(NamedTuple):
+    """What ``apply_impairments`` returns to the skeleton."""
+    arrivals: jax.Array   # [F] bytes actually entering the destination OTN
+    lost: jax.Array       # [F] bytes dropped (enter the loss-repair path)
+    cap_src: jax.Array    # scalar — possibly dimmed source-OTN capacity
+    chan: object          # the model's updated private pytree
+
+
+class ChannelModel:
+    """Default hooks = the ideal channel (pass everything through).
+
+    Subclasses that impair must set ``is_ideal = False`` — the engine
+    structurally skips ALL channel machinery (no PRNG, no retransmit
+    backlog, no ``chan_*`` trace keys) when the model declares itself
+    ideal, which is what keeps the default path bit-identical to the
+    pre-channel engine.
+    """
+
+    name: Optional[str] = None
+    is_ideal: bool = True
+
+    def __init__(self):
+        if self.name is None:
+            self.name = type(self).__name__
+
+    # Value semantics mirror Scheme: channel instances are jit static args,
+    # so two equivalent instances must share one compiled scan. Keep model
+    # attributes plain comparable config values.
+    def __eq__(self, other):
+        return type(self) is type(other) and self.__dict__ == other.__dict__
+
+    def __hash__(self):
+        return hash((type(self), self.name))
+
+    # -- construction-time hook (runs at trace time, not per step) ---------
+    def init_channel_state(self, cfg: NetConfig, params: NetParams,
+                           num_flows: int, key: jax.Array):
+        """Model-private pytree carried through the scan in
+        ``SimState.chan`` (``None`` = stateless). ``key`` is the run's base
+        PRNG key — draw static-per-run randomness (flap phases) here."""
+        return None
+
+    # -- per-step hooks ----------------------------------------------------
+    def apply_impairments(self, ctx, chan, inp: ChannelInputs
+                          ) -> ChannelEffects:
+        """The single per-step transform of the long haul. Default: the
+        perfect pipe — everything arrives, nothing drops, capacity
+        untouched. ``ctx`` is the run's ``SchemeCtx`` (traced impairment
+        knobs live on ``ctx.params``)."""
+        return ChannelEffects(arrivals=inp.pipe_out,
+                              lost=jnp.zeros_like(inp.pipe_out),
+                              cap_src=inp.cap_src, chan=chan)
+
+    def held_bytes(self, chan) -> jax.Array:
+        """[F] bytes the model holds between pipe and destination OTN
+        (jitter buffers). Folded into the conservation residual."""
+        return jnp.float32(0.0)
+
+    # -- streaming-metric hooks (trace_mode="metrics") ---------------------
+    def init_metric_acc(self, ctx, state) -> dict:
+        """Channel-private streaming accumulator (a dict pytree so
+        subclasses can merge ``super()``'s entries). The default reduces
+        the engine-emitted ``chan_*`` keys: Kahan sums of wire / lost /
+        retransmit bytes plus a log-histogram of the per-step repair-wait
+        estimate — enough for every shipped impairment model."""
+        z = jnp.float32(0.0)
+        return {"wire_s": z, "wire_c": z, "lost_s": z, "lost_c": z,
+                "retx_s": z, "retx_c": z,
+                "repair_hist": jnp.zeros((HIST_BINS,), jnp.int32)}
+
+    def accumulate_metrics(self, ctx, acc: dict, state, out: dict,
+                           inc: jax.Array) -> dict:
+        """Fold one step into the accumulator. ``out`` is the step's trace
+        dict (the engine's ``chan_*`` keys included), ``inc`` is 1.0 past
+        the warm-up cutoff. Repair-wait samples only count on steps where a
+        repair is actually pending (``out["chan_repair_wait_us"] > 0``)."""
+        acc = dict(acc)
+        for k, key in (("wire", "chan_wire"), ("lost", "chan_lost"),
+                       ("retx", "chan_retx")):
+            acc[k + "_s"], acc[k + "_c"] = kahan_add(
+                acc[k + "_s"], acc[k + "_c"], out[key] * inc)
+        wait = out["chan_repair_wait_us"]
+        acc["repair_hist"] = acc["repair_hist"].at[hist_bin_index(wait)].add(
+            (inc * (wait > 0)).astype(jnp.int32))
+        return acc
+
+    def finalize_metrics(self, acc: dict, n_steps: int, n_warm: int,
+                         dt_s: float) -> dict:
+        """Host-side: numpy-ified accumulator leaves ([B]-leading) -> the
+        channel metric columns merged into every sweep row."""
+        wire = np.asarray(acc["wire_s"], np.float64)
+        lost = np.asarray(acc["lost_s"], np.float64)
+        retx = np.asarray(acc["retx_s"], np.float64)
+        per_s = 1.0 / (max(n_warm, 1) * dt_s)
+        return {
+            # unique bytes surviving the long haul (wire minus drops)
+            "goodput_gbps": (wire - lost) * per_s * 8.0 / 1e9,
+            # long-haul wire throughput incl. repair traversals
+            "wire_gbps": wire * per_s * 8.0 / 1e9,
+            # fraction of long-haul traffic that is repair
+            "retx_frac": retx / np.maximum(wire, 1.0),
+            "p99_repair_latency_us": hist_quantile(acc["repair_hist"], 0.99),
+        }
+
+    def __repr__(self):
+        return f"<ChannelModel {self.name or type(self).__name__}>"
+
+
+# ---------------------------------------------------------------------------
+# Registry (mirrors repro.netsim.schemes.base)
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ChannelModel] = {}
+
+ChannelLike = Union[str, ChannelModel, None]
+
+
+def register_channel_model(name: str, model=None, *, override: bool = False):
+    """Register a ``ChannelModel`` subclass (or instance) under ``name``.
+
+    Usable as a decorator or called directly. Registration makes the name
+    resolvable by every netsim entrypoint's ``channel=`` argument.
+    Re-registering a taken name raises unless ``override=True``.
+    """
+    def _register(obj):
+        inst = obj() if isinstance(obj, type) else obj
+        if not isinstance(inst, ChannelModel):
+            raise TypeError(
+                f"register_channel_model({name!r}): expected a ChannelModel "
+                f"subclass or instance, got {type(inst).__name__}")
+        if not override and name in _REGISTRY:
+            raise ValueError(
+                f"channel model {name!r} is already registered "
+                f"({_REGISTRY[name]!r}); pass override=True to replace it")
+        inst.name = name
+        _REGISTRY[name] = inst
+        return obj
+
+    if model is None:
+        return _register
+    _register(model)
+    return _REGISTRY[name]
+
+
+def unregister_channel_model(name: str) -> None:
+    """Remove a registered channel model (mainly for tests)."""
+    _REGISTRY.pop(name, None)
+
+
+def get_channel_model(channel: ChannelLike) -> ChannelModel:
+    """Resolve a channel-model name (``None`` = ``"ideal"``; instances pass
+    through untouched)."""
+    if channel is None:
+        channel = "ideal"
+    if isinstance(channel, ChannelModel):
+        return channel
+    try:
+        return _REGISTRY[channel]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown channel model {channel!r}; registered: "
+            f"{', '.join(available_channel_models()) or '(none)'}") from None
+
+
+def available_channel_models() -> tuple:
+    """Names of every registered channel model, sorted."""
+    return tuple(sorted(_REGISTRY))

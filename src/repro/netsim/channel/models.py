@@ -1,0 +1,173 @@
+"""The shipped channel models: ideal, bernoulli_loss, jitter, otn_flap,
+and their composite ``impaired``.
+
+One implementation (``ImpairedChannel``) carries all three impairment
+mechanisms behind STATIC enable flags; the registered names are instances
+with different flags, so each named model compiles only the machinery it
+uses while a loss x jitter grid can run the composite in ONE compiled
+program (the knob VALUES are traced ``NetParams`` leaves — see
+``config.base.NET_TRACED_FIELDS``).
+
+  ``ideal``           the perfect pipe (the default — bit-identical to the
+                      pre-channel engine; the base-class hooks).
+  ``bernoulli_loss``  byte loss on the inter-DC segment: a per-flow
+                      Gilbert–Elliott two-state chain whose Bad state drops
+                      the step's arrivals. Stationary loss = ``loss_rate``;
+                      mean Bad dwell = ``loss_burst_len`` steps
+                      (``loss_burst_len = 1`` degenerates to i.i.d.
+                      Bernoulli whole-step drops — hence the name).
+  ``jitter``          stochastic delay perturbation: a random fraction of
+                      each step's arrivals is held back in a per-flow
+                      deferral buffer (geometric holding, mean extra delay
+                      = ``jitter_us``), reordering/smearing the arrival
+                      process within the padded delay ring.
+  ``otn_flap``        OTN protection switching: periodic capacity dips on
+                      the long-haul line — every ``flap_period_us`` the
+                      line capacity drops by ``flap_depth`` for a
+                      ``FLAP_DUTY`` fraction of the period, at a
+                      per-scenario random phase.
+  ``impaired``        all three composed (loss -> jitter on the arrival
+                      side, flap on the capacity side) — the model
+                      impairment grids sweep.
+
+Determinism: every draw is counter-based — the key is
+``fold_in(scenario_key(PRNGKey(channel_seed), params), t)`` — so
+a run is reproducible, resume-safe inside ``lax.scan``, identical across
+trace modes, and shares its noise realization across schemes (common
+random numbers: scheme comparisons at equal impairments are paired).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import NetConfig, NetParams
+from repro.netsim.channel.base import (
+    ChannelEffects, ChannelInputs, ChannelModel, register_channel_model,
+)
+
+# fraction of a flap period spent in the dip (the protection-switch hit)
+FLAP_DUTY = 0.1
+
+
+def scenario_key(key: jax.Array, params: NetParams) -> jax.Array:
+    """Fold the traced per-scenario knob bits into ``key`` one field at a
+    time: scenarios with different impairment knobs (or distances) draw
+    decorrelated noise inside one vmapped batch, while identical scenarios
+    reproduce identical realizations. Sequential fold_in (not an XOR of
+    the bits) so cells whose knob VALUES are merely permuted across
+    fields — loss_burst_len=4, jitter_us=25 vs loss_burst_len=25,
+    jitter_us=4 — still land on independent streams."""
+    for x in (params.loss_rate, params.loss_burst_len, params.jitter_us,
+              params.flap_period_us, params.flap_depth,
+              params.one_way_delay_us):
+        key = jax.random.fold_in(
+            key, jax.lax.bitcast_convert_type(jnp.float32(x), jnp.uint32))
+    return key
+
+
+class ImpairState(NamedTuple):
+    """Private carry of ``ImpairedChannel`` (disabled parts are ``None``)."""
+    bad: Optional[jax.Array]     # [F] Gilbert–Elliott Bad-state indicator
+    defer: Optional[jax.Array]   # [F] jitter-held bytes awaiting release
+    phase: Optional[jax.Array]   # scalar — random flap phase in [0, 1)
+
+
+@register_channel_model("ideal")
+class IdealChannel(ChannelModel):
+    """Today's behavior: the long haul is a perfect pipe. The engine
+    structurally skips all channel machinery for ``is_ideal`` models, so
+    this model pins the pre-channel bit-identical path."""
+    is_ideal = True
+
+
+class ImpairedChannel(ChannelModel):
+    """Gilbert–Elliott loss + stochastic jitter + OTN flap dips behind
+    static enable flags (see the module docstring for each mechanism)."""
+
+    is_ideal = False
+
+    def __init__(self, loss: bool = True, jitter: bool = True,
+                 flap: bool = True):
+        self.loss, self.jitter, self.flap = bool(loss), bool(jitter), bool(flap)
+        super().__init__()
+
+    def init_channel_state(self, cfg: NetConfig, params: NetParams,
+                           num_flows: int, key: jax.Array):
+        z = jnp.zeros((num_flows,), jnp.float32)
+        phase = None
+        if self.flap:
+            k = jax.random.fold_in(key, 0xF1A9)  # static-per-run draw
+            phase = jax.random.uniform(k, (), jnp.float32)
+        return ImpairState(bad=z if self.loss else None,
+                           defer=z if self.jitter else None,
+                           phase=phase)
+
+    def apply_impairments(self, ctx, chan: ImpairState,
+                          inp: ChannelInputs) -> ChannelEffects:
+        p = ctx.params
+        arrivals, cap_src = inp.pipe_out, inp.cap_src
+        lost = jnp.zeros_like(arrivals)
+        bad, defer = chan.bad, chan.defer
+
+        # Every impairment joins the engine's dataflow through a where()
+        # whose not-impaired branch returns the ORIGINAL tensor: with the
+        # knobs at zero, the select yields the bit-exact pass-through
+        # values no matter how XLA fuses the impaired branch (the
+        # zero-impairment identity test pins this).
+        if self.loss:
+            # Gilbert–Elliott: exit Bad w.p. 1/L, enter Bad so the
+            # stationary Bad fraction equals loss_rate. L=1 => i.i.d.
+            r = jnp.clip(p.loss_rate, 0.0, 0.5)
+            p_exit = 1.0 / jnp.maximum(p.loss_burst_len, 1.0)
+            p_enter = jnp.clip(p_exit * r / jnp.maximum(1.0 - r, 0.5), 0.0, 1.0)
+            u = jax.random.uniform(jax.random.fold_in(inp.key, 0),
+                                   arrivals.shape, jnp.float32)
+            in_bad = jnp.where(chan.bad > 0.5, u < 1.0 - p_exit, u < p_enter)
+            bad = in_bad.astype(jnp.float32)
+            lost = jnp.where(in_bad, arrivals, 0.0)   # Bad drops the step
+            arrivals = jnp.where(in_bad, 0.0, arrivals)
+
+        if self.jitter:
+            # geometric holding with mean extra delay jitter_us: each step
+            # a random fraction (mean p_hold) of the incoming fluid defers
+            # to later steps; E[extra delay] = p/(1-p) * dt = jitter_us
+            p_hold = p.jitter_us / jnp.maximum(p.jitter_us + ctx.dt_us, 1.0)
+            v = jax.random.uniform(jax.random.fold_in(inp.key, 1),
+                                   arrivals.shape, jnp.float32)
+            income = arrivals + chan.defer
+            held = jnp.where(p_hold > 0.0,
+                             income * jnp.clip(2.0 * v * p_hold, 0.0, 0.95),
+                             0.0)
+            arrivals = jnp.where(p_hold > 0.0, income - held, arrivals)
+            defer = held
+
+        if self.flap:
+            # protection-switch dips: a FLAP_DUTY-long capacity cut every
+            # flap_period_us, at this scenario's random phase
+            period = p.flap_period_us
+            pos = jnp.mod(inp.t.astype(jnp.float32) * ctx.dt_us
+                          / jnp.maximum(period, ctx.dt_us) + chan.phase, 1.0)
+            in_dip = (pos < FLAP_DUTY) & (period > 0)
+            cap_src = jnp.where(in_dip,
+                                cap_src
+                                * (1.0 - jnp.clip(p.flap_depth, 0.0, 1.0)),
+                                cap_src)
+
+        return ChannelEffects(arrivals=arrivals, lost=lost, cap_src=cap_src,
+                              chan=ImpairState(bad=bad, defer=defer,
+                                               phase=chan.phase))
+
+    def held_bytes(self, chan: ImpairState) -> jax.Array:
+        return chan.defer if self.jitter else jnp.float32(0.0)
+
+
+register_channel_model("bernoulli_loss",
+                       ImpairedChannel(loss=True, jitter=False, flap=False))
+register_channel_model("jitter",
+                       ImpairedChannel(loss=False, jitter=True, flap=False))
+register_channel_model("otn_flap",
+                       ImpairedChannel(loss=False, jitter=False, flap=True))
+register_channel_model("impaired", ImpairedChannel())

@@ -28,6 +28,20 @@ Schemes (pluggable — ``repro.netsim.schemes``):
   Scheme arguments accept a registered name or a ``Scheme`` instance;
   the hook contract is documented in ``docs/scheme-api.md``.
 
+Channel models (pluggable — ``repro.netsim.channel``):
+  The long haul itself is a plugin: every entrypoint takes ``channel=``
+  (a registered ``ChannelModel`` name or instance; default ``"ideal"`` —
+  structurally bit-identical to the pre-channel engine). Non-ideal models
+  (``bernoulli_loss``, ``jitter``, ``otn_flap``, ``impaired``) get ONE
+  hook point between the pipe exit and the destination OTN (plus a
+  capacity tap on the source line), and the engine's loss-repair path
+  activates: lost bytes ride a notification ring back (delay D), queue in
+  a per-flow retransmit backlog, and re-enter the source OTN at the rate
+  the scheme's ``retx_rate`` hook grants. Impairment knobs are traced
+  ``NetParams`` leaves (grids compile once per scheme); all randomness is
+  counter-based (``fold_in(scenario_key(channel_seed, knobs), t)``) so runs are
+  deterministic and resume-safe. See ``docs/channel-models.md``.
+
 Static vs traced scenario split (the batched scenario engine):
   ``NetConfig`` stays the hashable compile-time side — it fixes ``dt_us``,
   slot layout, DCQCN constants and every array SIZE. The per-scenario
@@ -76,9 +90,15 @@ from repro.config.base import (
 )
 from repro.core.cc_proxy import DcqcnState, init_dcqcn, step_dcqcn
 from repro.core.matchrdma import default_history_slots
+from repro.netsim.channel import (
+    ChannelInputs, ChannelModel, get_channel_model, scenario_key,
+)
 from repro.netsim.queues import drain_proportional, ecn_mark_prob, pfc_hysteresis
 from repro.netsim.schemes import SCHEMES, get_scheme  # noqa: F401 (re-export)
 from repro.netsim.schemes.base import Scheme, SchemeCtx, SchemeSignals
+from repro.netsim.streaming import (
+    HIST_BINS, hist_bin_centers, hist_bin_index, hist_quantile, kahan_add,
+)
 from repro.netsim.workload import WorkloadParams, as_workload_batch
 
 MTU = 1500.0
@@ -96,14 +116,12 @@ STREAM_SUM_KEYS = ("q_src", "q_dst", "q_leaf", "pause_dst",
                    "thr_inter", "thr_intra")
 STREAM_MAX_KEYS = ("q_src", "q_dst", "q_leaf", "cons_err")
 
-# fixed-bin log histogram of q_dst for the streaming p99: bin 0 holds
-# everything below HIST_MIN_BYTES, bins 1..HIST_BINS-1 are log-spaced over
-# [HIST_MIN_BYTES, HIST_MAX_BYTES). Inverting it bounds the quantile
-# estimate's relative error by the bin ratio (~5.6% at 512 bins / 12
-# decades), independent of the horizon length.
-HIST_BINS = 512
+# The fixed-bin log histogram backing the streaming p99 (q_dst bytes here;
+# the channel subsystem reuses it for repair-wait µs) lives in
+# repro.netsim.streaming; the historical names stay importable from here.
 HIST_MIN_BYTES = 1.0
 HIST_MAX_BYTES = 1e12
+_hist_bin_index = hist_bin_index
 
 
 class MetricAcc(NamedTuple):
@@ -117,34 +135,11 @@ class MetricAcc(NamedTuple):
                       # (integer counts: f32 would silently saturate past
                       # 2^24 increments per bin on long horizons)
     scheme: object    # scheme-private accumulator (Scheme.init_metric_acc)
+    chan: object      # channel-private accumulator
+                      # (ChannelModel.init_metric_acc; None when ideal)
 
 
-def _hist_bin_index(q: jax.Array) -> jax.Array:
-    span = float(np.log(HIST_MAX_BYTES) - np.log(HIST_MIN_BYTES))
-    frac = (jnp.log(jnp.maximum(q, HIST_MIN_BYTES))
-            - float(np.log(HIST_MIN_BYTES))) / span
-    idx = 1 + jnp.floor(frac * (HIST_BINS - 1)).astype(jnp.int32)
-    return jnp.where(q < HIST_MIN_BYTES, 0, jnp.clip(idx, 1, HIST_BINS - 1))
-
-
-def hist_bin_centers() -> np.ndarray:
-    """Representative value per histogram bin: 0 for the zero bin,
-    geometric bin centers for the log bins (host-side numpy)."""
-    edges = np.exp(np.linspace(np.log(HIST_MIN_BYTES),
-                               np.log(HIST_MAX_BYTES), HIST_BINS))
-    return np.concatenate([[0.0], np.sqrt(edges[:-1] * edges[1:])])
-
-
-def hist_quantile(hist, q: float) -> np.ndarray:
-    """Invert a streamed ``MetricAcc.hist`` (leading axes preserved) into
-    the q-quantile estimate in bytes."""
-    hist = np.asarray(hist, np.float64)
-    rank = q * hist.sum(axis=-1, keepdims=True)
-    idx = (np.cumsum(hist, axis=-1) < rank).sum(axis=-1)
-    return hist_bin_centers()[np.clip(idx, 0, HIST_BINS - 1)]
-
-
-def _init_metric_acc(scheme, ctx, state0) -> MetricAcc:
+def _init_metric_acc(scheme, channel, ctx, state0) -> MetricAcc:
     z = jnp.float32(0.0)
     return MetricAcc(
         sum_s={k: z for k in STREAM_SUM_KEYS},
@@ -152,6 +147,8 @@ def _init_metric_acc(scheme, ctx, state0) -> MetricAcc:
         maxes={k: z for k in STREAM_MAX_KEYS},
         hist=jnp.zeros((HIST_BINS,), jnp.int32),
         scheme=scheme.init_metric_acc(ctx, state0),
+        chan=(None if channel.is_ideal
+              else channel.init_metric_acc(ctx, state0)),
     )
 
 
@@ -160,10 +157,8 @@ def _accumulate_engine(acc: MetricAcc, out: dict, inc: jax.Array) -> MetricAcc:
     for k in STREAM_SUM_KEYS:
         # Kahan-compensated so the streaming mean matches the numpy trace
         # mean to ~ulp — "metrics" mode is a drop-in for figure numbers
-        y = out[k] * inc - acc.sum_c[k]
-        t = acc.sum_s[k] + y
-        sum_c[k] = (t - acc.sum_s[k]) - y
-        sum_s[k] = t
+        sum_s[k], sum_c[k] = kahan_add(acc.sum_s[k], acc.sum_c[k],
+                                       out[k] * inc)
     maxes = {k: jnp.maximum(acc.maxes[k], out[k]) for k in STREAM_MAX_KEYS}
     hist = acc.hist.at[_hist_bin_index(out["q_dst"])].add(
         inc.astype(jnp.int32))
@@ -190,6 +185,13 @@ class SimState(NamedTuple):
     pause_line: jax.Array    # [Dp] PFC signal dst-OTN -> src-OTN
     pause_dst: jax.Array     # scalar: dst OTN asserting long-haul pause
     extra: object            # scheme-private pytree (Scheme.init_extra_state)
+    # channel subsystem (ALL None under the ideal channel — the engine
+    # structurally skips the machinery, keeping the default path
+    # bit-identical to the pre-channel engine):
+    chan: object             # channel-private pytree (init_channel_state)
+    retx_backlog: object     # [F] lost bytes awaiting retransmission at src
+    retx_line: object        # [Dp, F] loss notifications dst -> src
+    retx_inflight: object    # [F] running sum of retx_line (incremental)
 
 
 def _delay_steps(cfg: NetConfig) -> int:
@@ -204,11 +206,13 @@ def _proc_steps(cfg: NetConfig) -> int:
 
 def init_state(cfg: NetConfig, num_flows: int, params: NetParams = None,
                delay_pad: int = 0, history_slots: int = 0,
-               scheme: Scheme = None) -> SimState:
+               scheme: Scheme = None, channel: ChannelModel = None
+               ) -> SimState:
     """``delay_pad``/``history_slots`` are static ring sizes (0 = size for
     ``cfg`` itself); ``params`` carries the traced per-scenario scalars;
     ``scheme`` owns the ``extra`` slot (None = the default MatchRDMA
-    block)."""
+    block); ``channel`` owns the ``chan``/``retx_*`` slots (None = the
+    ideal channel — the slots stay empty)."""
     f = num_flows
     if delay_pad <= 0:
         delay_pad = _delay_steps(cfg)
@@ -216,8 +220,17 @@ def init_state(cfg: NetConfig, num_flows: int, params: NetParams = None,
         params = NetParams.of(cfg)
     if scheme is None:
         scheme = Scheme()
+    channel = get_channel_model(channel)
     z = jnp.zeros((f,), jnp.float32)
     nic = params.nic_gbps * 1e9 / 8.0
+    if channel.is_ideal:
+        chan = backlog = retx_line = retx_inflight = None
+    else:
+        chan = channel.init_channel_state(
+            cfg, params, f, key=scenario_key(
+                jax.random.PRNGKey(cfg.channel_seed), params))
+        backlog, retx_inflight = z, z
+        retx_line = jnp.zeros((delay_pad, f), jnp.float32)
     return SimState(
         sent=z, acked=z, delivered=z,
         done_at_us=jnp.full((f,), INF),
@@ -236,12 +249,14 @@ def init_state(cfg: NetConfig, num_flows: int, params: NetParams = None,
         extra=scheme.init_extra_state(
             cfg, params, f, history_slots=history_slots,
             chan_delay_pad=delay_pad + _proc_steps(cfg)),
+        chan=chan, retx_backlog=backlog, retx_line=retx_line,
+        retx_inflight=retx_inflight,
     )
 
 
 def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
                  period_slots: int = 0, params: NetParams = None,
-                 delay_pad: int = 0):
+                 delay_pad: int = 0, channel=None):
     """Build the per-step transition — the scheme-agnostic skeleton.
 
     ``wl``: the traced per-flow workload leaves. All per-scenario scalars
@@ -249,9 +264,15 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
     every cell of a vmapped scenario batch; ``cfg`` only contributes static
     structure (dt, slot layout, DCQCN constants). ``scheme`` is a
     registered name or a ``Scheme`` instance; everything scheme-specific
-    happens inside its hooks.
+    happens inside its hooks. ``channel`` is a registered channel-model
+    name or ``ChannelModel`` instance (None = ``"ideal"``): non-ideal
+    models get the single channel hook point between the pipe exit and the
+    destination OTN, and the engine's loss-repair path (notification ring,
+    retransmit backlog served at ``Scheme.retx_rate``) activates.
     """
     scheme = get_scheme(scheme)
+    channel = get_channel_model(channel)
+    impaired = not channel.is_ideal
     if params is None:
         params = NetParams.of(cfg)
     if delay_pad <= 0:
@@ -290,6 +311,14 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         d_steps=d_steps,
     )
     rtt_scale = scheme.rtt_scale(ctx)
+    if impaired:
+        # counter-based randomness: the per-step key is a pure function of
+        # (static seed, per-scenario salt, step index) — deterministic,
+        # resume-safe inside lax.scan, shared across schemes (common
+        # random numbers for paired comparisons)
+        chan_key0 = scenario_key(
+            jax.random.PRNGKey(cfg.channel_seed), params)
+    zero_f = jnp.zeros((is_inter.shape[0],), jnp.float32)
 
     def step(state: SimState, t: jax.Array):
         t_us = t.astype(jnp.float32) * dt_us
@@ -311,6 +340,24 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         pause_sig = state.pause_line[ridx]
         pipe_out = state.pipe[ridx]
 
+        # ------------------------------------------------ 2b. channel hook
+        # The single hook point of the channel subsystem: what leaves the
+        # pipe is impaired BEFORE the destination OTN sees it, and the
+        # source-OTN line capacity may be dimmed (OTN flap). Lost bytes
+        # ride the loss-notification ring back to the source (delay D).
+        paused_src = pause_sig > 0.5                   # delayed dst PFC
+        cap_src = jnp.where(paused_src, 0.0, c_otn * dt_s)
+        if impaired:
+            retx_arr = state.retx_line[ridx]
+            eff = channel.apply_impairments(ctx, state.chan, ChannelInputs(
+                t=t, key=jax.random.fold_in(chan_key0, t),
+                pipe_out=pipe_out, cap_src=cap_src))
+            pipe_arrivals, lost = eff.arrivals, eff.lost
+            cap_src, chan_new = eff.cap_src, eff.chan
+        else:
+            retx_arr = zero_f
+            pipe_arrivals, lost, chan_new = pipe_out, zero_f, None
+
         # ------------------------------------------------ 3. ACK accounting
         acked_inter = scheme.ack_view(ctx, state, ack_arr)
         acked = jnp.where(is_inter > 0, acked_inter,
@@ -324,13 +371,40 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         # src-OTN -> sender PFC (1 step, from last-step queue)
         src_nic_pause = (jnp.sum(state.q_src) > xoff_otn).astype(jnp.float32)
         rate = rate * jnp.where(is_inter > 0, 1.0 - src_nic_pause, 1.0)
+        # -------------------------------------------- 4b. loss repair
+        # Lost bytes whose notification has arrived are retransmitted with
+        # priority: the scheme grants a repair rate (retx_rate) and the
+        # skeleton deducts what repair uses from the new-data rate, so
+        # total per-flow emission never exceeds max(rate, granted) * dt.
+        # The where() keeps the no-repair branch the UNTOUCHED rate tensor
+        # AND leaves the send/sent expressions below structurally
+        # identical to the ideal path — at zero impairments the compiled
+        # arithmetic (XLA fusion/FMA contraction included) is the
+        # pre-channel program's, which the zero-impairment identity test
+        # pins bit-for-bit against the goldens.
+        if impaired:
+            backlog_avail = state.retx_backlog + retx_arr
+            retx_bps = jnp.maximum(scheme.retx_rate(ctx, state, rate), 0.0)
+            retx_send = (jnp.minimum(jnp.minimum(backlog_avail,
+                                                 retx_bps * dt_s),
+                                     nic * dt_s)
+                         * is_inter * (1.0 - src_nic_pause))
+            rate = jnp.where(retx_send > 0.0,
+                             jnp.maximum(rate - retx_send / dt_s, 0.0),
+                             rate)
+            retx_backlog = backlog_avail - retx_send
+        else:
+            retx_send, retx_backlog = zero_f, zero_f
         send = rate * active * dt_s                    # bytes this step
         sent = state.sent + send
 
         # ------------------------------------------------ 5. source OTN
-        paused_src = pause_sig > 0.5                   # delayed dst PFC
-        cap_src = jnp.where(paused_src, 0.0, c_otn * dt_s)
         arrivals_src = send * is_inter
+        if impaired:
+            # where(): at retx_send == 0 the select returns the original
+            # arrivals tensor (see the send select above)
+            arrivals_src = jnp.where(retx_send > 0.0,
+                                     arrivals_src + retx_send, arrivals_src)
         q_src, drained_src = scheme.src_otn_release(ctx, state, arrivals_src,
                                                     cap_src, active)
         pipe = state.pipe.at[ridx].set(drained_src)    # arrives at t + D
@@ -339,7 +413,8 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         # ------------------------------------------------ 6. destination OTN
         leaf_pfc = (jnp.sum(state.q_leaf) > xoff).astype(jnp.float32)
         cap_dst = c_leaf * dt_s * (1.0 - leaf_pfc)
-        q_dst, drained_dst = drain_proportional(state.q_dst, pipe_out, cap_dst)
+        q_dst, drained_dst = drain_proportional(state.q_dst, pipe_arrivals,
+                                                cap_dst)
         egress_bytes = jnp.sum(drained_dst)
         q_dst_tot = jnp.sum(q_dst)
         pause_dst = pfc_hysteresis(state.pause_dst, q_dst_tot, xoff_otn, xon_otn)
@@ -366,7 +441,7 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         fb = scheme.feedback(ctx, state, SchemeSignals(
             t=t, active=active, sent=sent, cnp_out=cnp_out, cnp_arr=cnp_arr,
             egress_bytes=egress_bytes, q_dst_tot=q_dst_tot, q_leaf=q_leaf,
-            leaf_pfc=leaf_pfc))
+            leaf_pfc=leaf_pfc, retx_arr=retx_arr, retx_backlog=retx_backlog))
 
         # ------------------------------------------------ 10. return paths
         ack_line = state.ack_line.at[ridx].set(drained_leaf * is_inter)
@@ -379,6 +454,12 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         newly_done = (delivered >= total_bytes) & (state.done_at_us >= INF)
         done_at = jnp.where(newly_done, t_us, state.done_at_us)
 
+        if impaired:
+            retx_line = state.retx_line.at[ridx].set(lost)
+            retx_inflight = state.retx_inflight + lost - retx_arr
+        else:
+            retx_line, retx_inflight = None, None
+
         new_state = SimState(
             sent=sent, acked=acked, delivered=delivered, done_at_us=done_at,
             cc=cc, cnp_timer=cnp_timer, marked_acc=marked_acc,
@@ -387,10 +468,17 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
             pipe=pipe, inflight=inflight,
             ack_line=ack_line, cnp_line=cnp_line,
             pause_line=pause_line, pause_dst=pause_dst, extra=fb.extra,
+            chan=chan_new, retx_backlog=(retx_backlog if impaired else None),
+            retx_line=retx_line, retx_inflight=retx_inflight,
         )
         # per-flow byte conservation residual: everything the sender emitted
-        # is either delivered or sitting in exactly one queue / the pipe
+        # is either delivered or sitting in exactly one queue / the pipe —
+        # with a channel, also the loss-notification transit, the
+        # retransmit backlog, or a jitter deferral buffer
         residual = sent - delivered - q_src - q_dst - q_leaf - inflight
+        if impaired:
+            residual = (residual - retx_inflight - retx_backlog
+                        - channel.held_bytes(chan_new))
         cons_err = jnp.max(jnp.abs(residual) / jnp.maximum(sent, 1.0))
         out = {
             "q_src": jnp.sum(q_src),
@@ -402,6 +490,31 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
             "thr_intra": jnp.sum(drained_leaf * is_intra) / dt_s,
             "cons_err": cons_err,
         }
+        if impaired:
+            # engine-owned channel trace keys (goodput = wire - lost: with
+            # selective repair nothing delivered is ever a duplicate)
+            backlog_tot = jnp.sum(retx_backlog)
+            # granted repair capacity, floored at 1 MB/s: a transport
+            # whose window is momentarily exhausted still times out and
+            # retransmits eventually — without the floor a zero-rate step
+            # inflates the wait estimate to the histogram clamp
+            serv_cap = jnp.maximum(
+                jnp.sum(jnp.minimum(retx_bps, nic) * is_inter), 1e6)
+            d_us = d_steps.astype(jnp.float32) * dt_us
+            # fluid repair-latency estimate for the currently pending
+            # backlog: notification transit D + virtual drain time at the
+            # granted repair rate + retransmit transit D
+            wait_us = jnp.where(
+                backlog_tot > 0,
+                2.0 * d_us + backlog_tot / serv_cap * 1e6,
+                0.0)
+            out.update({
+                "chan_wire": jnp.sum(pipe_out),
+                "chan_lost": jnp.sum(lost),
+                "chan_retx": jnp.sum(retx_send),
+                "chan_backlog": backlog_tot,
+                "chan_repair_wait_us": wait_us,
+            })
         out.update(scheme.extra_traces(ctx, state))
         return new_state, out
 
@@ -409,7 +522,7 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
     return step
 
 
-def _scan_with_mode(step, scheme, state0, steps: int, mode: str,
+def _scan_with_mode(step, scheme, channel, state0, steps: int, mode: str,
                     decimate: int, warm: int):
     """Drive the per-step transition under one of the execution modes.
 
@@ -420,7 +533,7 @@ def _scan_with_mode(step, scheme, state0, steps: int, mode: str,
     """
     ts = jnp.arange(steps, dtype=jnp.int32)
     if mode == "metrics":
-        acc0 = _init_metric_acc(scheme, step.ctx, state0)
+        acc0 = _init_metric_acc(scheme, channel, step.ctx, state0)
 
         def mstep(carry, t):
             state, acc = carry
@@ -429,6 +542,9 @@ def _scan_with_mode(step, scheme, state0, steps: int, mode: str,
             acc = _accumulate_engine(acc, out, inc)
             acc = acc._replace(scheme=scheme.accumulate_metrics(
                 step.ctx, acc.scheme, state, out, inc))
+            if not channel.is_ideal:
+                acc = acc._replace(chan=channel.accumulate_metrics(
+                    step.ctx, acc.chan, state, out, inc))
             return (state, acc), None
 
         (final, acc), _ = jax.lax.scan(mstep, (state0, acc0), ts)
@@ -465,12 +581,14 @@ def _check_trace_mode(trace_mode: str, decimate: int) -> None:
 def simulate(cfg: NetConfig, workload, scheme,
              horizon_us: Optional[float] = None, period_slots: int = 0,
              delay_pad: int = 0, history_slots: int = 0,
-             trace_mode: str = "full", decimate: int = 1):
+             trace_mode: str = "full", decimate: int = 1, channel=None):
     """Run one simulation; returns (final_state, traces dict of [T] arrays)
     — or ``(final_state, MetricAcc)`` under ``trace_mode="metrics"``.
 
     ``workload``: a ``Workload`` (or prebuilt ``WorkloadParams``);
-    ``scheme``: a registered name or ``Scheme`` instance.
+    ``scheme``: a registered name or ``Scheme`` instance; ``channel``: a
+    registered channel-model name or ``ChannelModel`` instance (None =
+    ``"ideal"`` — names stay first-class here, mirroring the grid APIs).
     ``delay_pad``/``history_slots`` override the static ring sizes (0 = size
     for ``cfg``) — pass the batch padding to reproduce a ``simulate_batch``
     cell bit-for-bit. ``trace_mode``/``decimate``: see the module docstring.
@@ -483,6 +601,7 @@ def simulate(cfg: NetConfig, workload, scheme,
             "remain first-class in the batched sweep APIs)",
             DeprecationWarning, stacklevel=2)
     scheme = get_scheme(scheme)
+    channel = get_channel_model(channel)
     _check_trace_mode(trace_mode, decimate)
     steps = cfg.horizon_steps(horizon_us)
     wlp = workload if isinstance(workload, WorkloadParams) \
@@ -490,21 +609,24 @@ def simulate(cfg: NetConfig, workload, scheme,
     wlp = WorkloadParams(*(jnp.asarray(v) for v in wlp))
     return _run_traced(cfg, wlp, scheme, steps, period_slots,
                        delay_pad, history_slots, trace_mode, decimate,
-                       int(steps * WARMUP_FRAC))
+                       int(steps * WARMUP_FRAC), channel)
 
 
 @partial(jax.jit, static_argnames=("scheme", "steps", "period_slots", "cfg",
                                    "delay_pad", "history_slots", "mode",
-                                   "decimate", "warm"))
+                                   "decimate", "warm", "channel"))
 def _run_traced(cfg, wlp, scheme, steps, period_slots,
                 delay_pad=0, history_slots=0, mode="full", decimate=1,
-                warm=0):
+                warm=0, channel=None):
+    channel = get_channel_model(channel)
     f = wlp.is_inter.shape[0]
     state0 = init_state(cfg, f, delay_pad=delay_pad,
-                        history_slots=history_slots, scheme=scheme)
+                        history_slots=history_slots, scheme=scheme,
+                        channel=channel)
     step = make_step_fn(cfg, wlp, scheme, period_slots,
-                        delay_pad=delay_pad)
-    return _scan_with_mode(step, scheme, state0, steps, mode, decimate, warm)
+                        delay_pad=delay_pad, channel=channel)
+    return _scan_with_mode(step, scheme, channel, state0, steps, mode,
+                           decimate, warm)
 
 
 # ---------------------------------------------------------------------------
@@ -553,7 +675,7 @@ def simulate_batch(cfgs: Sequence[NetConfig], workload, scheme,
                    trace_mode: str = "full", decimate: int = 1,
                    delay_pad: int = 0, history_slots: int = 0,
                    devices: Optional[Sequence] = None,
-                   warm_steps: Optional[int] = None):
+                   warm_steps: Optional[int] = None, channel=None):
     """Run a whole scenario grid as ONE vmapped computation.
 
     ``cfgs``: the per-scenario configs (distance / capacity / buffer grids);
@@ -571,12 +693,16 @@ def simulate_batch(cfgs: Sequence[NetConfig], workload, scheme,
     ``delay_pad``/``history_slots`` set MINIMUM static ring sizes (so
     chunked launches of one big grid share a compiled program);
     ``warm_steps`` overrides the warm-up cutoff of the streaming
-    reductions (default ``WARMUP_FRAC`` of the horizon).
+    reductions (default ``WARMUP_FRAC`` of the horizon); ``channel`` is a
+    registered channel-model name or instance (None = ``"ideal"``) —
+    impairment KNOBS are traced ``NetParams`` leaves, so a loss x jitter
+    grid still compiles once per scheme.
     """
     cfgs = list(cfgs)
     if not cfgs:
         raise ValueError("simulate_batch: empty config batch")
     scheme = get_scheme(scheme)
+    channel = get_channel_model(channel)
     _check_trace_mode(trace_mode, decimate)
     tmpl = batch_template(cfgs)
     steps = tmpl.horizon_steps(
@@ -597,21 +723,23 @@ def simulate_batch(cfgs: Sequence[NetConfig], workload, scheme,
         params, wlp = shard_scenario_axis(params, wlp, devs)
     return _run_traced_batch(tmpl, params, wlp, scheme, steps,
                              period_slots, delay_pad, history_slots,
-                             trace_mode, decimate, warm)
+                             trace_mode, decimate, warm, channel)
 
 
 def _run_traced_batch_impl(cfg, params, wlp, scheme, steps, period_slots,
                            delay_pad, history_slots, mode="full",
-                           decimate=1, warm=0):
+                           decimate=1, warm=0, channel=None):
+    channel = get_channel_model(channel)
     f = wlp.is_inter.shape[-1]
 
     def one_scenario(p, w):
         state0 = init_state(cfg, f, params=p, delay_pad=delay_pad,
-                            history_slots=history_slots, scheme=scheme)
+                            history_slots=history_slots, scheme=scheme,
+                            channel=channel)
         step = make_step_fn(cfg, w, scheme, period_slots,
-                            params=p, delay_pad=delay_pad)
-        return _scan_with_mode(step, scheme, state0, steps, mode, decimate,
-                               warm)
+                            params=p, delay_pad=delay_pad, channel=channel)
+        return _scan_with_mode(step, scheme, channel, state0, steps, mode,
+                               decimate, warm)
 
     return jax.vmap(one_scenario)(params, wlp)
 
@@ -628,7 +756,7 @@ def _jitted_traced_batch():
     return partial(jax.jit,
                    static_argnames=("cfg", "scheme", "steps", "period_slots",
                                     "delay_pad", "history_slots", "mode",
-                                    "decimate", "warm"),
+                                    "decimate", "warm", "channel"),
                    donate_argnums=donate)(_run_traced_batch_impl)
 
 

@@ -36,6 +36,7 @@ import jax
 import numpy as np
 
 from repro.config.base import NetConfig, batch_template
+from repro.netsim.channel import get_channel_model
 from repro.netsim.fluid import (
     WARMUP_FRAC, MetricAcc, batch_padding, hist_quantile, simulate_batch,
 )
@@ -114,6 +115,31 @@ def _assemble_rows(cfgs: Sequence[NetConfig], scheme_name: str,
     return rows
 
 
+def _channel_cols_from_traces(traces_np: dict, warm: int,
+                              dt_s: float) -> dict:
+    """The channel metric columns from materialized ``chan_*`` traces —
+    the full/decimate-mode twin of ``ChannelModel.finalize_metrics`` (same
+    column set, so impairment sweeps agree across trace modes)."""
+    wire = traces_np["chan_wire"][:, warm:].astype(np.float64)
+    lost = traces_np["chan_lost"][:, warm:].astype(np.float64)
+    retx = traces_np["chan_retx"][:, warm:].astype(np.float64)
+    wait = traces_np["chan_repair_wait_us"][:, warm:]
+    per_s = 1.0 / (max(wire.shape[1], 1) * dt_s)
+    # p99 over steps with a repair actually pending (matches the streamed
+    # histogram, which only counts wait > 0 samples)
+    p99 = np.zeros(wire.shape[0])
+    for i in range(wire.shape[0]):
+        pending = wait[i][wait[i] > 0]
+        p99[i] = np.percentile(pending, 99) if pending.size else 0.0
+    return {
+        "goodput_gbps": (wire.sum(axis=1) - lost.sum(axis=1))
+        * per_s * 8.0 / 1e9,
+        "wire_gbps": wire.sum(axis=1) * per_s * 8.0 / 1e9,
+        "retx_frac": retx.sum(axis=1) / np.maximum(wire.sum(axis=1), 1.0),
+        "p99_repair_latency_us": p99,
+    }
+
+
 def _metrics_batch(cfgs: Sequence[NetConfig], wl: WorkloadParams,
                    scheme_name: str, final_np: dict,
                    traces_np: dict) -> List[Dict[str, float]]:
@@ -137,11 +163,14 @@ def _metrics_batch(cfgs: Sequence[NetConfig], wl: WorkloadParams,
         "intra_thr_gbps":
             traces_np["thr_intra"][:, warm:].mean(axis=1) * 8.0 / 1e9,
     }
+    if "chan_wire" in traces_np:
+        cols.update(_channel_cols_from_traces(
+            traces_np, warm, cfgs[0].dt_us * 1e-6))
     return _assemble_rows(cfgs, scheme_name, cols)
 
 
 def _metrics_streaming(cfgs: Sequence[NetConfig], wl: WorkloadParams,
-                       scheme, final_np: dict, acc: MetricAcc,
+                       scheme, channel, final_np: dict, acc: MetricAcc,
                        steps: int, warm: int) -> List[Dict[str, float]]:
     """The same Fig. 3 metric set from the O(B) streamed accumulators
     (``trace_mode="metrics"`` — no [B, T] array ever existed). p99 comes
@@ -163,6 +192,11 @@ def _metrics_streaming(cfgs: Sequence[NetConfig], wl: WorkloadParams,
     }
     extra = scheme.finalize_metrics(
         jax.tree.map(np.asarray, acc.scheme), steps, n_warm)
+    if not channel.is_ideal:
+        extra = dict(extra or {})
+        extra.update(channel.finalize_metrics(
+            jax.tree.map(np.asarray, acc.chan), steps, n_warm,
+            cfgs[0].dt_us * 1e-6))
     return _assemble_rows(cfgs, scheme.name, cols, extra)
 
 
@@ -255,12 +289,13 @@ def _grid_static(cfgs, horizon_us, delay_pad: int, history_slots: int):
 
 def _execute_plan(plan: Sequence[_Launch], cfgs, wlp: WorkloadParams,
                   grid_static, period_slots, trace_mode, decimate,
-                  devices) -> Dict[object, list]:
+                  devices, channel=None) -> Dict[object, list]:
     """Run every launch; returns scheme -> full row list (grid order).
     ``grid_static`` is the shared ``_grid_static`` tuple, so all chunks
     (and all schemes) see identical static shapes, hence one compiled
     program per scheme."""
     horizon, steps, warm, delay_pad, history_slots = grid_static
+    channel = get_channel_model(channel)
     wlp_np = [np.asarray(v) for v in wlp]
 
     rows: Dict[object, list] = {}
@@ -273,13 +308,14 @@ def _execute_plan(plan: Sequence[_Launch], cfgs, wlp: WorkloadParams,
             sub_cfgs, sub_wlp, launch.scheme, horizon, period_slots,
             trace_mode=trace_mode, decimate=decimate,
             delay_pad=delay_pad, history_slots=history_slots,
-            devices=devices, warm_steps=warm)
+            devices=devices, warm_steps=warm, channel=channel)
         final_np = {"delivered": np.asarray(final.delivered),
                     "done_at_us": np.asarray(final.done_at_us)}
         wl_np = WorkloadParams(*(np.asarray(v) for v in sub_wlp))
         if trace_mode == "metrics":
             sub_rows = _metrics_streaming(sub_cfgs, wl_np, launch.scheme,
-                                          final_np, aux, steps, warm)
+                                          channel, final_np, aux, steps,
+                                          warm)
         else:
             traces_np = {k: np.asarray(v) for k, v in aux.items()}
             sub_rows = _metrics_batch(sub_cfgs, wl_np, launch.scheme.name,
@@ -298,22 +334,23 @@ def run_experiment(cfg: NetConfig, workload: Workload, scheme,
                    period_slots: int = 0, delay_pad: int = 0,
                    history_slots: int = 0, *,
                    trace_mode: str = "full",
-                   decimate: int = 1) -> Dict[str, float]:
+                   decimate: int = 1, channel=None) -> Dict[str, float]:
     """Returns the Fig. 3 metric set for one (config, workload, scheme) —
     a B=1 delegation onto the batch-wide extractors (one copy of the
     metric definitions, no single-cell fork).
 
     ``scheme`` as a bare name string is deprecated here (pass
-    ``get_scheme(name)``). ``delay_pad``/``history_slots``: minimum static
-    ring sizes — pass a batch's padding to reproduce one of its cells
-    exactly."""
+    ``get_scheme(name)``). ``channel``: registered channel-model name or
+    instance (None = ``"ideal"``). ``delay_pad``/``history_slots``: minimum
+    static ring sizes — pass a batch's padding to reproduce one of its
+    cells exactly."""
     if isinstance(scheme, str):
         _warn_string_scheme("run_experiment")
     scheme = get_scheme(scheme)
     return run_experiment_batch(
         [cfg], workload, scheme, horizon_us, period_slots,
         trace_mode=trace_mode, decimate=decimate, delay_pad=delay_pad,
-        history_slots=history_slots)[0]
+        history_slots=history_slots, channel=channel)[0]
 
 
 def run_experiment_batch(cfgs: Sequence[NetConfig], workload, scheme,
@@ -322,8 +359,8 @@ def run_experiment_batch(cfgs: Sequence[NetConfig], workload, scheme,
                          trace_mode: str = "full", decimate: int = 1,
                          chunk_cells: Optional[int] = None,
                          devices: Optional[Sequence] = None,
-                         delay_pad: int = 0,
-                         history_slots: int = 0) -> List[Dict[str, float]]:
+                         delay_pad: int = 0, history_slots: int = 0,
+                         channel=None) -> List[Dict[str, float]]:
     """Fig. 3 metrics for every scenario of a grid, from a chunked launch
     plan (one compiled program per scheme) and one vectorized metric pass
     per launch. ``workload``: shared ``Workload``, per-scenario sequence,
@@ -333,9 +370,14 @@ def run_experiment_batch(cfgs: Sequence[NetConfig], workload, scheme,
     is O(B), no [B, T] trace array is ever allocated or transferred, and
     scheme-streamed columns (``Scheme.finalize_metrics``) join the rows.
     ``chunk_cells`` caps cells per device launch (None = bounded-memory
-    auto size); ``devices`` restricts sharding of the scenario axis."""
+    auto size); ``devices`` restricts sharding of the scenario axis;
+    ``channel`` selects the long-haul channel model (name or instance,
+    None = ``"ideal"``) — non-ideal channels add the ``goodput_gbps`` /
+    ``wire_gbps`` / ``retx_frac`` / ``p99_repair_latency_us`` columns in
+    every trace mode."""
     cfgs = list(cfgs)
     scheme = get_scheme(scheme)
+    channel = get_channel_model(channel)
     wlp = as_workload_batch(workload, len(cfgs))
     grid_static = _grid_static(cfgs, horizon_us, delay_pad, history_slots)
     n_dev = len(devices) if devices is not None else len(jax.devices())
@@ -343,7 +385,8 @@ def run_experiment_batch(cfgs: Sequence[NetConfig], workload, scheme,
                          chunk_cells, n_dev)
     plan = _plan_launches(len(cfgs), (scheme,), chunk, n_dev)
     return _execute_plan(plan, cfgs, wlp, grid_static, period_slots,
-                         trace_mode, decimate, devices)[scheme]
+                         trace_mode, decimate, devices,
+                         channel=channel)[scheme]
 
 
 def convergence_horizon_us(cfgs: Sequence[NetConfig],
@@ -381,7 +424,7 @@ def sweep_grid(scenarios, workload=None, schemes=(),
                horizon_us: Optional[float] = None, period_slots: int = 0, *,
                trace_mode: str = "full", decimate: int = 1,
                chunk_cells: Optional[int] = None,
-               devices: Optional[Sequence] = None):
+               devices: Optional[Sequence] = None, channel=None):
     """Heterogeneous scenario grids × schemes, executed as ONE launch plan:
     the grid is stacked once, chunked once, and every (scheme, chunk) pair
     is a device launch sharing the grid-wide static shapes. Returns rows in
@@ -397,7 +440,11 @@ def sweep_grid(scenarios, workload=None, schemes=(),
     ``trace_mode="metrics"`` makes the whole sweep O(B) in device memory
     (plus per-scheme streamed columns); with auto ``chunk_cells`` a
     10k-cell grid runs in bounded memory on a single device and shards
-    across all of ``jax.devices()`` when more are visible.
+    across all of ``jax.devices()`` when more are visible. ``channel``
+    selects the long-haul channel model for every cell (name or instance,
+    None = ``"ideal"``); impairment KNOBS (loss_rate, jitter_us, ...) are
+    traced ``NetParams`` leaves, so an impairment grid still runs as one
+    compiled program per scheme.
     """
     scenarios = list(scenarios)
     if not scenarios:
@@ -425,6 +472,7 @@ def sweep_grid(scenarios, workload=None, schemes=(),
             "sweep_grid: no schemes given — pass schemes=(\"dcqcn\", ...) "
             "(or positionally after the Scenario grid)")
     scheme_objs = [get_scheme(s) for s in schemes]
+    channel = get_channel_model(channel)
     wlp = as_workload_batch(wl, len(cfgs))
     grid_static = _grid_static(cfgs, horizon_us, 0, 0)
     n_dev = len(devices) if devices is not None else len(jax.devices())
@@ -432,6 +480,7 @@ def sweep_grid(scenarios, workload=None, schemes=(),
                          chunk_cells, n_dev)
     plan = _plan_launches(len(cfgs), scheme_objs, chunk, n_dev)
     by_scheme = _execute_plan(plan, cfgs, wlp, grid_static, period_slots,
-                              trace_mode, decimate, devices)
+                              trace_mode, decimate, devices,
+                              channel=channel)
     return [by_scheme[s][i]
             for i in range(len(cfgs)) for s in scheme_objs]

@@ -104,6 +104,10 @@ class SchemeSignals(NamedTuple):
     q_dst_tot: jax.Array         # scalar — new dst-OTN backlog
     q_leaf: jax.Array            # [F] new dst-leaf queue
     leaf_pfc: jax.Array          # scalar — leaf asserting PFC toward dst OTN
+    # channel-subsystem loss signals (zeros under the ideal channel):
+    retx_arr: jax.Array          # [F] loss-notification bytes arriving at
+                                 # the source after the one-way delay D
+    retx_backlog: jax.Array      # [F] post-service retransmit backlog
 
 
 class Feedback(NamedTuple):
@@ -169,6 +173,18 @@ class Scheme:
         """Drain law of the source OTN toward the long haul. Returns
         ``(new_q_src [F], drained [F])``. Default: FIFO-fair fluid drain."""
         return drain_proportional(state.q_src, arrivals, cap)
+
+    def retx_rate(self, ctx: SchemeCtx, state, rate: jax.Array) -> jax.Array:
+        """[F] bytes/s the sender may devote to retransmitting lost bytes
+        this step (non-ideal channels only — the engine's loss-repair
+        path). Repair is served with priority: the skeleton deducts what it
+        grants from the new-data emission, so the default — repair shares
+        the scheme's own sender rate ``rate`` — models a transport whose
+        recovery competes with (and is squeezed by) its congestion-
+        controlled rate. Schemes with an explicit reliability budget
+        (sdr_rdma) return more than ``rate`` to repair faster than their
+        congested goodput rate."""
+        return rate
 
     def feedback(self, ctx: SchemeCtx, state, sig: SchemeSignals) -> Feedback:
         """CNP routing + extra-state updates. Default: CNPs ride the full

@@ -80,9 +80,13 @@ class MatchRdmaScheme(Scheme):
         mr = mr._replace(pseudo=pseudo)
 
         # ---- proxy brake from the delayed congestion summary, rate-limited:
-        # cut x0.7 (floor 0.25), recover with ~1 ms time constant.
+        # cut x0.7 (floor 0.25), recover with ~1 ms time constant. Loss
+        # notifications from the channel subsystem (zeros under the ideal
+        # channel — the golden pin stays bit-identical) brake the same way:
+        # a dropping long haul is over-injection the budget estimator only
+        # sees a control-window later.
         proxy_timer = state.proxy_timer + ctx.dt_us
-        fire = ((mr.summary_at_src > 0.5)
+        fire = (((mr.summary_at_src > 0.5) | (sig.retx_arr > 0))
                 & (proxy_timer >= cfg.cnp_interval_us))
         proxy_mod = jnp.where(fire,
                               jnp.maximum(state.proxy_mod * 0.7, 0.25),

@@ -17,15 +17,21 @@ batch-wide in one compiled launch:
                             window view only advances at coalescing
                             boundaries (between them acks accumulate in the
                             scheme's own cumulative ledger).
-  ``sdr_retx_budget_frac``  sender rate share reserved for repair traffic,
-                            engaged in proportion to the observed congestion
-                            level (an EWMA of arriving CNPs — the fluid
-                            model's loss proxy): goodput gives way to
-                            retransmissions exactly when the path degrades.
+  ``sdr_retx_budget_frac``  NIC rate share reserved for repair traffic,
+                            engaged in proportion to the observed degradation
+                            level (an EWMA of arriving CNPs AND — under a
+                            lossy channel model — of loss notifications):
+                            goodput gives way to retransmissions exactly when
+                            the path degrades.
 
 Hook mapping: ``ack_view`` exposes the coalesced snapshot, ``sender_rate``
 applies the selective-repeat window cap and the repair-budget reservation,
-``feedback`` advances the ack ledger / coalescing timer / congestion EWMA.
+``feedback`` advances the ack ledger / coalescing timer / congestion EWMA,
+and ``retx_rate`` grants the engine's loss-repair path the RESERVED budget
+on top of the congestion-controlled rate — the software-defined
+reliability slice that keeps repairing while DCQCN's rate is collapsed
+(strictly lower repair latency than e2e dcqcn at equal loss; pinned by
+test and by ``benchmarks/scheme_compare.py --impairment-grid``).
 Congestion control itself stays conventional end-to-end DCQCN — SDR-RDMA is
 a reliability architecture, not a CC scheme.
 """
@@ -86,6 +92,14 @@ class SdrRdmaScheme(Scheme):
                * (1.0 - self._retx_frac(ctx, state)))
         return jnp.where(ctx.is_inter > 0, eff, rate)
 
+    def retx_rate(self, ctx: SchemeCtx, state, rate):
+        """The software-defined reliability budget: repair gets the engaged
+        reservation (a NIC-rate slice, NOT squeezed by DCQCN) on top of
+        the default shared-rate service — so retransmissions keep flowing
+        at full budget while congestion collapses the goodput rate."""
+        return (super().retx_rate(ctx, state, rate)
+                + self._retx_frac(ctx, state) * ctx.nic)
+
     def feedback(self, ctx: SchemeCtx, state, sig: SchemeSignals) -> Feedback:
         sd = state.extra
         # Same delayed ACK-line reading the skeleton consumed this step:
@@ -99,9 +113,13 @@ class SdrRdmaScheme(Scheme):
         fire = timer >= ctx.params.sdr_ack_coalesce_us
         held = jnp.where(fire, ack_cum, sd.ack_held)
         timer = jnp.where(fire, 0.0, timer)
-        # congestion EWMA (~1 ms time constant): the loss proxy that
-        # engages the repair budget
-        hit = (jnp.sum(sig.cnp_arr * ctx.is_inter) > 0).astype(jnp.float32)
+        # degradation EWMA (~1 ms time constant) engaging the repair
+        # budget: CNP arrivals (the congestion proxy) OR actual loss
+        # notifications from the channel subsystem (zeros when ideal — the
+        # pre-channel pin stays bit-identical)
+        hit = ((jnp.sum(sig.cnp_arr * ctx.is_inter) > 0)
+               | (jnp.sum(sig.retx_arr * ctx.is_inter) > 0)
+               ).astype(jnp.float32)
         g = min(ctx.dt_us / 1000.0, 1.0)
         cong = (1.0 - g) * sd.cong_ewma + g * hit
         base = super().feedback(ctx, state, sig)   # e2e CNP routing

@@ -1,0 +1,82 @@
+"""Version-compatible shard_map / mesh-context shims.
+
+The multi-device code targets two JAX generations:
+
+  * JAX >= 0.5/0.6: ``jax.shard_map`` (kwarg ``check_vma``),
+    ``jax.set_mesh`` as the ambient-mesh context, and
+    ``jax.sharding.get_abstract_mesh()`` to read it back.
+  * JAX 0.4.x (the pinned CI install): ``jax.experimental.shard_map``
+    (kwarg ``check_rep``), the ``Mesh`` object itself as the context
+    manager, and the thread-resources physical mesh as the ambient mesh.
+
+Everything multi-device in this repo goes through the three shims below so
+``repro.parallel`` collectives, the grouped-MoE shard_map path and the
+subprocess tests run (not skip) on either generation. Import stays cheap:
+feature detection is attribute probing only — no device/backend
+initialization at import time.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=True):
+    """``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` on
+    0.4.x (where the replication-check kwarg is ``check_rep``). Usable as
+    a decorator factory like ``functools.partial(jax.shard_map, ...)``.
+    ``check_vma`` defaults to True like upstream — the shim is a drop-in,
+    it never silently weakens the replication check."""
+    if f is None:
+        return partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=check_vma)
+    if _HAS_NEW_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def axis_size(axis_name):
+    """STATIC size of a named mesh axis inside a shard_map region.
+    ``jax.lax.axis_size`` only exists on newer JAX; on 0.4.x
+    ``lax.psum(1, axis)`` constant-folds to the same Python int."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def set_mesh(mesh):
+    """The ambient-mesh context manager: ``jax.set_mesh`` on new JAX; on
+    0.4.x entering the ``Mesh`` itself sets the thread-resources physical
+    mesh (which ``get_ambient_mesh`` reads back)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def get_ambient_mesh():
+    """The mesh set by ``set_mesh``, or None when outside any context.
+    New JAX: ``jax.sharding.get_abstract_mesh()``; 0.4.x: the
+    thread-resources physical mesh."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        mesh = jax.sharding.get_abstract_mesh()
+        return None if (mesh is None or mesh.empty) else mesh
+    try:  # pragma: no cover - 0.4.x path, exercised by the subprocess tests
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+    except ImportError:
+        return None
+    return None if (mesh is None or mesh.empty) else mesh
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with explicit Auto axis types where the installed
+    JAX supports them (>= 0.5; on 0.4.x every axis is implicitly Auto)."""
+    from repro.launch.mesh import _axis_type_kwargs
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                         **_axis_type_kwargs(len(tuple(axis_names))))

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs lint (``make docs-check``): fail CI on documentation drift.
 
-Three checks, all against the live code so the docs cannot silently rot:
+Four checks, all against the live code so the docs cannot silently rot:
 
   1. Intra-repo links in ``README.md`` and ``docs/*.md`` resolve — every
      relative ``[text](path)`` target must exist on disk (anchors are
@@ -12,6 +12,10 @@ Three checks, all against the live code so the docs cannot silently rot:
      breaks the build.
   3. Hook coverage — every public hook method on ``Scheme`` (introspected,
      not hard-coded) is documented in ``docs/scheme-api.md``.
+  4. Channel-model coverage — same pair of checks for the channel
+     subsystem: every ``available_channel_models()`` name in a table row
+     of ``docs/channel-models.md``, every public ``ChannelModel`` hook
+     documented there.
 
 Exit status is the error count (0 = clean).
 
@@ -26,6 +30,7 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SCHEME_API_MD = os.path.join(ROOT, "docs", "scheme-api.md")
+CHANNEL_MD = os.path.join(ROOT, "docs", "channel-models.md")
 
 # [text](target) — excluding images' inner brackets is unnecessary here;
 # nested ![alt](img) links resolve the same way
@@ -56,40 +61,56 @@ def check_links(errors: list) -> None:
                     f"-> {target}")
 
 
-def check_scheme_table(errors: list) -> None:
-    from repro.netsim.schemes import Scheme, available_schemes
-
-    if not os.path.exists(SCHEME_API_MD):
-        errors.append("docs/scheme-api.md is missing")
+def check_registry_doc(errors: list, md_path: str, names, base_cls,
+                       label: str, hint: str = "") -> None:
+    """The shared registry-vs-doc check: every registered name appears in
+    a table row of ``md_path``, and every public hook method on
+    ``base_cls`` (introspected, not hard-coded — new hooks break the
+    build until written up) is mentioned."""
+    rel = os.path.relpath(md_path, ROOT)
+    if not os.path.exists(md_path):
+        errors.append(f"{rel} is missing")
         return
-    text = open(SCHEME_API_MD, encoding="utf-8").read()
+    text = open(md_path, encoding="utf-8").read()
     table_rows = [ln for ln in text.splitlines() if ln.lstrip().startswith("|")]
-    for name in available_schemes():
+    for name in names:
         if not any(f"`{name}`" in row for row in table_rows):
             errors.append(
-                f"docs/scheme-api.md: registered scheme {name!r} missing "
-                f"from the scheme table — document it (see "
-                f"docs/writing-a-scheme.md step 6)")
+                f"{rel}: registered {label} {name!r} missing from the "
+                f"table — document it{hint}")
 
-    # hook coverage: every public callable on Scheme must be documented
-    hooks = [m for m, v in vars(Scheme).items()
+    hooks = [m for m, v in vars(base_cls).items()
              if callable(v) and not m.startswith("_")]
     for hook in hooks:
         if f"`{hook}" not in text:
             errors.append(
-                f"docs/scheme-api.md: Scheme hook {hook!r} undocumented")
+                f"{rel}: {base_cls.__name__} hook {hook!r} undocumented")
+
+
+def check_scheme_table(errors: list) -> None:
+    from repro.netsim.schemes import Scheme, available_schemes
+    check_registry_doc(errors, SCHEME_API_MD, available_schemes(), Scheme,
+                       "scheme", hint=" (see docs/writing-a-scheme.md "
+                       "step 6)")
+
+
+def check_channel_table(errors: list) -> None:
+    from repro.netsim.channel import ChannelModel, available_channel_models
+    check_registry_doc(errors, CHANNEL_MD, available_channel_models(),
+                       ChannelModel, "channel model")
 
 
 def main() -> int:
     errors: list = []
     check_links(errors)
     check_scheme_table(errors)
+    check_channel_table(errors)
     for e in errors:
         print(f"docs-check: {e}", file=sys.stderr)
     n_files = len(_md_files())
     if not errors:
         print(f"docs-check: OK ({n_files} markdown files, links + scheme "
-              f"table + hook coverage)")
+              f"table + hook coverage + channel-model table)")
     return min(len(errors), 100)
 
 
