@@ -17,6 +17,10 @@
 #                               asserts channel columns, one compile per
 #                               scheme, sdr_rdma's repair-latency advantage,
 #                               and ideal-channel row parity
+#   make bench-topology-smoke - unequal-path (num_paths=3) grid across all
+#                               schemes (tiny, seconds, no json append);
+#                               asserts rdmacell's multi-link streamed
+#                               columns and one compile per scheme
 #   make docs-check           - docs lint: intra-repo links in README/docs,
 #                               scheme-table completeness, hook coverage
 #   make ci                   - deps + test + smokes + docs-check
@@ -26,6 +30,8 @@
 #   make bench-scheme-compare - full six-scheme Fig. 3-style sweep; appends
 #                               to BENCH_netsim_sweep.json
 #   make bench-impairment     - full six-scheme impairment grid; appends to
+#                               BENCH_netsim_sweep.json
+#   make bench-topology       - full unequal-path topology grid; appends to
 #                               BENCH_netsim_sweep.json
 
 PYTHON ?= python
@@ -37,7 +43,8 @@ PYTEST_W = -W "error:passing a scheme name string:DeprecationWarning:repro\.nets
 
 .PHONY: deps test ci bench-netsim bench-netsim-smoke \
 	bench-scheme-compare bench-scheme-compare-smoke \
-	bench-impairment bench-impairment-smoke docs-check
+	bench-impairment bench-impairment-smoke \
+	bench-topology bench-topology-smoke docs-check
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt || \
@@ -55,11 +62,14 @@ bench-scheme-compare-smoke:
 bench-impairment-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --impairment-grid --smoke
 
+bench-topology-smoke:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --topology-grid --smoke
+
 docs-check:
 	PYTHONPATH=src $(PYTHON) tools/docs_check.py
 
 ci: deps test bench-netsim-smoke bench-scheme-compare-smoke \
-	bench-impairment-smoke docs-check
+	bench-impairment-smoke bench-topology-smoke docs-check
 
 bench-netsim:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.netsim_sweep_bench
@@ -69,3 +79,6 @@ bench-scheme-compare:
 
 bench-impairment:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --impairment-grid
+
+bench-topology:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --topology-grid

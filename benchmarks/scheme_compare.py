@@ -1,8 +1,9 @@
-"""Fig. 3-style comparison sweep across ALL six registered schemes.
+"""Fig. 3-style comparison sweep across ALL seven registered schemes.
 
 The paper's Fig. 3 compares four control planes across distance; the
-related-work pack (PR 4) extends the comparison to six: ``dcqcn``,
-``pseudo_ack``, ``themis``, ``matchrdma``, ``geopipe``, ``sdr_rdma``. Every
+related-work pack extends the comparison to seven: ``dcqcn``,
+``pseudo_ack``, ``themis``, ``matchrdma``, ``geopipe``, ``sdr_rdma``
+(PR 4), and ``rdmacell`` (PR 6 — token-gated flowcell spraying). Every
 (distance x scheme) cell runs through ONE ``sweep_grid`` launch plan per
 scheme in streaming mode (``trace_mode="metrics"`` — O(B) device memory,
 scheme-streamed columns included), on the congestion workload whose
@@ -17,8 +18,15 @@ every scheme produces complete finite rows with its streamed columns, and
 appends nothing: it exists so ``make ci`` proves the six-scheme path on
 every run.
 
+``--topology-grid`` switches to the multi-link comparison: all schemes
+over an unequal-path (delay spread x capacity skew) grid at
+``num_paths=3`` — the setting rdmacell's token spraying exists for. Rows
+for ``rdmacell`` must carry ``mean_reorder_buf_mb`` and ``spray_entropy``
+(asserted), and the path tuples resolve into traced [L] leaves so the
+whole grid stays one compiled launch plan per scheme.
+
 ``--impairment-grid`` switches to the channel-subsystem comparison: all
-six schemes over a loss_rate x jitter_us grid on the ``impaired`` channel
+schemes over a loss_rate x jitter_us grid on the ``impaired`` channel
 model (knobs are traced ``NetParams`` leaves — the whole grid is ONE
 compiled launch plan per scheme, streaming mode). Rows gain the channel
 columns (``goodput_gbps``, ``wire_gbps``, ``retx_frac``,
@@ -43,7 +51,10 @@ from repro.netsim.workload import congestion_workload
 
 from benchmarks.netsim_sweep_bench import _append_record, _git_rev
 
-# scheme-streamed columns that must appear in every scheme's rows
+# scheme-streamed columns that must appear in every scheme's rows on the
+# single-pipe distance grid. rdmacell's spraying machinery only exists at
+# num_paths > 1 — on L=1 grids it streams the baseline's budget column,
+# and its reorder/entropy columns are asserted by the topology grid below.
 STREAMED_COLS = {
     "dcqcn": ("mean_cc_rate_gbps",),
     "themis": ("mean_cc_rate_gbps",),
@@ -51,7 +62,11 @@ STREAMED_COLS = {
     "matchrdma": ("mean_budget_gbps", "mean_budget_at_src_gbps"),
     "geopipe": ("mean_credit_mb", "credit_stall_frac"),
     "sdr_rdma": ("mean_ack_lag_mb", "mean_retx_reserve_frac"),
+    "rdmacell": ("mean_budget_gbps",),
 }
+
+# rdmacell columns every multi-link (topology-grid) row must carry
+TOPOLOGY_COLS = ("mean_reorder_buf_mb", "spray_entropy")
 
 
 def _workload(horizon_us: float):
@@ -160,6 +175,81 @@ def run_impairment_grid(full: bool = False, smoke: bool = False):
     return rows, cells, summary, wall_s
 
 
+def run_topology_grid(full: bool = False, smoke: bool = False):
+    """All seven schemes over an UNEQUAL-PATH grid: three parallel OTN
+    links at 100 km whose delay spread and capacity skew vary per cell
+    (``path_delay_scale`` / ``path_cap_frac`` resolve into traced [L]
+    leaves, so the whole grid is ONE compiled launch plan per scheme,
+    streaming mode). Asserts rdmacell's multi-link columns
+    (``mean_reorder_buf_mb``, ``spray_entropy``) on every cell and that
+    the compile count stays at one per scheme."""
+    from repro.netsim import fluid
+
+    spreads = ((1.0, 1.0, 1.0), (1.0, 1.5, 2.0), (1.0, 2.0, 4.0))
+    skews = ((1 / 3, 1 / 3, 1 / 3), (0.5, 0.3, 0.2), (0.6, 0.3, 0.1))
+    if full:
+        spreads = spreads + ((1.0, 3.0, 6.0),)
+        skews = skews + ((0.8, 0.15, 0.05),)
+    if smoke:
+        spreads = ((1.0, 1.0, 1.0), (1.0, 1.5, 2.0))
+        skews = ((0.5, 0.3, 0.2),)
+    cells = [(sp, sk) for sp in spreads for sk in skews]
+    cfgs = [NetConfig(distance_km=100.0, num_paths=3,
+                      path_delay_scale=sp, path_cap_frac=sk)
+            for sp, sk in cells]
+    horizon_us = 6_000.0 if smoke else 20_000.0
+    wl = _workload(horizon_us)
+
+    t0 = time.time()
+    n0 = fluid._run_traced_batch._cache_size()
+    rows = sweep_grid(cfgs, wl, ALL_SCHEMES, horizon_us,
+                      trace_mode="metrics")
+    compiles = fluid._run_traced_batch._cache_size() - n0
+    wall_s = time.time() - t0
+    assert compiles <= len(ALL_SCHEMES), (
+        f"{compiles} compiles for {len(ALL_SCHEMES)} schemes — the path "
+        f"tuples stopped resolving into traced [L] leaves")
+
+    by_scheme = {}
+    for r in rows:
+        by_scheme.setdefault(r["scheme"], []).append(r)
+    for name, rs in by_scheme.items():
+        assert len(rs) == len(cells), (name, len(rs))
+        assert all(_finite(r["throughput_gbps"]) for r in rs), name
+    for r in by_scheme["rdmacell"]:
+        for col in TOPOLOGY_COLS:
+            assert col in r and _finite(r[col]), (col, r)
+        assert 0.0 <= r["spray_entropy"] <= 1.0, r["spray_entropy"]
+
+    summary = {}
+    for name, rs in by_scheme.items():
+        summary[name] = {
+            "throughput_gbps_mean":
+                round(sum(r["throughput_gbps"] for r in rs) / len(rs), 2),
+            "peak_buffer_mb_worst":
+                round(max(r["peak_buffer_mb"] for r in rs), 2),
+        }
+    summary["rdmacell"]["spray_entropy_mean"] = round(
+        sum(r["spray_entropy"] for r in by_scheme["rdmacell"])
+        / len(cells), 4)
+
+    if not smoke:
+        _append_record({
+            "grid": {"bench": "scheme_compare_topology",
+                     "num_paths": 3, "distance_km": 100.0,
+                     "delay_spreads": [list(s) for s in spreads],
+                     "cap_skews": [[round(f, 4) for f in s] for s in skews],
+                     "schemes": list(ALL_SCHEMES),
+                     "horizon_us": horizon_us,
+                     "cells": len(cells) * len(ALL_SCHEMES)},
+            "git_rev": _git_rev(),
+            "wall_s": round(wall_s, 3),
+            "summary": summary,
+            "backend": __import__("jax").default_backend(),
+        })
+    return rows, cells, summary, wall_s
+
+
 def run(full: bool = False, smoke: bool = False):
     dists = (1.0, 10.0, 50.0, 100.0, 300.0, 500.0, 1000.0)
     if full:
@@ -233,12 +323,40 @@ def main():
                     help="tiny CI grid, seconds, no BENCH json append; "
                          "asserts complete rows for all six schemes")
     ap.add_argument("--impairment-grid", action="store_true",
-                    help="six schemes x (loss_rate x jitter_us) on the "
+                    help="schemes x (loss_rate x jitter_us) on the "
                          "'impaired' channel model — one compiled launch "
                          "plan per scheme; asserts sdr_rdma's repair-"
                          "latency advantage over dcqcn and ideal-channel "
                          "row parity")
+    ap.add_argument("--topology-grid", action="store_true",
+                    help="schemes x unequal-path (delay spread x capacity "
+                         "skew) grid at num_paths=3 — one compiled launch "
+                         "plan per scheme; asserts rdmacell's multi-link "
+                         "streamed columns on every cell")
     args = ap.parse_args()
+    if args.topology_grid:
+        rows, cells, summary, wall_s = run_topology_grid(
+            full=args.full, smoke=args.smoke)
+        cols = ("scheme", "delay_spread", "cap_skew", "throughput_gbps",
+                "peak_buffer_mb", "pause_ratio")
+        print(",".join(cols))
+        per_scheme = len(rows) // len(cells)
+        for i, r in enumerate(rows):
+            sp, sk = cells[i // per_scheme]
+            vals = dict(r, delay_spread="x".join(f"{x:g}" for x in sp),
+                        cap_skew="x".join(f"{x:.2g}" for x in sk))
+            print(",".join(f"{vals[c]:.4g}" if isinstance(vals[c], float)
+                           else str(vals[c]) for c in cols))
+        print(f"# {len(rows)} cells in {wall_s:.1f}s (topology grid, "
+              f"streaming mode, one compile per scheme)")
+        for name, s in summary.items():
+            extra = (f", spray_entropy={s['spray_entropy_mean']}"
+                     if "spray_entropy_mean" in s else "")
+            print(f"# {name}: mean thr={s['throughput_gbps_mean']} Gbps, "
+                  f"worst peak={s['peak_buffer_mb_worst']} MB{extra}")
+        if args.smoke:
+            print("SCHEME_COMPARE_TOPOLOGY_SMOKE_OK")
+        return
     if args.impairment_grid:
         rows, cells, summary, wall_s = run_impairment_grid(
             full=args.full, smoke=args.smoke)

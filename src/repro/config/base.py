@@ -237,6 +237,11 @@ class NetParams(NamedTuple):
     leaves, so a whole distance x capacity x buffer grid can run as ONE
     ``jax.vmap``-ed computation instead of one compile per cell.
 
+    The three ``link_*`` leaves are the per-link topology axis: shape
+    ``[L]`` with ``L = cfg.num_paths`` (STATIC — it keys the compile).
+    At ``L = 1`` they are present but unused: the engine takes the
+    single-pipe code path, whose jaxpr the goldens pin bit-for-bit.
+
     Build one with ``NetParams.of(cfg)``; stack a grid with
     ``stack_net_params([cfg0, cfg1, ...])`` (leaves gain a leading [B] axis).
     """
@@ -267,11 +272,20 @@ class NetParams(NamedTuple):
     jitter_us: Any               # f32 — mean stochastic extra delay
     flap_period_us: Any          # f32 — OTN protection-switch period (0=off)
     flap_depth: Any              # f32 — capacity cut inside a flap dip [0,1]
+    # rdmacell flowcell-spraying knobs (consumed only by the rdmacell
+    # scheme; traced so a token/ROB grid sweeps batch-wide)
+    rdmacell_token_bucket_us: Any  # f32 — per-link token-bucket depth (µs
+                                   # of that link's line rate)
+    rdmacell_rob_limit_mb: Any     # f32 — dst reorder-buffer budget (MB)
+    # per-link topology leaves ([L], L = cfg.num_paths — static):
+    link_delay_us: Any           # f32[L] — per-link one-way delay
+    link_cap_gbps: Any           # f32[L] — per-link line capacity
+    link_thresh_kb: Any          # f32[L] — per-link dst-OTN PFC threshold
 
     @classmethod
     def of(cls, cfg: "NetConfig") -> "NetParams":
         import jax.numpy as jnp
-        return cls(*(jnp.float32(v) for v in (
+        scalars = tuple(jnp.float32(v) for v in (
             cfg.one_way_delay_us, cfg.otn_capacity_gbps, cfg.dst_dc_gbps,
             cfg.nic_gbps, cfg.pfc_xoff_kb, cfg.pfc_xon_kb,
             cfg.otn_buffer_bdp_frac, cfg.ecn_kmin_kb, cfg.ecn_kmax_kb,
@@ -279,7 +293,16 @@ class NetParams(NamedTuple):
             cfg.budget_headroom, cfg.geopipe_credit_bdp_frac,
             cfg.sdr_window_bdp_frac, cfg.sdr_ack_coalesce_us,
             cfg.sdr_retx_budget_frac, cfg.loss_rate, cfg.loss_burst_len,
-            cfg.jitter_us, cfg.flap_period_us, cfg.flap_depth)))
+            cfg.jitter_us, cfg.flap_period_us, cfg.flap_depth,
+            cfg.rdmacell_token_bucket_us, cfg.rdmacell_rob_limit_mb))
+        import numpy as np
+        return cls(*scalars,
+                   link_delay_us=jnp.asarray(
+                       np.float32(cfg.path_delays_us())),
+                   link_cap_gbps=jnp.asarray(
+                       np.float32(cfg.path_caps_gbps())),
+                   link_thresh_kb=jnp.asarray(
+                       np.float32(cfg.path_pfc_kb())))
 
     def delay_steps(self, dt_us: float):
         """Traced step count of the long-haul delay (>= 1)."""
@@ -309,7 +332,9 @@ NET_TRACED_FIELDS = ("distance_km", "num_otn_links", "link_gbps",
                      "budget_headroom", "geopipe_credit_bdp_frac",
                      "sdr_window_bdp_frac", "sdr_ack_coalesce_us",
                      "sdr_retx_budget_frac", "loss_rate", "loss_burst_len",
-                     "jitter_us", "flap_period_us", "flap_depth")
+                     "jitter_us", "flap_period_us", "flap_depth",
+                     "rdmacell_token_bucket_us", "rdmacell_rob_limit_mb",
+                     "path_delay_scale", "path_cap_frac", "path_thresh_kb")
 
 
 def batch_template(cfgs: Sequence["NetConfig"]) -> "NetConfig":
@@ -344,6 +369,17 @@ class NetConfig:
     distance_km: float = 100.0            # inter-DC distance
     dst_dc_gbps: float = 400.0            # destination leaf capacity (shared w/ intra traffic)
     nic_gbps: float = 400.0               # server NIC line rate
+    # multi-path long haul (docs/topology.md). ``num_paths`` is STATIC —
+    # it fixes the [L] link-axis shape and keys the compile; at the default
+    # 1 the engine takes the single-pipe path the goldens pin bit-for-bit.
+    # The per-path tuples are traced values (length 0 or num_paths; () =
+    # the symmetric default): delay multipliers on one_way_delay_us,
+    # capacity fractions of otn_capacity_gbps (default: equal split), and
+    # per-path dst-OTN PFC thresholds (default: pfc_xoff_kb).
+    num_paths: int = 1
+    path_delay_scale: tuple = ()
+    path_cap_frac: tuple = ()
+    path_thresh_kb: tuple = ()
 
     # simulation
     dt_us: float = 5.0                    # fluid integration step
@@ -397,6 +433,12 @@ class NetConfig:
     sdr_window_bdp_frac: float = 1.0
     sdr_ack_coalesce_us: float = 50.0
     sdr_retx_budget_frac: float = 0.05
+    # RDMACell-style flowcell spraying (traced NetParams leaves, consumed
+    # only by the `rdmacell` scheme): per-link token-bucket depth in µs of
+    # that link's line rate, and the destination reorder-buffer budget the
+    # sender gate keeps occupancy under (docs/topology.md).
+    rdmacell_token_bucket_us: float = 50.0
+    rdmacell_rob_limit_mb: float = 64.0
 
     # Channel-impairment knobs (traced NetParams leaves — an impairment
     # grid sweeps batch-wide in one compiled program per scheme). Only
@@ -421,6 +463,34 @@ class NetConfig:
     def otn_capacity_gbps(self) -> float:
         return self.num_otn_links * self.link_gbps
 
+    # -- per-path topology (the [L] link axis; L = num_paths, static) ------
+    def _path_tuple(self, vals: tuple, default: float, what: str) -> tuple:
+        if len(vals) not in (0, self.num_paths):
+            raise ValueError(
+                f"NetConfig.{what}: expected {self.num_paths} entries "
+                f"(num_paths) or an empty tuple, got {len(vals)}")
+        return tuple(float(v) for v in vals) if vals \
+            else (default,) * self.num_paths
+
+    def path_delays_us(self) -> tuple:
+        """Per-path one-way delays (µs), length ``num_paths``."""
+        scales = self._path_tuple(self.path_delay_scale, 1.0,
+                                  "path_delay_scale")
+        return tuple(self.one_way_delay_us * s for s in scales)
+
+    def path_caps_gbps(self) -> tuple:
+        """Per-path line capacities (Gbps); the default splits the
+        aggregate OTN capacity equally, so L equal paths carry exactly the
+        single pipe's total."""
+        fracs = self._path_tuple(self.path_cap_frac, 1.0 / self.num_paths,
+                                 "path_cap_frac")
+        return tuple(self.otn_capacity_gbps * f for f in fracs)
+
+    def path_pfc_kb(self) -> tuple:
+        """Per-path dst-OTN PFC thresholds (KB; default pfc_xoff_kb)."""
+        return self._path_tuple(self.path_thresh_kb, self.pfc_xoff_kb,
+                                "path_thresh_kb")
+
     @property
     def control_proc_steps(self) -> int:
         """Control-subchannel OTN processing delay in fluid steps — the one
@@ -435,10 +505,12 @@ class NetConfig:
         traced ``NetParams.delay_steps`` so a static ring size can never
         undercut the traced wrap index (f64 here could round 3.4999...
         down where the f32 leaf rounds up — the ring would then be written
-        through a clamped out-of-range index)."""
+        through a clamped out-of-range index). With ``num_paths > 1`` this
+        is the MAX over the per-path delays, so one ring allocation covers
+        every link's wrap index."""
         import numpy as np
-        return max(int(np.round(np.float32(self.one_way_delay_us)
-                                / np.float32(self.dt_us))), 1)
+        return max(max(int(np.round(np.float32(d) / np.float32(self.dt_us)))
+                       for d in self.path_delays_us()), 1)
 
     def horizon_steps(self, horizon_us: float = None) -> int:
         """Scan length for a horizon (default: this config's) — the single

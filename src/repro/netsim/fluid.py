@@ -106,6 +106,17 @@ MTU = 1500.0
 # import time; as an f32 numpy scalar it traces identically
 INF = np.float32(1e30)
 
+
+def is_unfinished(done_at_us):
+    """True where ``done_at_us`` still carries the INF 'not done' sentinel.
+
+    The one definition both the engine's completion latch and the runner's
+    metric extractors compare against (works on numpy and jax arrays).
+    f32-safe: any sentinel at or above INF/2 counts, so a round-tripped or
+    arithmetically-perturbed sentinel can never masquerade as a real
+    completion time (real times are bounded by the horizon, µs-scale)."""
+    return done_at_us >= INF / 2
+
 WARMUP_FRAC = 0.1   # fraction of the horizon discarded as startup transient
 
 TRACE_MODES = ("full", "decimate", "metrics")
@@ -115,6 +126,14 @@ TRACE_MODES = ("full", "decimate", "metrics")
 STREAM_SUM_KEYS = ("q_src", "q_dst", "q_leaf", "pause_dst",
                    "thr_inter", "thr_intra")
 STREAM_MAX_KEYS = ("q_src", "q_dst", "q_leaf", "cons_err")
+
+# Trace keys that are per-step byte COUNTS (not levels): under
+# ``trace_mode="decimate"`` each kept row carries the SUM over its
+# decimate-block rather than the last step's sample, so time-normalized
+# columns (goodput/wire/retx rates) stay exact at any decimation — the
+# parity fix that keeps ``runner._channel_cols_from_traces`` in agreement
+# with the streamed ``ChannelModel.finalize_metrics`` path.
+DECIMATE_SUM_KEYS = ("chan_wire", "chan_lost", "chan_retx")
 
 # The fixed-bin log histogram backing the streaming p99 (q_dst bytes here;
 # the channel subsystem reuses it for repair-wait µs) lives in
@@ -177,13 +196,17 @@ class SimState(NamedTuple):
     proxy_mod: jax.Array     # [F] multiplicative proxy modulation in [0.25, 1]
     q_src: jax.Array         # [F] source-OTN queue bytes
     q_dst: jax.Array         # [F] destination-OTN queue bytes
+                             # ([L, F] when cfg.num_paths > 1)
     q_leaf: jax.Array        # [F] destination-leaf queue bytes
     pipe: jax.Array          # [Dp, F] in-flight long-haul bytes
+                             # ([Dp, L, F] when cfg.num_paths > 1)
     inflight: jax.Array      # [F] running sum of pipe (incremental: O(F)/step)
     ack_line: jax.Array      # [Dp, F] ACK return path
     cnp_line: jax.Array      # [Dp, F] CNP return path
     pause_line: jax.Array    # [Dp] PFC signal dst-OTN -> src-OTN
+                             # ([Dp, L]: per-link pause at L > 1)
     pause_dst: jax.Array     # scalar: dst OTN asserting long-haul pause
+                             # ([L] per-link at L > 1)
     extra: object            # scheme-private pytree (Scheme.init_extra_state)
     # channel subsystem (ALL None under the ideal channel — the engine
     # structurally skips the machinery, keeping the default path
@@ -221,14 +244,26 @@ def init_state(cfg: NetConfig, num_flows: int, params: NetParams = None,
     if scheme is None:
         scheme = Scheme()
     channel = get_channel_model(channel)
+    multi = cfg.num_paths > 1
+    L = cfg.num_paths
     z = jnp.zeros((f,), jnp.float32)
     nic = params.nic_gbps * 1e9 / 8.0
     if channel.is_ideal:
         chan = backlog = retx_line = retx_inflight = None
     else:
-        chan = channel.init_channel_state(
-            cfg, params, f, key=scenario_key(
-                jax.random.PRNGKey(cfg.channel_seed), params))
+        base_key = scenario_key(
+            jax.random.PRNGKey(cfg.channel_seed), params)
+        if multi:
+            # one independent impairment process per link: fold the link
+            # index into the scenario key so parallel paths draw
+            # decorrelated noise
+            keys = jax.vmap(lambda l: jax.random.fold_in(base_key, l))(
+                jnp.arange(L))
+            chan = jax.vmap(
+                lambda k: channel.init_channel_state(cfg, params, f, key=k)
+            )(keys)
+        else:
+            chan = channel.init_channel_state(cfg, params, f, key=base_key)
         backlog, retx_inflight = z, z
         retx_line = jnp.zeros((delay_pad, f), jnp.float32)
     return SimState(
@@ -239,13 +274,18 @@ def init_state(cfg: NetConfig, num_flows: int, params: NetParams = None,
         marked_acc=z,
         proxy_timer=jnp.full((f,), 1e9, jnp.float32),
         proxy_mod=jnp.ones((f,), jnp.float32),
-        q_src=z, q_dst=z, q_leaf=z,
-        pipe=jnp.zeros((delay_pad, f), jnp.float32),
+        q_src=z,
+        q_dst=jnp.zeros((L, f), jnp.float32) if multi else z,
+        q_leaf=z,
+        pipe=(jnp.zeros((delay_pad, L, f), jnp.float32) if multi
+              else jnp.zeros((delay_pad, f), jnp.float32)),
         inflight=z,
         ack_line=jnp.zeros((delay_pad, f), jnp.float32),
         cnp_line=jnp.zeros((delay_pad, f), jnp.float32),
-        pause_line=jnp.zeros((delay_pad,), jnp.float32),
-        pause_dst=jnp.float32(0.0),
+        pause_line=(jnp.zeros((delay_pad, L), jnp.float32) if multi
+                    else jnp.zeros((delay_pad,), jnp.float32)),
+        pause_dst=(jnp.zeros((L,), jnp.float32) if multi
+                   else jnp.float32(0.0)),
         extra=scheme.init_extra_state(
             cfg, params, f, history_slots=history_slots,
             chan_delay_pad=delay_pad + _proc_steps(cfg)),
@@ -293,6 +333,33 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
     xoff_otn = jnp.maximum(xoff, params.otn_buffer_bdp_frac * bdp)
     xon_otn = xoff_otn / 2.0
 
+    # -- multi-link topology (cfg.num_paths > 1; STATIC — keys the compile).
+    # At L = 1 none of these exist and the single-pipe code path below is
+    # untouched, so the L=1 jaxpr (and the goldens pinning it) stays
+    # bit-identical to the pre-topology engine.
+    L = cfg.num_paths
+    multi = L > 1
+    if multi:
+        link_ids = jnp.arange(L)
+        link_caps = params.link_cap_gbps * 1e9 / 8.0              # [L] B/s
+        link_d_steps = jnp.clip(
+            jnp.round(params.link_delay_us / dt_us).astype(jnp.int32),
+            1, delay_pad)                                          # [L]
+        # per-link dst-OTN PFC thresholds: the explicit per-path floor or
+        # the link's own BDP-scaled headroom, whichever is larger
+        link_bdp = link_caps * 2.0 * params.link_delay_us * 1e-6
+        xoff_link = jnp.maximum(params.link_thresh_kb * 1024.0,
+                                params.otn_buffer_bdp_frac * link_bdp)
+        xon_link = xoff_link / 2.0
+        route = jnp.asarray(wl.route)                              # [F, W]
+        if route.shape[-1] == 1:
+            route = jnp.broadcast_to(route, route.shape[:-1] + (L,))
+        elif route.shape[-1] != L:
+            raise ValueError(
+                f"WorkloadParams.route has {route.shape[-1]} link columns "
+                f"but cfg.num_paths = {L} — give each flow a length-{L} "
+                f"route (or () for the symmetric default)")
+
     is_inter = jnp.asarray(wl.is_inter)
     is_intra = 1.0 - is_inter
     window = jnp.asarray(wl.window)
@@ -309,6 +376,9 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         xoff=xoff, xon=xon, xoff_otn=xoff_otn, xon_otn=xon_otn,
         is_inter=is_inter, is_intra=is_intra, rtt_us=rtt_us,
         d_steps=d_steps,
+        num_links=L,
+        link_caps=link_caps if multi else None,
+        link_d_steps=link_d_steps if multi else None,
     )
     rtt_scale = scheme.rtt_scale(ctx)
     if impaired:
@@ -337,23 +407,51 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         # ------------------------------------------------ 2. delayed inputs
         ack_arr = state.ack_line[ridx]
         cnp_arr = state.cnp_line[ridx]
-        pause_sig = state.pause_line[ridx]
-        pipe_out = state.pipe[ridx]
+        if multi:
+            # each link's ring row wraps at ITS OWN traced delay: row l of
+            # the padded ring holds what link l launched d_l steps ago
+            lidx = jnp.mod(t, link_d_steps)            # [L]
+            pause_sig = state.pause_line[lidx, link_ids]        # [L]
+            pipe_out = state.pipe[lidx, link_ids]               # [L, F]
+        else:
+            pause_sig = state.pause_line[ridx]
+            pipe_out = state.pipe[ridx]
 
         # ------------------------------------------------ 2b. channel hook
         # The single hook point of the channel subsystem: what leaves the
         # pipe is impaired BEFORE the destination OTN sees it, and the
         # source-OTN line capacity may be dimmed (OTN flap). Lost bytes
         # ride the loss-notification ring back to the source (delay D).
+        # At L > 1 the model is vmapped over the link axis — each parallel
+        # path carries its own impairment process (independent keys, own
+        # flap phase / loss chain / jitter buffer).
         paused_src = pause_sig > 0.5                   # delayed dst PFC
-        cap_src = jnp.where(paused_src, 0.0, c_otn * dt_s)
+        if multi:
+            cap_link = jnp.where(paused_src, 0.0, link_caps * dt_s)  # [L]
+            cap_src = jnp.sum(cap_link)
+        else:
+            cap_src = jnp.where(paused_src, 0.0, c_otn * dt_s)
         if impaired:
             retx_arr = state.retx_line[ridx]
-            eff = channel.apply_impairments(ctx, state.chan, ChannelInputs(
-                t=t, key=jax.random.fold_in(chan_key0, t),
-                pipe_out=pipe_out, cap_src=cap_src))
-            pipe_arrivals, lost = eff.arrivals, eff.lost
-            cap_src, chan_new = eff.cap_src, eff.chan
+            if multi:
+                step_key = jax.random.fold_in(chan_key0, t)
+                keys = jax.vmap(
+                    lambda l: jax.random.fold_in(step_key, l))(link_ids)
+                eff = jax.vmap(
+                    lambda c, k, po, cs: channel.apply_impairments(
+                        ctx, c, ChannelInputs(t=t, key=k, pipe_out=po,
+                                              cap_src=cs)))(
+                    state.chan, keys, pipe_out, cap_link)
+                pipe_arrivals, chan_new = eff.arrivals, eff.chan  # [L, F]
+                lost = jnp.sum(eff.lost, axis=0)                  # [F]
+                cap_link = eff.cap_src                            # [L]
+                cap_src = jnp.sum(cap_link)
+            else:
+                eff = channel.apply_impairments(ctx, state.chan, ChannelInputs(
+                    t=t, key=jax.random.fold_in(chan_key0, t),
+                    pipe_out=pipe_out, cap_src=cap_src))
+                pipe_arrivals, lost = eff.arrivals, eff.lost
+                cap_src, chan_new = eff.cap_src, eff.chan
         else:
             retx_arr = zero_f
             pipe_arrivals, lost, chan_new = pipe_out, zero_f, None
@@ -407,8 +505,33 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
                                      arrivals_src + retx_send, arrivals_src)
         q_src, drained_src = scheme.src_otn_release(ctx, state, arrivals_src,
                                                     cap_src, active)
-        pipe = state.pipe.at[ridx].set(drained_src)    # arrives at t + D
-        inflight = state.inflight + drained_src - pipe_out
+        if multi:
+            # spray the scheme's aggregate release across the parallel
+            # links: per-flow weights (workload routing matrix, reweighted
+            # by the scheme's route_weights hook), masked by links with
+            # capacity this step, then clipped per link. Bytes a saturated
+            # link cannot take spill back into the source-OTN queue — an
+            # equal-weight spray over unequal paths therefore bottlenecks
+            # on its slowest link, which is exactly the imbalance
+            # token-gated spraying (rdmacell) adapts away.
+            w = jnp.maximum(scheme.route_weights(ctx, state, route), 0.0)
+            w = w * (cap_link > 0.0)[None, :]                     # [F, L]
+            row = jnp.sum(w, axis=1, keepdims=True)
+            share = w / jnp.maximum(row, 1e-9)                    # [F, L]
+            want = drained_src[:, None] * share                   # [F, L]
+            link_want = jnp.sum(want, axis=0)                     # [L]
+            scale = jnp.minimum(
+                1.0, cap_link / jnp.maximum(link_want, 1e-9))
+            sent_link = (want * scale[None, :]).T                 # [L, F]
+            spilled = drained_src - jnp.sum(sent_link, axis=0)
+            q_src = q_src + spilled
+            pipe = state.pipe.at[lidx, link_ids].set(sent_link)
+            inflight = (state.inflight + jnp.sum(sent_link, axis=0)
+                        - jnp.sum(pipe_out, axis=0))
+            link_tx = jnp.sum(sent_link, axis=1)                  # [L]
+        else:
+            pipe = state.pipe.at[ridx].set(drained_src)  # arrives at t + D
+            inflight = state.inflight + drained_src - pipe_out
 
         # ------------------------------------------------ 6. destination OTN
         leaf_pfc = (jnp.sum(state.q_leaf) > xoff).astype(jnp.float32)
@@ -417,11 +540,22 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
                                                 cap_dst)
         egress_bytes = jnp.sum(drained_dst)
         q_dst_tot = jnp.sum(q_dst)
-        pause_dst = pfc_hysteresis(state.pause_dst, q_dst_tot, xoff_otn, xon_otn)
-        pause_line = state.pause_line.at[ridx].set(pause_dst)
+        if multi:
+            # per-link backlog -> per-link PFC toward that link's source
+            # line; each pause rides back at the LINK's own delay
+            q_dst_link = jnp.sum(q_dst, axis=1)                   # [L]
+            pause_dst = pfc_hysteresis(state.pause_dst, q_dst_link,
+                                       xoff_link, xon_link)       # [L]
+            pause_line = state.pause_line.at[lidx, link_ids].set(pause_dst)
+            drained_dst_f = jnp.sum(drained_dst, axis=0)          # [F]
+        else:
+            pause_dst = pfc_hysteresis(state.pause_dst, q_dst_tot, xoff_otn,
+                                       xon_otn)
+            pause_line = state.pause_line.at[ridx].set(pause_dst)
+            drained_dst_f = drained_dst
 
         # ------------------------------------------------ 7. destination leaf
-        arrivals_leaf = drained_dst + send * is_intra
+        arrivals_leaf = drained_dst_f + send * is_intra
         mark_p = ecn_mark_prob(jnp.sum(state.q_leaf), cfg, params=params)
         q_leaf, drained_leaf = drain_proportional(state.q_leaf, arrivals_leaf,
                                                   c_leaf * dt_s)
@@ -441,7 +575,11 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         fb = scheme.feedback(ctx, state, SchemeSignals(
             t=t, active=active, sent=sent, cnp_out=cnp_out, cnp_arr=cnp_arr,
             egress_bytes=egress_bytes, q_dst_tot=q_dst_tot, q_leaf=q_leaf,
-            leaf_pfc=leaf_pfc, retx_arr=retx_arr, retx_backlog=retx_backlog))
+            leaf_pfc=leaf_pfc, retx_arr=retx_arr, retx_backlog=retx_backlog,
+            link_sent=sent_link if multi else None,
+            link_arrivals=pipe_arrivals if multi else None,
+            link_want=link_want if multi else None,
+            link_cap=cap_link if multi else None))
 
         # ------------------------------------------------ 10. return paths
         ack_line = state.ack_line.at[ridx].set(drained_leaf * is_inter)
@@ -451,7 +589,8 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         cc = step_dcqcn(state.cc, fb.cnp_in, send, cfg, rtt_scale=rtt_scale)
 
         # ------------------------------------------------ 12. FCT
-        newly_done = (delivered >= total_bytes) & (state.done_at_us >= INF)
+        newly_done = (delivered >= total_bytes) & is_unfinished(
+            state.done_at_us)
         done_at = jnp.where(newly_done, t_us, state.done_at_us)
 
         if impaired:
@@ -475,21 +614,37 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         # is either delivered or sitting in exactly one queue / the pipe —
         # with a channel, also the loss-notification transit, the
         # retransmit backlog, or a jitter deferral buffer
-        residual = sent - delivered - q_src - q_dst - q_leaf - inflight
+        q_dst_f = jnp.sum(q_dst, axis=0) if multi else q_dst
+        residual = sent - delivered - q_src - q_dst_f - q_leaf - inflight
         if impaired:
-            residual = (residual - retx_inflight - retx_backlog
-                        - channel.held_bytes(chan_new))
+            held = (jnp.sum(jax.vmap(channel.held_bytes)(chan_new), axis=0)
+                    if multi else channel.held_bytes(chan_new))
+            residual = residual - retx_inflight - retx_backlog - held
         cons_err = jnp.max(jnp.abs(residual) / jnp.maximum(sent, 1.0))
+        if multi:
+            # capacity-weighted pause means keep the scalar trace keys (and
+            # the Fig. 3 pause-ratio column) shape-stable across L
+            cap_w = link_caps / jnp.maximum(jnp.sum(link_caps), 1e-9)
+            pause_trace = jnp.sum(pause_dst * cap_w)
+            src_paused_trace = jnp.sum(pause_sig * cap_w)
+        else:
+            pause_trace, src_paused_trace = pause_dst, pause_sig
         out = {
             "q_src": jnp.sum(q_src),
             "q_dst": q_dst_tot,
             "q_leaf": jnp.sum(q_leaf),
-            "pause_dst": pause_dst,
-            "src_paused": pause_sig,
+            "pause_dst": pause_trace,
+            "src_paused": src_paused_trace,
             "thr_inter": jnp.sum(drained_leaf * is_inter) / dt_s,
             "thr_intra": jnp.sum(drained_leaf * is_intra) / dt_s,
             "cons_err": cons_err,
         }
+        if multi:
+            out.update({
+                "q_dst_link": q_dst_link,     # [L] per-link dst backlog
+                "link_tx": link_tx,           # [L] bytes launched per link
+                "link_pause": pause_dst,      # [L] per-link PFC state
+            })
         if impaired:
             # engine-owned channel trace keys (goodput = wire - lost: with
             # selective repair nothing delivered is ever a duplicate)
@@ -555,10 +710,15 @@ def _scan_with_mode(step, scheme, channel, state0, steps: int, mode: str,
 
         def block(state, b):
             # the inner [k]-stacked traces are transient per outer step:
-            # live memory is O(T/k + k), never O(T)
+            # live memory is O(T/k + k), never O(T). Level-like keys keep
+            # the block's LAST sample; per-step byte counts
+            # (DECIMATE_SUM_KEYS) keep the block SUM so time-normalized
+            # rate columns stay exact at any decimation.
             state, outs = jax.lax.scan(step, state,
                                        b * k + jnp.arange(k, dtype=jnp.int32))
-            return state, jax.tree.map(lambda x: x[-1], outs)
+            return state, {key: (jnp.sum(v, axis=0)
+                                 if key in DECIMATE_SUM_KEYS else v[-1])
+                           for key, v in outs.items()}
 
         final, traces = jax.lax.scan(block, state0,
                                      jnp.arange(nblocks, dtype=jnp.int32))

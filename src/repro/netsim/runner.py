@@ -38,11 +38,12 @@ import numpy as np
 from repro.config.base import NetConfig, batch_template
 from repro.netsim.channel import get_channel_model
 from repro.netsim.fluid import (
-    WARMUP_FRAC, MetricAcc, batch_padding, hist_quantile, simulate_batch,
+    WARMUP_FRAC, MetricAcc, batch_padding, hist_quantile, is_unfinished,
+    simulate_batch,
 )
 from repro.netsim.schemes import get_scheme
 from repro.netsim.workload import (
-    BIG, Workload, WorkloadParams, as_workload_batch,
+    Workload, WorkloadParams, as_workload_batch, is_unbounded,
 )
 
 # Auto-chunk targets of the launch plan: a full-trace launch keeps its
@@ -87,9 +88,12 @@ def _flow_metrics(wl: WorkloadParams, final_np: dict):
     total = np.asarray(wl.total_bytes)
     start = np.asarray(wl.start_us)
     done_at = final_np["done_at_us"]
-    finite = is_inter & (total < BIG / 2)                          # [B, F]
+    # the shared sentinel helpers — NOT re-derived magic literals, so both
+    # metric paths (and the engine) can never drift apart on what counts
+    # as a finite flow / a completed flow
+    finite = is_inter & ~is_unbounded(total)                       # [B, F]
     fct = done_at - start
-    completed = finite & np.isfinite(fct) & (fct < 1e29)
+    completed = finite & ~is_unfinished(done_at)
     n_finite = finite.sum(axis=1)
     n_completed = completed.sum(axis=1)
     sum_fct = np.where(completed, fct, 0.0).sum(axis=1)
@@ -115,16 +119,23 @@ def _assemble_rows(cfgs: Sequence[NetConfig], scheme_name: str,
     return rows
 
 
-def _channel_cols_from_traces(traces_np: dict, warm: int,
-                              dt_s: float) -> dict:
+def _channel_cols_from_traces(traces_np: dict, warm: int, dt_s: float,
+                              decimate: int = 1) -> dict:
     """The channel metric columns from materialized ``chan_*`` traces —
     the full/decimate-mode twin of ``ChannelModel.finalize_metrics`` (same
-    column set, so impairment sweeps agree across trace modes)."""
+    column set, so impairment sweeps agree across trace modes).
+
+    Rate columns normalize by SIMULATED time, not sample count: a
+    decimated trace holds ``steps/decimate`` samples, each a block SUM of
+    ``decimate`` steps' bytes (``fluid.DECIMATE_SUM_KEYS``), so
+    ``n_samples * decimate * dt_s`` is the window the bytes accumulated
+    over and the Gbps columns agree exactly with the streamed path at any
+    decimation."""
     wire = traces_np["chan_wire"][:, warm:].astype(np.float64)
     lost = traces_np["chan_lost"][:, warm:].astype(np.float64)
     retx = traces_np["chan_retx"][:, warm:].astype(np.float64)
     wait = traces_np["chan_repair_wait_us"][:, warm:]
-    per_s = 1.0 / (max(wire.shape[1], 1) * dt_s)
+    per_s = 1.0 / (max(wire.shape[1], 1) * max(decimate, 1) * dt_s)
     # p99 over steps with a repair actually pending (matches the streamed
     # histogram, which only counts wait > 0 samples)
     p99 = np.zeros(wire.shape[0])
@@ -141,8 +152,8 @@ def _channel_cols_from_traces(traces_np: dict, warm: int,
 
 
 def _metrics_batch(cfgs: Sequence[NetConfig], wl: WorkloadParams,
-                   scheme_name: str, final_np: dict,
-                   traces_np: dict) -> List[Dict[str, float]]:
+                   scheme_name: str, final_np: dict, traces_np: dict,
+                   decimate: int = 1) -> List[Dict[str, float]]:
     """Fig. 3 metric set from materialized [B, T] traces in ONE vectorized
     pass (``trace_mode="full"``/``"decimate"``)."""
     steps = traces_np["q_dst"].shape[1]
@@ -165,7 +176,7 @@ def _metrics_batch(cfgs: Sequence[NetConfig], wl: WorkloadParams,
     }
     if "chan_wire" in traces_np:
         cols.update(_channel_cols_from_traces(
-            traces_np, warm, cfgs[0].dt_us * 1e-6))
+            traces_np, warm, cfgs[0].dt_us * 1e-6, decimate))
     return _assemble_rows(cfgs, scheme_name, cols)
 
 
@@ -218,26 +229,31 @@ class _Launch:
 
 def chunk_cells(steps: int, trace_mode: str = "full", decimate: int = 1,
                 chunk_cells: Optional[int] = None,
-                n_devices: int = 1) -> int:
+                n_devices: int = 1, num_links: int = 1) -> int:
     """Scenario cells per device launch of a sweep's plan.
 
     Returns the explicit ``chunk_cells`` override when given, else the
     bounded-memory auto size: in ``full``/``decimate`` modes the chunk is
     sized so one launch's materialized trace block stays under
-    ``MAX_TRACE_FLOATS`` f32 values (~256 MB); in ``metrics`` mode the
-    launch is O(B) anyway and the flat ``METRICS_CHUNK_CELLS`` ceiling only
-    caps per-launch compile/host-row cost. The result is rounded up to a
-    multiple of ``n_devices`` so chunked grids still shard the scenario
-    axis evenly. (Not clamped to the grid size — ``_plan_launches`` caps
-    the final chunk at the cell count and pads the trailing chunk so every
-    launch shares one compiled program.)
+    ``MAX_TRACE_FLOATS`` f32 values (~256 MB) — multi-link grids
+    (``num_links > 1``) add per-link [L] trace keys, so their per-step
+    float estimate grows with L and the chunk shrinks accordingly; in
+    ``metrics`` mode the launch is O(B) anyway and the flat
+    ``METRICS_CHUNK_CELLS`` ceiling only caps per-launch compile/host-row
+    cost. The result is rounded up to a multiple of ``n_devices`` so
+    chunked grids still shard the scenario axis evenly. (Not clamped to
+    the grid size — ``_plan_launches`` caps the final chunk at the cell
+    count and pads the trailing chunk so every launch shares one compiled
+    program.)
     """
     if chunk_cells is None:
         if trace_mode == "metrics":
             chunk_cells = METRICS_CHUNK_CELLS
         else:
             t = max(steps // max(decimate, 1), 1)
-            chunk_cells = max(MAX_TRACE_FLOATS // (t * _TRACE_KEYS_EST), 1)
+            # q_dst_link / link_tx / link_pause are [L] per step at L>1
+            keys = _TRACE_KEYS_EST + (3 * num_links if num_links > 1 else 0)
+            chunk_cells = max(MAX_TRACE_FLOATS // (t * keys), 1)
     chunk_cells = max(int(chunk_cells), 1)
     if n_devices > 1:
         chunk_cells = -(-chunk_cells // n_devices) * n_devices
@@ -252,9 +268,11 @@ def _plan_launches(n_cells: int, schemes: Sequence, chunk: int,
                    n_devices: int = 1) -> List[_Launch]:
     """Flatten (scheme x chunk) into the launch list — the per-scheme
     Python loop of the old sweep path, folded into explicit plan entries.
-    Every launch pads to a device multiple so the scenario axis always
-    splits evenly across devices (padding rows are dropped)."""
-    pad_to = chunk if n_cells > chunk else n_cells
+    EVERY launch — including the single-launch case of a grid smaller than
+    one chunk — pads to a device multiple, so the scenario axis always
+    splits evenly across devices and ``shard_scenario_axis`` never sees an
+    odd batch (padding rows are dropped)."""
+    pad_to = min(chunk, n_cells)
     if n_devices > 1:
         pad_to = -(-pad_to // n_devices) * n_devices
     return [_Launch(s, lo, min(lo + chunk, n_cells), pad_to)
@@ -318,8 +336,9 @@ def _execute_plan(plan: Sequence[_Launch], cfgs, wlp: WorkloadParams,
                                           warm)
         else:
             traces_np = {k: np.asarray(v) for k, v in aux.items()}
-            sub_rows = _metrics_batch(sub_cfgs, wl_np, launch.scheme.name,
-                                      final_np, traces_np)
+            sub_rows = _metrics_batch(
+                sub_cfgs, wl_np, launch.scheme.name, final_np, traces_np,
+                decimate if trace_mode == "decimate" else 1)
         rows.setdefault(launch.scheme, []).extend(sub_rows[:n_real])
     return rows
 
@@ -382,7 +401,7 @@ def run_experiment_batch(cfgs: Sequence[NetConfig], workload, scheme,
     grid_static = _grid_static(cfgs, horizon_us, delay_pad, history_slots)
     n_dev = len(devices) if devices is not None else len(jax.devices())
     chunk = _chunk_cells(grid_static[1], trace_mode, decimate,
-                         chunk_cells, n_dev)
+                         chunk_cells, n_dev, cfgs[0].num_paths)
     plan = _plan_launches(len(cfgs), (scheme,), chunk, n_dev)
     return _execute_plan(plan, cfgs, wlp, grid_static, period_slots,
                          trace_mode, decimate, devices,
@@ -477,7 +496,7 @@ def sweep_grid(scenarios, workload=None, schemes=(),
     grid_static = _grid_static(cfgs, horizon_us, 0, 0)
     n_dev = len(devices) if devices is not None else len(jax.devices())
     chunk = _chunk_cells(grid_static[1], trace_mode, decimate,
-                         chunk_cells, n_dev)
+                         chunk_cells, n_dev, cfgs[0].num_paths)
     plan = _plan_launches(len(cfgs), scheme_objs, chunk, n_dev)
     by_scheme = _execute_plan(plan, cfgs, wlp, grid_static, period_slots,
                               trace_mode, decimate, devices,

@@ -9,11 +9,12 @@ pack, and the plug-in API.
     class MyScheme(Scheme):
         ...
 
-Six schemes ship registered: the paper's four (``SCHEMES`` — the stable
+Seven schemes ship registered: the paper's four (``SCHEMES`` — the stable
 builtin tuple pinned against pre-refactor goldens) plus the related-work
-pack (``RELATED_SCHEMES``): GeoPipe-style lossless pipeline shaping and
-SDR-RDMA-style software-defined reliability. ``ALL_SCHEMES`` is their
-concatenation; the registry may grow beyond it.
+pack (``RELATED_SCHEMES``): GeoPipe-style lossless pipeline shaping,
+SDR-RDMA-style software-defined reliability, and RDMACell-style token-gated
+flowcell spraying over the multi-link topology (``docs/topology.md``).
+``ALL_SCHEMES`` is their concatenation; the registry may grow beyond it.
 
 See ``base.py`` for the hook contract, ``docs/scheme-api.md`` for the
 authoritative reference, and ``docs/writing-a-scheme.md`` for a worked
@@ -27,6 +28,7 @@ from repro.netsim.schemes.dcqcn import DcqcnScheme, ThemisScheme
 from repro.netsim.schemes.geopipe import GeoPipeScheme, GeoPipeState
 from repro.netsim.schemes.matchrdma import MatchRdmaScheme
 from repro.netsim.schemes.pseudo_ack import PseudoAckScheme
+from repro.netsim.schemes.rdmacell import RdmaCellScheme, RdmaCellState
 from repro.netsim.schemes.sdr_rdma import SdrRdmaScheme, SdrRdmaState
 
 # The paper's four schemes (Fig. 3). ``SCHEMES`` stays the stable builtin
@@ -42,15 +44,17 @@ SCHEMES = ("dcqcn", "pseudo_ack", "themis", "matchrdma")
 # alongside the paper schemes by ``benchmarks/scheme_compare.py``.
 register_scheme("geopipe", GeoPipeScheme)
 register_scheme("sdr_rdma", SdrRdmaScheme)
+register_scheme("rdmacell", RdmaCellScheme)
 
-RELATED_SCHEMES = ("geopipe", "sdr_rdma")
+RELATED_SCHEMES = ("geopipe", "sdr_rdma", "rdmacell")
 ALL_SCHEMES = SCHEMES + RELATED_SCHEMES
 
 __all__ = [
     "ALL_SCHEMES", "Feedback", "RELATED_SCHEMES", "SCHEMES", "Scheme",
     "SchemeCtx", "SchemeLike", "SchemeSignals",
     "DcqcnScheme", "GeoPipeScheme", "GeoPipeState", "MatchRdmaScheme",
-    "PseudoAckScheme", "SdrRdmaScheme", "SdrRdmaState", "ThemisScheme",
+    "PseudoAckScheme", "RdmaCellScheme", "RdmaCellState", "SdrRdmaScheme",
+    "SdrRdmaState", "ThemisScheme",
     "available_schemes", "get_scheme", "register_scheme",
     "unregister_scheme",
 ]

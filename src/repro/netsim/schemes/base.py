@@ -91,6 +91,11 @@ class SchemeCtx(NamedTuple):
     is_intra: jax.Array          # [F]
     rtt_us: jax.Array            # [F] e2e RTT estimate per flow
     d_steps: jax.Array           # traced one-way delay in steps
+    # multi-link topology (cfg.num_paths > 1 only; None on the single-pipe
+    # path so the L=1 jaxpr — and the goldens pinning it — is untouched):
+    num_links: int = 1           # static L
+    link_caps: Optional[jax.Array] = None      # f32[L] per-link bytes/s
+    link_d_steps: Optional[jax.Array] = None   # i32[L] per-link delay steps
 
 
 class SchemeSignals(NamedTuple):
@@ -108,6 +113,16 @@ class SchemeSignals(NamedTuple):
     retx_arr: jax.Array          # [F] loss-notification bytes arriving at
                                  # the source after the one-way delay D
     retx_backlog: jax.Array      # [F] post-service retransmit backlog
+    # multi-link signals (None on the L=1 single-pipe path):
+    link_sent: Optional[jax.Array] = None      # [L, F] bytes sprayed onto
+                                               # each link this step
+    link_arrivals: Optional[jax.Array] = None  # [L, F] bytes landing at the
+                                               # dst OTN per link this step
+    link_want: Optional[jax.Array] = None      # [L] pre-clip spray demand
+                                               # per link this step
+    link_cap: Optional[jax.Array] = None       # [L] effective per-link
+                                               # capacity this step (bytes;
+                                               # 0 while paused / flapped)
 
 
 class Feedback(NamedTuple):
@@ -173,6 +188,19 @@ class Scheme:
         """Drain law of the source OTN toward the long haul. Returns
         ``(new_q_src [F], drained [F])``. Default: FIFO-fair fluid drain."""
         return drain_proportional(state.q_src, arrivals, cap)
+
+    def route_weights(self, ctx: SchemeCtx, state,
+                      base_route: jax.Array) -> jax.Array:
+        """[F, L] spray weights steering each flow's drained bytes across
+        the parallel long-haul links (``cfg.num_paths > 1`` only — the
+        single-pipe skeleton never calls this). ``base_route`` is the
+        workload's per-flow routing matrix (``WorkloadParams.route``
+        broadcast to L columns); the default routes exactly as the
+        workload asked. Schemes that load-balance dynamically (rdmacell's
+        token-gated flowcell spraying) reweight it from their extra state.
+        Weights are relative per flow — the skeleton normalizes rows and
+        masks links with zero capacity this step."""
+        return base_route
 
     def retx_rate(self, ctx: SchemeCtx, state, rate: jax.Array) -> jax.Array:
         """[F] bytes/s the sender may devote to retransmitting lost bytes

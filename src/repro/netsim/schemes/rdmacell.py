@@ -1,0 +1,192 @@
+"""RDMACell-style token-gated flowcell spraying (arxiv 2606.20581).
+
+RDMACell load-balances a long haul made of parallel unequal paths by
+spraying *flowcells* (sub-flow byte bursts) across links in proportion to
+per-link token buckets, and pacing senders against the destination
+reorder-buffer (ROB) the spraying inevitably creates. In the fluid engine
+that becomes three hook overrides on top of the conventional e2e baseline:
+
+  * ``route_weights``  — each flow's spray weights are its workload routing
+    row reweighted by the per-link token level. Tokens refill with the
+    link's effective capacity and drain with the bytes offered to it, so a
+    slow / paused / flapped link runs dry and traffic shifts away within a
+    bucket's worth of bytes — flowcell spraying without per-packet state.
+  * ``sender_rate``    — inter-DC senders are collectively throttled when
+    the estimated destination ROB occupancy exceeds
+    ``rdmacell_rob_limit_mb`` (the paper's ROB back-pressure).
+  * ``feedback``       — advances the token buckets and the cumulative
+    per-link tx/arrival ledgers the ROB estimate is computed from.
+
+The ROB estimate is a fluid proxy for packet reordering: a flow's bytes
+are deliverable in order only up to the slowest link's arrival *frontier*
+(arrivals scaled by that link's share of the flow's transmissions);
+everything received beyond the frontier waits in the ROB. Single-link runs
+(``cfg.num_paths == 1``) carry the default extra state and inherit the
+baseline hooks untouched, so ``rdmacell`` at L=1 is bit-identical to
+``dcqcn`` — spraying machinery only exists where there is something to
+spray across.
+
+Knobs (``NetConfig``): ``rdmacell_token_bucket_us`` (bucket depth in µs of
+link capacity) and ``rdmacell_rob_limit_mb`` (ROB back-pressure threshold).
+Streamed columns: ``mean_reorder_buf_mb``, ``spray_entropy``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import NetConfig, NetParams
+from repro.core.matchrdma import MatchRdmaState
+from repro.netsim.schemes.base import (
+    Feedback, Scheme, SchemeCtx, SchemeSignals,
+)
+
+
+class RdmaCellState(NamedTuple):
+    """Spraying state carried in ``SimState.extra`` (multi-link runs only)."""
+    mr: MatchRdmaState     # the shared budget block (budget traces for free)
+    tokens: jax.Array      # f32[L] — per-link spray tokens, bytes
+    tx_cum: jax.Array      # f32[L, F] — cumulative bytes sprayed per link
+    arr_cum: jax.Array     # f32[L, F] — cumulative bytes arrived per link
+
+
+def _rob_bytes(ex: RdmaCellState) -> jax.Array:
+    """[F] estimated destination reorder-buffer occupancy per flow.
+
+    A link's arrival *frontier* for a flow is its cumulative arrivals
+    scaled up by the inverse of that link's share of the flow's
+    transmissions — the total flow prefix that link's deliveries can
+    cover. In-order delivery is bounded by the slowest frontier; arrived
+    bytes beyond it sit in the ROB.
+    """
+    tx_tot = jnp.sum(ex.tx_cum, axis=0)                      # [F]
+    arr_tot = jnp.sum(ex.arr_cum, axis=0)                    # [F]
+    share = ex.tx_cum / jnp.maximum(tx_tot[None, :], 1.0)    # [L, F]
+    est = jnp.where(share > 1e-6,
+                    ex.arr_cum / jnp.maximum(share, 1e-6),
+                    jnp.inf)
+    frontier = jnp.min(est, axis=0)                          # [F]
+    frontier = jnp.where(jnp.isfinite(frontier), frontier, arr_tot)
+    return jnp.maximum(arr_tot - jnp.minimum(frontier, arr_tot), 0.0)
+
+
+class RdmaCellScheme(Scheme):
+    """Token-gated flowcell spraying with ROB back-pressure."""
+
+    # -- construction ------------------------------------------------------
+    def init_extra_state(self, cfg: NetConfig, params: NetParams,
+                         num_flows: int, *, history_slots: int = 0,
+                         chan_delay_pad: int = 0):
+        mr = super().init_extra_state(cfg, params, num_flows,
+                                      history_slots=history_slots,
+                                      chan_delay_pad=chan_delay_pad)
+        if cfg.num_paths <= 1:
+            return mr  # single pipe: be the baseline, bit-for-bit
+        link_caps = params.link_cap_gbps * 1e9 / 8.0         # [L] bytes/s
+        tokens = params.rdmacell_token_bucket_us * 1e-6 * link_caps
+        return RdmaCellState(
+            mr=mr,
+            tokens=tokens.astype(jnp.float32),
+            tx_cum=jnp.zeros((cfg.num_paths, num_flows), jnp.float32),
+            arr_cum=jnp.zeros((cfg.num_paths, num_flows), jnp.float32),
+        )
+
+    # -- datapath ----------------------------------------------------------
+    def route_weights(self, ctx: SchemeCtx, state, base_route):
+        ex = state.extra
+        if not isinstance(ex, RdmaCellState):
+            return base_route
+        tok = jnp.maximum(ex.tokens, 0.0)
+        # all buckets dry (transient): fall back to the workload's own
+        # weights rather than parking traffic in the source OTN.
+        tok = jnp.where(jnp.sum(tok) > 0.0, tok, jnp.ones_like(tok))
+        return base_route * tok[None, :]
+
+    def sender_rate(self, ctx: SchemeCtx, state, base_rate):
+        rate = super().sender_rate(ctx, state, base_rate)
+        ex = state.extra
+        if not isinstance(ex, RdmaCellState):
+            return rate
+        rob_tot = jnp.sum(_rob_bytes(ex) * ctx.is_inter)
+        limit = ctx.params.rdmacell_rob_limit_mb * 1e6
+        gate = jnp.where(rob_tot > limit,
+                         limit / jnp.maximum(rob_tot, 1.0), 1.0)
+        return jnp.where(ctx.is_inter > 0, rate * gate, rate)
+
+    def feedback(self, ctx: SchemeCtx, state, sig: SchemeSignals) -> Feedback:
+        fb = super().feedback(ctx, state, sig)
+        ex = state.extra
+        if not isinstance(ex, RdmaCellState):
+            return fb
+        bucket = ctx.params.rdmacell_token_bucket_us * 1e-6 * ctx.link_caps
+        # refill with what the link could carry, drain with what was
+        # offered to it — persistent over-offering runs the bucket dry.
+        tokens = jnp.clip(ex.tokens + sig.link_cap - sig.link_want,
+                          0.0, bucket)
+        return fb._replace(extra=ex._replace(
+            tokens=tokens,
+            tx_cum=ex.tx_cum + sig.link_sent,
+            arr_cum=ex.arr_cum + sig.link_arrivals,
+        ))
+
+    # -- traces ------------------------------------------------------------
+    def extra_traces(self, ctx: SchemeCtx, state) -> dict:
+        ex = state.extra
+        if not isinstance(ex, RdmaCellState):
+            return super().extra_traces(ctx, state)
+        return {
+            "budget": ex.mr.budget.budget,
+            "budget_at_src": ex.mr.budget_at_src,
+            "rdmacell_rob_mb": jnp.sum(_rob_bytes(ex) * ctx.is_inter) / 1e6,
+            "rdmacell_tokens_mb": jnp.sum(ex.tokens) / 1e6,
+        }
+
+    # -- streaming metrics -------------------------------------------------
+    def init_metric_acc(self, ctx: SchemeCtx, state) -> dict:
+        ex = state.extra
+        if not isinstance(ex, RdmaCellState):
+            return super().init_metric_acc(ctx, state)
+        return {
+            "budget_sum": jnp.float32(0.0),
+            "rob_sum": jnp.float32(0.0),
+            "tx_by_link": jnp.zeros_like(ex.tokens),
+        }
+
+    def accumulate_metrics(self, ctx: SchemeCtx, acc, state, out, inc):
+        if "rob_sum" not in acc:
+            return super().accumulate_metrics(ctx, acc, state, out, inc)
+        ex = state.extra
+        rob = jnp.sum(_rob_bytes(ex) * ctx.is_inter)
+        return dict(acc,
+                    budget_sum=acc["budget_sum"]
+                    + ex.mr.budget.budget * inc,
+                    rob_sum=acc["rob_sum"] + rob * inc,
+                    tx_by_link=jnp.sum(ex.tx_cum, axis=1))
+
+    def finalize_metrics(self, acc: dict, n_steps: int, n_warm: int) -> dict:
+        if "rob_sum" not in acc:
+            return super().finalize_metrics(acc, n_steps, n_warm)
+        cols = {
+            "mean_budget_gbps": np.asarray(acc["budget_sum"])
+            / max(n_warm, 1) * 8.0 / 1e9,
+            "mean_reorder_buf_mb": np.asarray(acc["rob_sum"])
+            / max(n_warm, 1) / 1e6,
+        }
+        tx = np.asarray(acc["tx_by_link"])
+        batched = tx.ndim == 2
+        tx = np.atleast_2d(tx)                                # [B, L]
+        tot = np.maximum(tx.sum(axis=1, keepdims=True), 1.0)
+        p = tx / tot
+        with np.errstate(divide="ignore", invalid="ignore"):
+            h = -np.where(p > 0.0, p * np.log(np.maximum(p, 1e-30)),
+                          0.0).sum(axis=1)
+        L = tx.shape[1]
+        # normalized to [0, 1]: 1 = perfectly even spray, 0 = one link
+        # (or no traffic at all).
+        ent = h / np.log(L) if L > 1 else np.zeros(tx.shape[0])
+        ent = np.where(tx.sum(axis=1) > 0.0, ent, 0.0)
+        cols["spray_entropy"] = ent if batched else float(ent[0])
+        return cols

@@ -22,6 +22,16 @@ import numpy as np
 BIG = 1e18  # "unbounded" total bytes (throughput experiments)
 
 
+def is_unbounded(total_bytes):
+    """True where ``total_bytes`` carries the BIG 'unbounded' sentinel.
+
+    The one definition both metric paths compare against (works on numpy
+    and jax arrays). f32-safe: a sentinel that round-tripped through f32
+    still clears the BIG/2 threshold.
+    """
+    return total_bytes >= BIG / 2
+
+
 @dataclass(frozen=True)
 class FlowSpec:
     is_inter: bool
@@ -31,6 +41,11 @@ class FlowSpec:
     start_us: float = 0.0
     period_us: float = 0.0     # 0 => always-on; else AICB on/off period
     duty: float = 1.0          # fraction of the period spent communicating
+    # per-link routing weights over the cfg.num_paths parallel long-haul
+    # links (docs/topology.md). () = symmetric default (equal weight on
+    # every link); a length-L tuple steers this flow's spray proportions.
+    # Intra-DC flows never reach the long haul, so their row is unused.
+    route: tuple = ()
 
     @property
     def window(self) -> float:
@@ -53,10 +68,15 @@ class WorkloadParams(NamedTuple):
     period_us: np.ndarray        # f32 — 0 = always-on
     duty: np.ndarray             # f32
     active_mask: np.ndarray      # f32 — 0.0 marks batch-padding flows
+    route: np.ndarray            # f32[..., F, L] — per-flow x per-link spray
+                                 # weights (width 1 = the symmetric default,
+                                 # broadcast to cfg.num_paths by the engine)
 
     @classmethod
-    def of(cls, workload: "Workload", pad_to: int = 0) -> "WorkloadParams":
-        """Per-flow arrays for one workload, zero-padded to ``pad_to``."""
+    def of(cls, workload: "Workload", pad_to: int = 0,
+           link_pad: int = 0) -> "WorkloadParams":
+        """Per-flow arrays for one workload, zero-padded to ``pad_to``
+        flows (and the route leaf to ``link_pad`` links)."""
         a = workload.arrays()
         f = workload.num_flows
         pad = max(pad_to, f) - f
@@ -64,6 +84,21 @@ class WorkloadParams(NamedTuple):
         def _p(x, fill=0.0):
             x = np.asarray(x, np.float32)
             return np.pad(x, (0, pad), constant_values=fill) if pad else x
+
+        routes = [x.route for x in workload.flows]
+        width = max(max((len(r) for r in routes), default=1),
+                    link_pad, 1)
+        # default row: equal weight everywhere. An explicit route shorter
+        # than the widest pads with zero weight — the flow never sprays
+        # onto links it did not name.
+        route = np.ones((f, width), np.float32)
+        for i, r in enumerate(routes):
+            if r:
+                row = np.zeros((width,), np.float32)
+                row[:len(r)] = np.asarray(r, np.float32)
+                route[i] = row
+        if pad:
+            route = np.pad(route, ((0, pad), (0, 0)))
 
         return cls(
             is_inter=_p(a["is_inter"]),
@@ -73,11 +108,16 @@ class WorkloadParams(NamedTuple):
             period_us=_p(a["period_us"]),
             duty=_p(a["duty"]),
             active_mask=_p(np.ones((f,), np.float32)),
+            route=route,
         )
 
     @property
     def num_flows(self) -> int:
-        return int(self.is_inter.shape[-1])
+        return int(self.active_mask.shape[-1])
+
+    @property
+    def route_width(self) -> int:
+        return int(self.route.shape[-1])
 
 
 WorkloadLike = Union["Workload", WorkloadParams]
@@ -91,7 +131,10 @@ def stack_workload_params(workloads: Sequence["Workload"],
     if not workloads:
         raise ValueError("stack_workload_params: empty workload batch")
     pad = max(pad_to, max(w.num_flows for w in workloads))
-    cells = [WorkloadParams.of(w, pad_to=pad) for w in workloads]
+    link_pad = max(max((len(f.route) for f in w.flows), default=1)
+                   for w in workloads)
+    cells = [WorkloadParams.of(w, pad_to=pad, link_pad=link_pad)
+             for w in workloads]
     return WorkloadParams(*(np.stack(leaves)
                             for leaves in zip(*cells)))
 

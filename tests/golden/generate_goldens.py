@@ -7,9 +7,12 @@ Two families of pins live in the .npz:
     compared bit-for-bit by ``tests/test_scheme_api.py::test_golden_*`` —
     the registry-backed hook decomposition must emit the numerically
     identical program.
-  * The related-work pack (``RELATED_SCHEMES``: geopipe, sdr_rdma, PR 4):
-    captured from their first registered implementation — the pin freezes
-    their physics against accidental drift.
+  * The related-work pack (``RELATED_SCHEMES``: geopipe, sdr_rdma — PR 4 —
+    and rdmacell — PR 6): captured from their first registered
+    implementation — the pin freezes their physics against accidental
+    drift. (All pins are L=1 single-pipe runs: rdmacell's golden is
+    bit-identical to dcqcn's by construction, which is itself the pinned
+    claim — the spraying machinery must vanish below ``num_paths > 1``.)
 
 Re-running this script simply re-captures current behaviour — only do that
 deliberately, when a simulator's or a scheme's physics (not its API)

@@ -1,0 +1,111 @@
+"""Metric-parity bugfix pins (PR 6 satellites).
+
+1. Decimate-mode channel columns must agree with full-trace AND streamed
+   modes: decimated ``chan_*`` samples are block SUMS
+   (``fluid.DECIMATE_SUM_KEYS``) and the extractor normalizes by SIMULATED
+   time (``n_samples * decimate * dt_s``). Pre-fix, the decimated path
+   summed single-step subsamples and divided by sampled time — a noisy,
+   decimation-dependent estimate that drifted from the streamed twin.
+
+2. Completed/unbounded-flow sentinels are the shared helpers
+   ``fluid.is_unfinished`` / ``workload.is_unbounded`` — not re-derived
+   magic literals (``fct < 1e29``, ``total < BIG / 2``) that silently
+   drift from the engine's own INF/BIG definitions.
+"""
+import numpy as np
+import pytest
+
+from repro.config.base import NetConfig
+from repro.netsim import get_scheme, run_experiment_batch
+from repro.netsim import runner
+from repro.netsim.fluid import INF, is_unfinished
+from repro.netsim.workload import (
+    BIG, FlowSpec, Workload, is_unbounded, stack_workload_params,
+    throughput_workload,
+)
+
+WL = throughput_workload(msg_size=1 << 20, concurrency=16, num_flows=4)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: decimate-mode channel-column parity
+# ---------------------------------------------------------------------------
+
+def test_channel_columns_agree_across_trace_modes():
+    """goodput/wire/retx columns from a lossy run must agree across
+    full / decimate / streamed modes to float tolerance — not just in
+    expectation. Geometry aligns the warm cutoffs exactly: 2000 steps,
+    decimate 5 -> 400 samples, and the 10% warm cutoff lands on step 200
+    in both clocks, so the windows match and the comparison is exact."""
+    cfg = NetConfig(distance_km=200.0, horizon_us=10_000.0, loss_rate=1e-4)
+    sch = get_scheme("matchrdma")
+    (full,) = run_experiment_batch([cfg], WL, sch, 10_000.0,
+                                   trace_mode="full", channel="impaired")
+    (dec,) = run_experiment_batch([cfg], WL, sch, 10_000.0,
+                                  trace_mode="decimate", decimate=5,
+                                  channel="impaired")
+    (stream,) = run_experiment_batch([cfg], WL, sch, 10_000.0,
+                                     trace_mode="metrics",
+                                     channel="impaired")
+    for k in ("goodput_gbps", "wire_gbps", "retx_frac"):
+        assert full[k] == pytest.approx(dec[k], rel=1e-5), \
+            (k, full[k], dec[k])
+        assert stream[k] == pytest.approx(dec[k], rel=1e-4), \
+            (k, stream[k], dec[k])
+
+
+def test_channel_cols_normalize_by_simulated_time():
+    """Unit pin of the extractor itself: the same per-step byte totals,
+    presented once as 100 full-rate samples and once as 20 block-sum
+    samples of 5 steps each, must yield identical Gbps columns."""
+    dt_s = 5e-6
+    rng = np.random.default_rng(0)
+    wire = rng.uniform(1e4, 2e4, size=(1, 100))
+    lost = rng.uniform(0.0, 10.0, size=(1, 100))
+    traces_full = {"chan_wire": wire, "chan_lost": lost,
+                   "chan_retx": lost.copy(),
+                   "chan_repair_wait_us": np.zeros((1, 100))}
+    blocks = {k: v.reshape(1, 20, 5).sum(axis=2)
+              for k, v in traces_full.items() if k != "chan_repair_wait_us"}
+    blocks["chan_repair_wait_us"] = np.zeros((1, 20))
+    a = runner._channel_cols_from_traces(traces_full, 0, dt_s)
+    b = runner._channel_cols_from_traces(blocks, 0, dt_s, decimate=5)
+    for k in ("goodput_gbps", "wire_gbps", "retx_frac"):
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-12, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: one shared completed/unbounded sentinel
+# ---------------------------------------------------------------------------
+
+def test_sentinel_helpers_semantics():
+    assert is_unfinished(np.float32(INF))
+    assert is_unfinished(INF / 2)                  # boundary is unfinished
+    assert not is_unfinished(np.float32(1e5))
+    # f32 round-trip of the sentinels stays on the right side
+    assert is_unfinished(np.float32(INF) * np.float32(1.0))
+    assert is_unbounded(np.float32(BIG))
+    assert not is_unbounded(np.float32(1e12))
+
+
+def test_flow_metrics_use_shared_sentinels():
+    """The metric extractor must classify by the HELPERS' threshold
+    (INF/2), not a re-derived literal: a done_at strictly below INF/2
+    counts as completed even if it exceeds the old ``1e29`` magic cutoff,
+    and a never-finishing flow (done_at == INF) never does."""
+    wl = Workload((
+        FlowSpec(True, 1 << 20, 4, total_bytes=1e6),   # completes normally
+        FlowSpec(True, 1 << 20, 4, total_bytes=1e6),   # never completes
+        FlowSpec(True, 1 << 20, 4, total_bytes=1e6),   # below-INF/2 oddball
+        FlowSpec(True, 1 << 20, 4),                    # unbounded (BIG)
+    ))
+    wlp = stack_workload_params([wl])
+    final_np = {
+        "delivered": np.array([[1e6, 5e5, 1e6, 5e9]], np.float32),
+        "done_at_us": np.array([[5_000.0, INF, 2e29, INF]], np.float32),
+    }
+    goodput, avg_fct, completion = runner._flow_metrics(wlp, final_np)
+    # 3 finite inter flows; the oddball done_at (2e29 < INF/2) must count
+    assert completion[0] == pytest.approx(2.0 / 3.0)
+    assert goodput[0] == pytest.approx(1e6 + 5e5 + 1e6 + 5e9)
+    assert np.isfinite(avg_fct[0])

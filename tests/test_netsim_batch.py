@@ -108,8 +108,11 @@ def test_heterogeneous_capacity_and_buffer_grid():
 def test_stack_net_params_shapes():
     cfgs = [NetConfig(distance_km=d) for d in DISTS]
     stacked = stack_net_params(cfgs)
-    for leaf in stacked:
-        assert leaf.shape == (len(DISTS),)
+    for name, leaf in zip(NetParams._fields, stacked):
+        if name.startswith("link_"):
+            assert leaf.shape == (len(DISTS), 1)  # [B, L] at L=1
+        else:
+            assert leaf.shape == (len(DISTS),)
     np.testing.assert_allclose(
         np.asarray(stacked.one_way_delay_us),
         [c.one_way_delay_us for c in cfgs])

@@ -90,12 +90,12 @@ def test_builtins_registered():
     assert get_scheme(inst) is inst
 
 
-def test_registry_lists_all_six():
+def test_registry_lists_all_seven():
     """The shipped registry is exactly the paper's four plus the
     related-work pack, every name round-trips through ``get_scheme``, and
-    the six are what ``available_schemes`` advertises (tests that register
-    extras clean up after themselves)."""
-    assert len(ALL_SCHEMES) == 6
+    the seven are what ``available_schemes`` advertises (tests that
+    register extras clean up after themselves)."""
+    assert len(ALL_SCHEMES) == 7
     assert set(ALL_SCHEMES) == set(SCHEMES) | set(RELATED_SCHEMES)
     assert set(available_schemes()) == set(ALL_SCHEMES), \
         "registry leak: some test registered a scheme without cleanup"
@@ -107,7 +107,7 @@ def test_registry_lists_all_six():
 
 
 @pytest.mark.parametrize("scheme", ALL_SCHEMES)
-def test_streaming_full_equivalence_all_six(scheme):
+def test_streaming_full_equivalence_all_schemes(scheme):
     """Every registered scheme — related-work pack included — survives the
     streaming/full equivalence check: ``trace_mode="metrics"`` rows match
     the materialized-trace extraction (tight for means/max/pause, bounded
@@ -248,8 +248,11 @@ def test_workload_padding_mask_shapes():
            congestion_workload(num_inter=4, num_intra=4)]
     stacked = stack_workload_params(wls)
     fmax = max(w.num_flows for w in wls)
-    for leaf in stacked:
-        assert leaf.shape == (2, fmax)
+    for name, leaf in zip(WorkloadParams._fields, stacked):
+        if name == "route":
+            assert leaf.shape == (2, fmax, 1)  # symmetric default: width 1
+        else:
+            assert leaf.shape == (2, fmax)
     np.testing.assert_array_equal(stacked.active_mask.sum(axis=1),
                                   [w.num_flows for w in wls])
     # padded flows are inert: no inter-DC membership, zero bytes

@@ -1,0 +1,281 @@
+"""Multi-link topology engine (PR 6): the traced [L] link axis, per-flow
+routing, per-link impairments, the rdmacell flowcell-spraying scheme, and
+the L=1 bit-identity guarantee the refactor rests on.
+
+The golden tests (tests/test_scheme_api.py) already pin every registered
+scheme's L=1 traces bit-for-bit against the pre-refactor engine — this
+file covers what is NEW: explicit single-path tuples must hit the same
+single-pipe code path, L>1 must conserve bytes and respect routing, and
+rdmacell's token spraying must shift load toward capacity."""
+import dataclasses
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.config.base import NetConfig, NetParams, stack_net_params
+from repro.netsim import (
+    get_scheme, run_experiment_batch, simulate, simulate_batch,
+    throughput_workload,
+)
+from repro.netsim.schemes import ALL_SCHEMES
+from repro.netsim.workload import FlowSpec, Workload
+
+WL = throughput_workload(msg_size=1 << 20, concurrency=16, num_flows=4)
+HORIZON = 8_000.0
+
+LINK_KEYS = ("q_dst_link", "link_tx", "link_pause")
+
+
+def _cfg3(**kw):
+    """Three unequal paths: longer ones are thinner (the OTN mesh shape
+    rdmacell's token spraying is built for)."""
+    base = dict(distance_km=100.0, horizon_us=HORIZON, num_paths=3,
+                path_delay_scale=(1.0, 1.5, 2.0),
+                path_cap_frac=(0.5, 0.3, 0.2))
+    base.update(kw)
+    return NetConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# L=1: the refactor must be invisible
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_explicit_unit_path_tuples_bit_identical(scheme):
+    """num_paths=1 with EXPLICIT unit path tuples resolves to the same
+    traced leaves as the bare config — same single-pipe jaxpr, same bits.
+    (The goldens pin the bare config against the pre-refactor engine; this
+    closes the loop for the spelled-out form.)"""
+    plain = NetConfig(distance_km=100.0)
+    spelled = NetConfig(distance_km=100.0, num_paths=1,
+                        path_delay_scale=(1.0,), path_cap_frac=(1.0,))
+    f_a, tr_a = simulate(plain, WL, get_scheme(scheme), HORIZON)
+    f_b, tr_b = simulate(spelled, WL, get_scheme(scheme), HORIZON)
+    assert set(tr_a) == set(tr_b)
+    for k in tr_a:
+        np.testing.assert_array_equal(np.asarray(tr_a[k]),
+                                      np.asarray(tr_b[k]), err_msg=k)
+    np.testing.assert_array_equal(np.asarray(f_a.delivered),
+                                  np.asarray(f_b.delivered))
+
+
+def test_l1_traces_carry_no_link_keys():
+    _, traces = simulate(NetConfig(distance_km=100.0), WL,
+                         get_scheme("dcqcn"), HORIZON)
+    assert not set(LINK_KEYS) & set(traces)
+
+
+def test_path_tuple_validation():
+    with pytest.raises(ValueError, match="path_delay_scale"):
+        NetConfig(num_paths=3, path_delay_scale=(1.0, 2.0)).path_delays_us()
+    cfg = NetConfig(num_paths=2)
+    assert cfg.path_caps_gbps() == (cfg.otn_capacity_gbps / 2,) * 2
+    assert cfg.path_delays_us() == (cfg.one_way_delay_us,) * 2
+
+
+# ---------------------------------------------------------------------------
+# L>1 physics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ("dcqcn", "matchrdma", "rdmacell"))
+def test_multilink_conserves_and_traces(scheme):
+    final, traces = simulate(_cfg3(), WL, get_scheme(scheme), HORIZON)
+    for k in LINK_KEYS:
+        assert k in traces and np.asarray(traces[k]).shape[-1] == 3, k
+    assert float(np.max(np.asarray(traces["cons_err"]))) < 1e-3
+    assert float(np.sum(np.asarray(final.delivered))) > 0
+
+
+def test_route_matrix_steers_traffic():
+    """A workload routed entirely onto links 0+1 must leave link 2 dark."""
+    wl = Workload(tuple(FlowSpec(True, 1 << 20, 16, route=(1.0, 1.0, 0.0))
+                        for _ in range(4)))
+    _, traces = simulate(_cfg3(), wl, get_scheme("dcqcn"), HORIZON)
+    link_tx = np.asarray(traces["link_tx"])
+    assert float(link_tx[:, 2].max()) == 0.0
+    assert float(link_tx[:, :2].sum()) > 0.0
+
+
+def test_route_width_mismatch_raises():
+    wl = Workload(tuple(FlowSpec(True, 1 << 20, 16, route=(1.0, 1.0))
+                        for _ in range(2)))
+    with pytest.raises(ValueError, match="route"):
+        simulate(_cfg3(), wl, get_scheme("dcqcn"), HORIZON)
+
+
+def test_multilink_batch_matches_sequential():
+    cfgs = [_cfg3(), _cfg3(path_delay_scale=(1.0, 1.2, 1.4))]
+    finals, traces = simulate_batch(cfgs, WL, get_scheme("dcqcn"), HORIZON)
+    for i, cfg in enumerate(cfgs):
+        f, tr = simulate(cfg, WL, get_scheme("dcqcn"), HORIZON)
+        np.testing.assert_allclose(
+            np.asarray(traces["thr_inter"])[i], np.asarray(tr["thr_inter"]),
+            rtol=1e-4, atol=1e4)  # bytes/s on a ~5e10 scale: ring-padding
+        # reorders f32 sums, so transient steps wobble by ~1e-6 of scale
+        np.testing.assert_allclose(
+            np.asarray(finals.delivered)[i], np.asarray(f.delivered),
+            rtol=1e-5)
+
+
+def test_stacked_link_leaves_shape():
+    cfgs = [_cfg3(), _cfg3(distance_km=300.0)]
+    stacked = stack_net_params(cfgs)
+    for name, leaf in zip(NetParams._fields, stacked):
+        expect = (2, 3) if name.startswith("link_") else (2,)
+        assert leaf.shape == expect, (name, leaf.shape)
+
+
+def test_per_link_impairments_decorrelate():
+    """An OTN-flap channel at L=3 must not flap all links in lockstep:
+    per-link fold_in keys give each link its own loss process."""
+    cfg = _cfg3(loss_rate=5e-4)
+    _, traces = simulate(cfg, WL, get_scheme("dcqcn"), HORIZON,
+                         channel="impaired")
+    assert "chan_lost" in traces
+    assert float(np.sum(np.asarray(traces["chan_lost"]))) > 0.0
+    assert float(np.max(np.asarray(traces["cons_err"]))) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# rdmacell
+# ---------------------------------------------------------------------------
+
+def test_rdmacell_sprays_toward_capacity():
+    """Token buckets refill at link rate, so steady-state spray weights
+    track capacity: the 0.5/0.3/0.2 split must show in link_tx, while the
+    workload-routed baseline sprays its (equal) route weights."""
+    _, tr_cell = simulate(_cfg3(), WL, get_scheme("rdmacell"), HORIZON)
+    _, tr_base = simulate(_cfg3(), WL, get_scheme("dcqcn"), HORIZON)
+    tail_cell = np.asarray(tr_cell["link_tx"])[-200:].mean(axis=0)
+    tail_base = np.asarray(tr_base["link_tx"])[-200:].mean(axis=0)
+    frac_cell = tail_cell / tail_cell.sum()
+    frac_base = tail_base / tail_base.sum()
+    np.testing.assert_allclose(frac_cell, (0.5, 0.3, 0.2), atol=0.05)
+    np.testing.assert_allclose(frac_base, (1 / 3,) * 3, atol=0.05)
+    # scheme-owned trace columns exist and are sane
+    assert float(np.min(np.asarray(tr_cell["rdmacell_tokens_mb"]))) >= 0.0
+    assert float(np.min(np.asarray(tr_cell["rdmacell_rob_mb"]))) >= 0.0
+
+
+def test_rdmacell_rob_limit_gates_senders():
+    """A tiny ROB limit must hold estimated ROB occupancy below what a
+    huge limit allows (the back-pressure knob actually gates)."""
+    loose = _cfg3(rdmacell_rob_limit_mb=1e4)
+    tight = _cfg3(rdmacell_rob_limit_mb=2.0)
+    _, tr_loose = simulate(loose, WL, get_scheme("rdmacell"), HORIZON)
+    _, tr_tight = simulate(tight, WL, get_scheme("rdmacell"), HORIZON)
+    rob_loose = float(np.asarray(tr_loose["rdmacell_rob_mb"])[-200:].mean())
+    rob_tight = float(np.asarray(tr_tight["rdmacell_rob_mb"])[-200:].mean())
+    assert rob_tight <= rob_loose + 1e-6
+
+
+def test_rdmacell_streams_reorder_and_entropy_columns():
+    rows = run_experiment_batch([_cfg3()], WL, get_scheme("rdmacell"),
+                                HORIZON, trace_mode="metrics")
+    (row,) = rows
+    assert row["mean_reorder_buf_mb"] >= 0.0
+    assert 0.0 <= row["spray_entropy"] <= 1.0
+    # unequal caps but all links used: entropy strictly inside (0, 1)
+    assert 0.5 < row["spray_entropy"] < 1.0
+
+
+def test_rdmacell_l1_streams_baseline_columns():
+    """At L=1 rdmacell carries the default extra state — its streamed
+    columns are the baseline's (no reorder/entropy machinery exists)."""
+    rows = run_experiment_batch([NetConfig(distance_km=100.0)], WL,
+                                get_scheme("rdmacell"), HORIZON,
+                                trace_mode="metrics")
+    (row,) = rows
+    assert "mean_reorder_buf_mb" not in row
+    assert "spray_entropy" not in row
+    assert "mean_budget_gbps" in row
+
+
+# ---------------------------------------------------------------------------
+# Launch-plan interaction (satellite: chunk_cells edge cases)
+# ---------------------------------------------------------------------------
+
+def test_chunk_cells_scales_with_links_and_decimate():
+    from repro.netsim import runner
+    t = 100_000
+    base = runner.chunk_cells(t, "full")
+    # L>1 traces are wider per step -> smaller chunks under the same budget
+    l8 = runner.chunk_cells(t, "full", num_links=8)
+    assert l8 <= base
+    assert l8 * t * (runner._TRACE_KEYS_EST + 24) <= runner.MAX_TRACE_FLOATS
+    # decimation shrinks the materialized block -> larger chunks
+    dec = runner.chunk_cells(t, "decimate", decimate=10)
+    assert dec >= base
+    # the 256MB bound holds at every (decimate, L) corner
+    for k in (1, 7):
+        for L in (1, 3, 16):
+            c = runner.chunk_cells(t, "decimate", decimate=k, num_links=L)
+            keys = runner._TRACE_KEYS_EST + (3 * L if L > 1 else 0)
+            assert c * max(t // k, 1) * keys <= max(
+                runner.MAX_TRACE_FLOATS, max(t // k, 1) * keys)
+    # metrics mode ignores trace width entirely
+    assert runner.chunk_cells(t, "metrics", num_links=16) \
+        == runner.METRICS_CHUNK_CELLS
+
+
+_SUBPROC_TOPOLOGY = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    sys.path.insert(0, "src")
+    import numpy as np
+    import jax
+    from repro.config.base import NetConfig
+    from repro.netsim import run_experiment_batch, throughput_workload
+    assert len(jax.devices()) == 4
+    wl = throughput_workload(1 << 20, 16, num_flows=4)
+    cfg = dict(horizon_us=6_000.0, num_paths=2,
+               path_delay_scale=(1.0, 1.6), path_cap_frac=(0.6, 0.4))
+    # 3 cells (< one chunk) on 4 devices: the single launch must still be
+    # padded to a device multiple so sharding engages and rows come back
+    # for exactly the real cells
+    cfgs = [NetConfig(distance_km=d, **cfg) for d in (50.0, 100.0, 200.0)]
+    rows = run_experiment_batch(cfgs, wl, "rdmacell", 6_000.0,
+                                trace_mode="metrics")
+    assert len(rows) == len(cfgs)
+    single = run_experiment_batch(cfgs, wl, "rdmacell", 6_000.0,
+                                  trace_mode="metrics",
+                                  devices=jax.devices()[:1])
+    for a, b in zip(rows, single):
+        for k, va in a.items():
+            if not isinstance(va, float) or not np.isfinite(va):
+                continue
+            assert abs(va - b[k]) <= 1e-6 * max(abs(va), abs(b[k]), 1e-9), \\
+                (k, va, b[k])
+    print("TOPOLOGY_SHARDED_OK")
+""")
+
+
+def test_small_multilink_grid_on_forced_devices():
+    """Satellite 3 pin: a grid smaller than one chunk on 4 (forced host)
+    devices — the launch plan pads the single launch to a device multiple
+    (``_plan_launches`` must round pad_to unconditionally, not only when
+    the grid spills into multiple chunks) and the rows match the
+    single-device run."""
+    r = subprocess.run([sys.executable, "-c", _SUBPROC_TOPOLOGY],
+                       capture_output=True, text=True, cwd=".", timeout=600)
+    assert "TOPOLOGY_SHARDED_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_plan_launches_pad_invariants():
+    """Every launch of every plan shape pads to a device multiple >= its
+    real cell count (the invariant ``shard_scenario_axis`` depends on) —
+    including single-launch grids smaller than one chunk."""
+    from repro.netsim.runner import _plan_launches
+    for n_cells in (1, 2, 3, 5, 8, 17):
+        for chunk in (4, 8, 64):
+            for n_dev in (1, 2, 4):
+                plan = _plan_launches(n_cells, ("s",), chunk, n_dev)
+                covered = []
+                for launch in plan:
+                    assert launch.pad_to % n_dev == 0
+                    assert launch.pad_to >= launch.hi - launch.lo
+                    covered.extend(range(launch.lo, launch.hi))
+                assert covered == list(range(n_cells))

@@ -16,6 +16,11 @@ Four checks, all against the live code so the docs cannot silently rot:
      subsystem: every ``available_channel_models()`` name in a table row
      of ``docs/channel-models.md``, every public ``ChannelModel`` hook
      documented there.
+  5. Topology-knob coverage — every multi-link ``NetConfig`` field
+     (introspected: ``num_paths`` + every ``path_*`` / ``rdmacell_*``
+     dataclass field) appears in a table row of ``docs/topology.md``, so
+     adding a topology or rdmacell knob without documenting it breaks
+     the build.
 
 Exit status is the error count (0 = clean).
 
@@ -31,6 +36,7 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SCHEME_API_MD = os.path.join(ROOT, "docs", "scheme-api.md")
 CHANNEL_MD = os.path.join(ROOT, "docs", "channel-models.md")
+TOPOLOGY_MD = os.path.join(ROOT, "docs", "topology.md")
 
 # [text](target) — excluding images' inner brackets is unnecessary here;
 # nested ![alt](img) links resolve the same way
@@ -100,17 +106,45 @@ def check_channel_table(errors: list) -> None:
                        ChannelModel, "channel model")
 
 
+def check_topology_table(errors: list) -> None:
+    """Every multi-link NetConfig knob must sit in a table row of
+    docs/topology.md. The field list is introspected from the dataclass,
+    so a new ``path_*``/``rdmacell_*`` knob fails the lint until it is
+    written up."""
+    import dataclasses
+
+    from repro.config.base import NetConfig
+
+    knobs = ["num_paths"] + sorted(
+        f.name for f in dataclasses.fields(NetConfig)
+        if f.name.startswith(("path_", "rdmacell_")))
+    rel = os.path.relpath(TOPOLOGY_MD, ROOT)
+    if not os.path.exists(TOPOLOGY_MD):
+        errors.append(f"{rel} is missing")
+        return
+    text = open(TOPOLOGY_MD, encoding="utf-8").read()
+    table_rows = [ln for ln in text.splitlines()
+                  if ln.lstrip().startswith("|")]
+    for knob in knobs:
+        if not any(f"`{knob}`" in row for row in table_rows):
+            errors.append(
+                f"{rel}: topology knob {knob!r} missing from the table "
+                f"— document it")
+
+
 def main() -> int:
     errors: list = []
     check_links(errors)
     check_scheme_table(errors)
     check_channel_table(errors)
+    check_topology_table(errors)
     for e in errors:
         print(f"docs-check: {e}", file=sys.stderr)
     n_files = len(_md_files())
     if not errors:
         print(f"docs-check: OK ({n_files} markdown files, links + scheme "
-              f"table + hook coverage + channel-model table)")
+              f"table + hook coverage + channel-model table + topology "
+              f"knobs)")
     return min(len(errors), 100)
 
 
