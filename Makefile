@@ -21,6 +21,11 @@
 #                               schemes (tiny, seconds, no json append);
 #                               asserts rdmacell's multi-link streamed
 #                               columns and one compile per scheme
+#   make bench-sites-smoke    - 3-site mesh grid (4 site-pair edges, per-flow
+#                               endpoints) under the trace_replay channel
+#                               (tiny, seconds, no json append); asserts one
+#                               compile per scheme and that the replayed
+#                               schedule bites at full amplitude
 #   make docs-check           - docs lint: intra-repo links in README/docs,
 #                               scheme-table completeness, hook coverage
 #   make ci                   - deps + test + smokes + docs-check
@@ -33,6 +38,8 @@
 #                               BENCH_netsim_sweep.json
 #   make bench-topology       - full unequal-path topology grid; appends to
 #                               BENCH_netsim_sweep.json
+#   make bench-sites          - full 3-site mesh grid (trace_replay channel);
+#                               appends to BENCH_netsim_sweep.json
 
 PYTHON ?= python
 
@@ -44,7 +51,8 @@ PYTEST_W = -W "error:passing a scheme name string:DeprecationWarning:repro\.nets
 .PHONY: deps test ci bench-netsim bench-netsim-smoke \
 	bench-scheme-compare bench-scheme-compare-smoke \
 	bench-impairment bench-impairment-smoke \
-	bench-topology bench-topology-smoke docs-check
+	bench-topology bench-topology-smoke \
+	bench-sites bench-sites-smoke docs-check
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt || \
@@ -65,11 +73,15 @@ bench-impairment-smoke:
 bench-topology-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --topology-grid --smoke
 
+bench-sites-smoke:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --sites-grid --smoke
+
 docs-check:
 	PYTHONPATH=src $(PYTHON) tools/docs_check.py
 
 ci: deps test bench-netsim-smoke bench-scheme-compare-smoke \
-	bench-impairment-smoke bench-topology-smoke docs-check
+	bench-impairment-smoke bench-topology-smoke bench-sites-smoke \
+	docs-check
 
 bench-netsim:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.netsim_sweep_bench
@@ -82,3 +94,6 @@ bench-impairment:
 
 bench-topology:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --topology-grid
+
+bench-sites:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --sites-grid

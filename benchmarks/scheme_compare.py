@@ -36,18 +36,30 @@ budget repairs with strictly lower p99 latency than e2e dcqcn — and the
 zero-impairment rows are cross-checked against an ideal-channel run of
 the same cells (the channel must be invisible at its defaults).
 
+``--sites-grid`` switches to the multi-site comparison: all schemes over
+a 3-site mesh (4 site-pair edges, per-flow endpoint matrix) under the
+``trace_replay`` channel, whose per-edge impairment schedule and the
+mesh's relay-path delay spread vary per cell — every varying quantity is
+a traced leaf, so the grid is ONE compiled launch plan per scheme
+(asserted), and the replayed schedule must bite at full amplitude while
+staying invisible at zero.
+
     PYTHONPATH=src python -m benchmarks.scheme_compare \
-        [--smoke] [--full] [--impairment-grid]
+        [--smoke] [--full] [--impairment-grid] [--topology-grid] \
+        [--sites-grid]
 """
 from __future__ import annotations
 
 import time
 
+import dataclasses
+
 from repro.config.base import NetConfig
 from repro.netsim import sweep_grid
 from repro.netsim.runner import convergence_horizon_us
 from repro.netsim.schemes import ALL_SCHEMES
-from repro.netsim.workload import congestion_workload
+from repro.netsim.topology import SiteEdge, SiteGraph
+from repro.netsim.workload import FlowSpec, Workload, congestion_workload
 
 from benchmarks.netsim_sweep_bench import _append_record, _git_rev
 
@@ -250,6 +262,136 @@ def run_topology_grid(full: bool = False, smoke: bool = False):
     return rows, cells, summary, wall_s
 
 
+# the 3-site mesh of the --sites-grid comparison: a bundled primary pair
+# (two parallel 0->1 edges) plus a relay path through site 2
+SITES_EDGES = (SiteEdge(0, 1), SiteEdge(0, 1, delay_scale=1.5),
+               SiteEdge(0, 2, cap_frac=0.2), SiteEdge(2, 1, cap_frac=0.2))
+
+
+def _sites_workload(horizon_us: float) -> Workload:
+    """The congestion scenario spread over the mesh: inter-DC load on all
+    three site pairs + an intra-DC burst at site 1's leaf mid-run."""
+    inter = [FlowSpec(True, 1 << 20, 16) for _ in range(2)]       # 0 -> 1
+    inter += [FlowSpec(True, 1 << 20, 16, src_site=0, dst_site=2),
+              FlowSpec(True, 1 << 20, 16, src_site=2, dst_site=1)]
+    intra = [FlowSpec(False, 256 << 10, 8, dst_site=1,
+                      start_us=horizon_us / 3.0, period_us=horizon_us,
+                      duty=1.0 / 3.0) for _ in range(2)]
+    return Workload(tuple(inter + intra))
+
+
+def _sites_schedule(scale: float, k: int = 8) -> tuple:
+    """A recorded-telemetry-shaped per-edge impairment timeline for the
+    4-edge mesh, amplitude-scaled per cell (the schedule VALUES are traced
+    leaves, so the scale axis costs no recompiles): a loss burst on the
+    primary edge, a protection-switch capacity dip on its sibling, a mixed
+    loss+jitter window on the relay uplink, a clean relay downlink."""
+    def edge(loss_peak=0.0, defer_peak=0.0, cap_dip=0.0, slot=3):
+        loss = [0.0] * k
+        defer = [0.0] * k
+        cap = [1.0] * k
+        loss[slot] = loss_peak * scale
+        defer[slot] = defer_peak * scale
+        cap[(slot + 2) % k] = 1.0 - cap_dip * scale
+        return tuple(zip(loss, defer, cap))
+    return (edge(loss_peak=0.3),
+            edge(cap_dip=0.6),
+            edge(loss_peak=0.1, defer_peak=0.4),
+            edge())
+
+
+def run_sites_grid(full: bool = False, smoke: bool = False):
+    """All seven schemes over a 3-SITE mesh grid under ``trace_replay``:
+    the :data:`SITES_EDGES` graph compiles onto a 4-link axis, flows name
+    site endpoints (the endpoint matrix masks each flow onto its pair's
+    edges), and every cell replays a recorded per-edge impairment schedule
+    whose amplitude and the mesh's delay spread vary per cell — delays,
+    capacities AND schedule values are traced leaves, so the whole grid is
+    ONE compiled launch plan per scheme (asserted)."""
+    from repro.netsim import fluid
+
+    spreads = (1.0, 1.5, 2.5)       # delay multiplier on the relay path
+    scales = (0.0, 0.5, 1.0)        # schedule amplitude (0 = clean replay)
+    if full:
+        spreads = spreads + (4.0,)
+        scales = scales + (0.25, 0.75)
+    if smoke:
+        spreads, scales = (1.0, 2.0), (1.0,)
+    cells = [(sp, sc) for sp in spreads for sc in sorted(scales)]
+
+    horizon_us = 6_000.0 if smoke else 20_000.0
+    base = NetConfig(distance_km=100.0,
+                     channel_schedule_dt_us=horizon_us / 8.0)
+    cfgs = []
+    for sp, sc in cells:
+        g = SiteGraph(3, (SITES_EDGES[0], SITES_EDGES[1],
+                          dataclasses.replace(SITES_EDGES[2],
+                                              delay_scale=sp),
+                          dataclasses.replace(SITES_EDGES[3],
+                                              delay_scale=sp)))
+        cfgs.append(dataclasses.replace(
+            g.to_net_config(base), channel_schedule=_sites_schedule(sc)))
+    wl = _sites_workload(horizon_us)
+
+    t0 = time.time()
+    n0 = fluid._run_traced_batch._cache_size()
+    rows = sweep_grid(cfgs, wl, ALL_SCHEMES, horizon_us,
+                      trace_mode="metrics", channel="trace_replay")
+    compiles = fluid._run_traced_batch._cache_size() - n0
+    wall_s = time.time() - t0
+    assert compiles <= len(ALL_SCHEMES), (
+        f"{compiles} compiles for {len(ALL_SCHEMES)} schemes — the site "
+        f"mesh's delays/schedules stopped being traced leaves")
+
+    by_scheme = {}
+    for r in rows:
+        by_scheme.setdefault(r["scheme"], []).append(r)
+    for name, rs in by_scheme.items():
+        assert len(rs) == len(cells), (name, len(rs))
+        assert all(_finite(r["throughput_gbps"]) for r in rs), name
+        for col in CHANNEL_COLS:
+            assert all(col in r and _finite(r[col]) for r in rs), (name, col)
+    # the replayed loss bursts must actually bite at full amplitude (and
+    # only there: a zero-amplitude schedule is a clean pass-through)
+    for i, (sp, sc) in enumerate(cells):
+        dc = by_scheme["dcqcn"][i]
+        if sc == 0.0:
+            assert dc["retx_frac"] == 0.0, (sp, sc, dc["retx_frac"])
+        if sc == 1.0:
+            assert dc["retx_frac"] > 0.0, (sp, sc, dc["retx_frac"])
+
+    summary = {}
+    for name, rs in by_scheme.items():
+        worst = max(rs, key=lambda r: r["retx_frac"])
+        summary[name] = {
+            "throughput_gbps_mean":
+                round(sum(r["throughput_gbps"] for r in rs) / len(rs), 2),
+            "goodput_gbps_worst_cell": round(worst["goodput_gbps"], 2),
+            "retx_frac_worst_cell": round(worst["retx_frac"], 4),
+            "peak_buffer_mb_worst":
+                round(max(r["peak_buffer_mb"] for r in rs), 2),
+        }
+
+    if not smoke:
+        _append_record({
+            "grid": {"bench": "scheme_compare_sites",
+                     "num_sites": 3,
+                     "site_edges": [[e.src, e.dst] for e in SITES_EDGES],
+                     "distance_km": 100.0,
+                     "relay_delay_spreads": [float(s) for s in spreads],
+                     "schedule_scales": [float(s) for s in sorted(scales)],
+                     "channel": "trace_replay",
+                     "schemes": list(ALL_SCHEMES),
+                     "horizon_us": horizon_us,
+                     "cells": len(cells) * len(ALL_SCHEMES)},
+            "git_rev": _git_rev(),
+            "wall_s": round(wall_s, 3),
+            "summary": summary,
+            "backend": __import__("jax").default_backend(),
+        })
+    return rows, cells, summary, wall_s
+
+
 def run(full: bool = False, smoke: bool = False):
     dists = (1.0, 10.0, 50.0, 100.0, 300.0, 500.0, 1000.0)
     if full:
@@ -333,7 +475,37 @@ def main():
                          "skew) grid at num_paths=3 — one compiled launch "
                          "plan per scheme; asserts rdmacell's multi-link "
                          "streamed columns on every cell")
+    ap.add_argument("--sites-grid", action="store_true",
+                    help="schemes x 3-site mesh grid (4 site-pair edges, "
+                         "per-flow endpoints) under the trace_replay "
+                         "channel — one compiled launch plan per scheme; "
+                         "asserts the replayed schedule bites at full "
+                         "amplitude and is invisible at zero")
     args = ap.parse_args()
+    if args.sites_grid:
+        rows, cells, summary, wall_s = run_sites_grid(
+            full=args.full, smoke=args.smoke)
+        cols = ("scheme", "relay_delay", "sched_scale", "throughput_gbps",
+                "goodput_gbps", "retx_frac", "peak_buffer_mb",
+                "pause_ratio")
+        print(",".join(cols))
+        per_scheme = len(rows) // len(cells)
+        for i, r in enumerate(rows):
+            sp, sc = cells[i // per_scheme]
+            vals = dict(r, relay_delay=sp, sched_scale=sc)
+            print(",".join(f"{vals[c]:.4g}" if isinstance(vals[c], float)
+                           else str(vals[c]) for c in cols))
+        print(f"# {len(rows)} cells in {wall_s:.1f}s (3-site mesh grid, "
+              f"trace_replay channel, streaming mode, one compile per "
+              f"scheme)")
+        for name, s in summary.items():
+            print(f"# {name}: mean thr={s['throughput_gbps_mean']} Gbps, "
+                  f"worst-cell goodput={s['goodput_gbps_worst_cell']} Gbps,"
+                  f" retx_frac={s['retx_frac_worst_cell']}, worst peak="
+                  f"{s['peak_buffer_mb_worst']} MB")
+        if args.smoke:
+            print("SCHEME_COMPARE_SITES_SMOKE_OK")
+        return
     if args.topology_grid:
         rows, cells, summary, wall_s = run_topology_grid(
             full=args.full, smoke=args.smoke)

@@ -281,6 +281,14 @@ class NetParams(NamedTuple):
     link_delay_us: Any           # f32[L] — per-link one-way delay
     link_cap_gbps: Any           # f32[L] — per-link line capacity
     link_thresh_kb: Any          # f32[L] — per-link dst-OTN PFC threshold
+    # trace-replay channel schedule (repro.netsim.channel trace_replay):
+    # per-edge time-indexed (loss_frac, defer_frac, cap_frac) rows. The
+    # VALUES are traced; the table SHAPE [L, K, 3] is static (K =
+    # cfg.schedule_len keys the compile — grids sharing one schedule
+    # length share one program). [L, 0, 3] = no schedule (pass-through).
+    chan_schedule: Any           # f32[L, K, 3]
+    chan_sched_dt_us: Any        # f32 — schedule entry duration (µs;
+                                 # <= 0 means one entry per dt_us step)
 
     @classmethod
     def of(cls, cfg: "NetConfig") -> "NetParams":
@@ -302,7 +310,10 @@ class NetParams(NamedTuple):
                    link_cap_gbps=jnp.asarray(
                        np.float32(cfg.path_caps_gbps())),
                    link_thresh_kb=jnp.asarray(
-                       np.float32(cfg.path_pfc_kb())))
+                       np.float32(cfg.path_pfc_kb())),
+                   chan_schedule=jnp.asarray(cfg.schedule_array()),
+                   chan_sched_dt_us=jnp.float32(
+                       cfg.channel_schedule_dt_us))
 
     def delay_steps(self, dt_us: float):
         """Traced step count of the long-haul delay (>= 1)."""
@@ -315,6 +326,13 @@ def stack_net_params(cfgs: Sequence["NetConfig"]) -> NetParams:
     """Stack per-scenario params into one [B]-leading pytree for vmap."""
     import jax
     import jax.numpy as jnp
+    lens = {c.schedule_len for c in cfgs}
+    if len(lens) > 1:
+        raise ValueError(
+            f"stack_net_params: channel_schedule lengths differ across the "
+            f"batch ({sorted(lens)}) — the [L, K, 3] schedule table is a "
+            f"stacked traced leaf, so every scenario must carry the same "
+            f"number of entries (pad shorter schedules)")
     return jax.tree.map(lambda *xs: jnp.stack(xs),
                         *[NetParams.of(c) for c in cfgs])
 
@@ -334,7 +352,8 @@ NET_TRACED_FIELDS = ("distance_km", "num_otn_links", "link_gbps",
                      "sdr_retx_budget_frac", "loss_rate", "loss_burst_len",
                      "jitter_us", "flap_period_us", "flap_depth",
                      "rdmacell_token_bucket_us", "rdmacell_rob_limit_mb",
-                     "path_delay_scale", "path_cap_frac", "path_thresh_kb")
+                     "path_delay_scale", "path_cap_frac", "path_thresh_kb",
+                     "channel_schedule", "channel_schedule_dt_us")
 
 
 def batch_template(cfgs: Sequence["NetConfig"]) -> "NetConfig":
@@ -380,6 +399,24 @@ class NetConfig:
     path_delay_scale: tuple = ()
     path_cap_frac: tuple = ()
     path_thresh_kb: tuple = ()
+    # multi-SITE graph (docs/sites.md). ``num_sites`` is STATIC; each of
+    # the ``num_paths`` links is a directed site-pair EDGE: ``site_edges``
+    # is () (= every link connects site 0 -> 1, the legacy single pair) or
+    # a length-num_paths tuple of (src_site, dst_site) pairs. A flow only
+    # sprays onto edges matching its (src_site, dst_site) endpoints
+    # (``FlowSpec``); at the defaults the engine emits the identical
+    # program it emitted before sites existed (goldens pin this).
+    num_sites: int = 2
+    site_edges: tuple = ()
+    # trace-replay channel schedule (docs/channel-models.md): a recorded
+    # per-edge impairment timeline for the ``trace_replay`` channel model.
+    # () = no schedule, or a length-num_paths tuple of per-edge entry
+    # tuples, each entry a (loss_frac, defer_frac, cap_frac) triple
+    # covering ``channel_schedule_dt_us`` of simulated time (<= 0 = one
+    # entry per dt_us step; the schedule loops past its end). The VALUES
+    # are traced NetParams leaves; the entry count K is static shape.
+    channel_schedule: tuple = ()
+    channel_schedule_dt_us: float = 0.0
 
     # simulation
     dt_us: float = 5.0                    # fluid integration step
@@ -490,6 +527,85 @@ class NetConfig:
         """Per-path dst-OTN PFC thresholds (KB; default pfc_xoff_kb)."""
         return self._path_tuple(self.path_thresh_kb, self.pfc_xoff_kb,
                                 "path_thresh_kb")
+
+    # -- multi-site graph (edges over the link axis; docs/sites.md) --------
+    def edge_pairs(self) -> tuple:
+        """Resolved per-link (src_site, dst_site) pairs, length
+        ``num_paths``. The default () wires every link as the legacy
+        0 -> 1 site pair. Validates the graph: site indices in range,
+        no self-edges."""
+        if self.num_sites < 2:
+            raise ValueError(
+                f"NetConfig.num_sites must be >= 2, got {self.num_sites}")
+        if not self.site_edges:
+            return ((0, 1),) * self.num_paths
+        if len(self.site_edges) != self.num_paths:
+            raise ValueError(
+                f"NetConfig.site_edges: expected {self.num_paths} "
+                f"(num_paths) directed (src, dst) pairs or an empty tuple, "
+                f"got {len(self.site_edges)}")
+        pairs = []
+        for e in self.site_edges:
+            if len(e) != 2:
+                raise ValueError(
+                    f"NetConfig.site_edges: each edge is a (src_site, "
+                    f"dst_site) pair, got {e!r}")
+            s, d = int(e[0]), int(e[1])
+            if not (0 <= s < self.num_sites and 0 <= d < self.num_sites):
+                raise ValueError(
+                    f"NetConfig.site_edges: edge ({s}, {d}) references a "
+                    f"site outside [0, {self.num_sites})")
+            if s == d:
+                raise ValueError(
+                    f"NetConfig.site_edges: self-edge ({s}, {d}) — a link "
+                    f"must connect two distinct sites")
+            pairs.append((s, d))
+        return tuple(pairs)
+
+    @property
+    def is_multisite(self) -> bool:
+        """True when the config declares a genuine site graph (more than
+        two sites, or explicit edge wiring). At False the engine takes the
+        legacy single-pair path — bit-identical to the pre-sites
+        programs the goldens pin."""
+        return self.num_sites > 2 or bool(self.site_edges)
+
+    # -- trace-replay schedule (docs/channel-models.md) --------------------
+    @property
+    def schedule_len(self) -> int:
+        """Static entry count K of the channel schedule (0 = none).
+        Validates the nested tuple: one per-edge timeline per link, all of
+        equal length, each entry a (loss_frac, defer_frac, cap_frac)
+        triple."""
+        if not self.channel_schedule:
+            return 0
+        if len(self.channel_schedule) != self.num_paths:
+            raise ValueError(
+                f"NetConfig.channel_schedule: expected {self.num_paths} "
+                f"(num_paths) per-edge timelines or an empty tuple, got "
+                f"{len(self.channel_schedule)}")
+        lens = {len(edge) for edge in self.channel_schedule}
+        if len(lens) > 1:
+            raise ValueError(
+                f"NetConfig.channel_schedule: per-edge timelines differ in "
+                f"length ({sorted(lens)}) — pad them to a common K")
+        for edge in self.channel_schedule:
+            for entry in edge:
+                if len(entry) != 3:
+                    raise ValueError(
+                        f"NetConfig.channel_schedule: each entry is a "
+                        f"(loss_frac, defer_frac, cap_frac) triple, got "
+                        f"{entry!r}")
+        return lens.pop() if lens else 0
+
+    def schedule_array(self):
+        """The schedule as an f32 [L, K, 3] numpy table (the traced
+        ``NetParams.chan_schedule`` leaf; [L, 0, 3] when unset)."""
+        import numpy as np
+        k = self.schedule_len
+        if k == 0:
+            return np.zeros((self.num_paths, 0, 3), np.float32)
+        return np.asarray(self.channel_schedule, np.float32)
 
     @property
     def control_proc_steps(self) -> int:

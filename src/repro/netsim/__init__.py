@@ -10,12 +10,20 @@ Public surface:
                contract is documented in ``docs/scheme-api.md`` and the
                worked tutorial in ``docs/writing-a-scheme.md``.
   * channel  — registry-backed long-haul channel models (``ChannelModel``,
-               ``register_channel_model``, ``get_channel_model``). Five
+               ``register_channel_model``, ``get_channel_model``). Six
                ship registered (``CHANNEL_MODELS`` = ideal /
-               bernoulli_loss / jitter / otn_flap / impaired); every
-               entrypoint takes ``channel=`` and non-ideal models activate
-               the engine's loss-repair accounting. Documented in
+               bernoulli_loss / jitter / otn_flap / impaired /
+               trace_replay); every entrypoint takes ``channel=`` and
+               non-ideal models activate the engine's loss-repair
+               accounting. ``trace_replay`` replays recorded per-edge OTN
+               telemetry schedules. Documented in
                ``docs/channel-models.md``.
+  * topology — the multi-site graph subsystem (``SiteGraph``,
+               ``SiteEdge``, ``compile_site_graph``): N sites with
+               directed site-pair edges compiled onto the traced link
+               axis; flows name endpoints via
+               ``FlowSpec(src_site=..., dst_site=...)``. Documented in
+               ``docs/sites.md``.
   * fluid    — the scheme-agnostic engine (``simulate``, ``simulate_batch``;
                execution modes ``TRACE_MODES`` = full / decimate / metrics,
                streaming accumulators ``MetricAcc`` + ``hist_quantile``,
@@ -42,6 +50,9 @@ from repro.netsim.schemes import (
     ALL_SCHEMES, RELATED_SCHEMES, SCHEMES, Scheme, available_schemes,
     get_scheme, register_scheme,
 )
+from repro.netsim.topology import (
+    SiteEdge, SiteGraph, compile_site_graph, validate_site_endpoints,
+)
 from repro.netsim.workload import (
     BIG, FlowSpec, Workload, WorkloadParams, aicb_workload,
     congestion_workload, mixed_fct_workload, stack_workload_params,
@@ -51,7 +62,8 @@ from repro.netsim.workload import (
 __all__ = [
     "ALL_SCHEMES", "CHANNEL_MODELS", "ChannelModel", "MetricAcc",
     "RELATED_SCHEMES", "SCHEMES", "Scheme",
-    "Scenario", "SimState", "TRACE_MODES", "WorkloadParams",
+    "Scenario", "SimState", "SiteEdge", "SiteGraph", "TRACE_MODES",
+    "WorkloadParams", "compile_site_graph", "validate_site_endpoints",
     "available_channel_models", "available_schemes", "batch_padding",
     "chunk_cells", "get_channel_model", "get_scheme",
     "hist_quantile", "register_channel_model", "register_scheme",

@@ -8,13 +8,14 @@
     class MyChannel(ChannelModel):
         ...
 
-Five models ship registered: ``ideal`` (the default — the perfect pipe the
+Six models ship registered: ``ideal`` (the default — the perfect pipe the
 engine always modeled, structurally bit-identical), ``bernoulli_loss``
 (i.i.d. + Gilbert–Elliott bursty loss), ``jitter`` (stochastic delay
-perturbation), ``otn_flap`` (OTN protection-switch capacity dips) and
-``impaired`` (their composite, for joint impairment grids).
-``CHANNEL_MODELS`` is the stable builtin tuple; the registry may grow
-beyond it.
+perturbation), ``otn_flap`` (OTN protection-switch capacity dips),
+``impaired`` (their composite, for joint impairment grids) and
+``trace_replay`` (deterministic replay of a recorded per-edge impairment
+schedule — ``replay.py``). ``CHANNEL_MODELS`` is the stable builtin
+tuple; the registry may grow beyond it.
 
 See ``base.py`` for the hook contract and ``docs/channel-models.md`` for
 the authoritative reference.
@@ -27,15 +28,21 @@ from repro.netsim.channel.base import (
 from repro.netsim.channel.models import (
     FLAP_DUTY, IdealChannel, ImpairState, ImpairedChannel, scenario_key,
 )
+from repro.netsim.channel.replay import (
+    ReplayState, TraceReplayChannel, load_schedule_json, save_schedule_json,
+    schedule_from_arrays,
+)
 
 # The stable builtin tuple (tests/benchmarks/docs iterate it); the registry
 # may grow beyond it.
 CHANNEL_MODELS = ("ideal", "bernoulli_loss", "jitter", "otn_flap",
-                  "impaired")
+                  "impaired", "trace_replay")
 
 __all__ = [
     "CHANNEL_MODELS", "ChannelEffects", "ChannelInputs", "ChannelLike",
     "ChannelModel", "FLAP_DUTY", "IdealChannel", "ImpairState",
-    "ImpairedChannel", "available_channel_models", "get_channel_model",
-    "register_channel_model", "scenario_key", "unregister_channel_model",
+    "ImpairedChannel", "ReplayState", "TraceReplayChannel",
+    "available_channel_models", "get_channel_model", "load_schedule_json",
+    "register_channel_model", "save_schedule_json", "scenario_key",
+    "schedule_from_arrays", "unregister_channel_model",
 ]

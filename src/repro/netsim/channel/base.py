@@ -124,10 +124,14 @@ class ChannelModel:
 
     # -- construction-time hook (runs at trace time, not per step) ---------
     def init_channel_state(self, cfg: NetConfig, params: NetParams,
-                           num_flows: int, key: jax.Array):
+                           num_flows: int, key: jax.Array, link: int = 0):
         """Model-private pytree carried through the scan in
         ``SimState.chan`` (``None`` = stateless). ``key`` is the run's base
-        PRNG key — draw static-per-run randomness (flap phases) here."""
+        PRNG key — draw static-per-run randomness (flap phases) here.
+        ``link`` is the link-axis index this per-link state instance
+        serves (always 0 at ``num_paths == 1``; models that don't care may
+        ignore it — the engine only passes it to signatures that accept
+        it, so pre-existing models keep working unchanged)."""
         return None
 
     # -- per-step hooks ----------------------------------------------------

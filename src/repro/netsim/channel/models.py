@@ -95,7 +95,7 @@ class ImpairedChannel(ChannelModel):
         super().__init__()
 
     def init_channel_state(self, cfg: NetConfig, params: NetParams,
-                           num_flows: int, key: jax.Array):
+                           num_flows: int, key: jax.Array, link: int = 0):
         z = jnp.zeros((num_flows,), jnp.float32)
         phase = None
         if self.flap:

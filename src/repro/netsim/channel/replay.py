@@ -1,0 +1,174 @@
+"""``trace_replay`` — deterministic replay of recorded OTN telemetry.
+
+Where the stochastic models (``models.py``) *draw* impairments from traced
+knobs, ``trace_replay`` *replays* a measured per-edge impairment timeline:
+a ``[L, K, 3]`` schedule table (one row of ``(loss_frac, defer_frac,
+cap_frac)`` per edge per schedule slot) rides in as the traced
+``NetParams.chan_schedule`` leaf, and each scan step indexes its slot by
+simulated time. No PRNG anywhere — the same schedule replays the same
+realization bit-for-bit, across trace modes, schemes, and runs (pinned by
+``tests/test_trace_replay.py``).
+
+Schedule semantics per entry (all fractions of THIS step's quantities):
+
+  ``loss_frac``   in [0, 1] — fraction of the bytes leaving the pipe this
+                  step that drop (enter the engine's loss-repair path).
+  ``defer_frac``  in [0, 0.95] — fraction of the incoming fluid (this
+                  step's arrivals + previously deferred bytes) held back
+                  to later steps (delay jitter as measured).
+  ``cap_frac``    in [0, 1] — surviving fraction of the source-OTN line
+                  capacity (OTN protection-switch dips as measured).
+
+Each entry covers ``channel_schedule_dt_us`` of simulated time (``<= 0``
+= one entry per ``dt_us`` step); the schedule loops past its end, so a
+short recorded trace periodically tiles a long horizon. An entry of
+``(0, 0, 1)`` is the bit-exact pass-through (every impairment joins the
+dataflow through a ``where()`` whose clean branch returns the ORIGINAL
+tensor — the engine-wide zero-impairment identity rule), and a config
+with no schedule at all (``channel_schedule=()``) makes the whole model a
+structural pass-through.
+
+The schedule VALUES are traced — a grid over recorded traces of equal
+length K compiles once per scheme; K itself is static shape
+(``NetConfig.schedule_len``). I/O helpers at the bottom round-trip
+schedules through a plain JSON format (see ``docs/channel-models.md``).
+"""
+from __future__ import annotations
+
+import json
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import NetConfig, NetParams
+from repro.netsim.channel.base import (
+    ChannelEffects, ChannelInputs, ChannelModel, register_channel_model,
+)
+
+__all__ = [
+    "ReplayState", "TraceReplayChannel", "load_schedule_json",
+    "save_schedule_json", "schedule_from_arrays",
+]
+
+
+class ReplayState(NamedTuple):
+    """Private carry of ``TraceReplayChannel``."""
+    sched: jax.Array   # f32[K, 3] this link's (loss, defer, cap) timeline
+    defer: jax.Array   # f32[F] deferred bytes awaiting release
+
+
+@register_channel_model("trace_replay")
+class TraceReplayChannel(ChannelModel):
+    """Replay a recorded per-edge impairment schedule (module docstring)."""
+
+    is_ideal = False
+
+    def init_channel_state(self, cfg: NetConfig, params: NetParams,
+                           num_flows: int, key: jax.Array, link: int = 0):
+        # the per-link slice of the [L, K, 3] table travels in the carry
+        # so apply_impairments needs no link index of its own (at L > 1
+        # the engine vmaps this over link = 0..L-1)
+        return ReplayState(sched=jnp.asarray(params.chan_schedule)[link],
+                           defer=jnp.zeros((num_flows,), jnp.float32))
+
+    def apply_impairments(self, ctx, chan: ReplayState,
+                          inp: ChannelInputs) -> ChannelEffects:
+        k = int(chan.sched.shape[0])          # STATIC schedule length
+        if k == 0:
+            # no schedule: structurally the perfect pipe (the engine's
+            # repair machinery still exists but never sees a byte)
+            return ChannelEffects(arrivals=inp.pipe_out,
+                                  lost=jnp.zeros_like(inp.pipe_out),
+                                  cap_src=inp.cap_src, chan=chan)
+        arrivals, cap_src = inp.pipe_out, inp.cap_src
+        # schedule slot: floor(simulated time / entry duration), looping.
+        # entry duration <= 0 means one entry per dt_us step.
+        sdt = jnp.asarray(ctx.params.chan_sched_dt_us, jnp.float32)
+        entry_us = jnp.where(sdt > 0.0, sdt, jnp.float32(ctx.dt_us))
+        t_us = inp.t.astype(jnp.float32) * ctx.dt_us
+        idx = jnp.mod(jnp.floor(t_us / entry_us).astype(jnp.int32), k)
+        row = chan.sched[idx]                                   # [3]
+        loss_f = jnp.clip(row[0], 0.0, 1.0)
+        defer_f = jnp.clip(row[1], 0.0, 0.95)
+        cap_f = jnp.clip(row[2], 0.0, 1.0)
+
+        # Every impairment joins the dataflow through a where() whose
+        # clean branch returns the ORIGINAL tensor (the zero-impairment
+        # bit-identity rule shared with models.py).
+        lost = jnp.where(loss_f > 0.0, arrivals * loss_f, 0.0)
+        arrivals = jnp.where(loss_f > 0.0, arrivals - lost, arrivals)
+
+        # deferral buffer with release: previously held bytes re-enter the
+        # income; at defer_frac == 0 everything held is released in full
+        release = chan.defer
+        income = arrivals + release
+        held = jnp.where(defer_f > 0.0, income * defer_f, 0.0)
+        arrivals = jnp.where((defer_f > 0.0) | (release > 0.0),
+                             income - held, arrivals)
+
+        cap_src = jnp.where(cap_f < 1.0, cap_src * cap_f, cap_src)
+        return ChannelEffects(arrivals=arrivals, lost=lost, cap_src=cap_src,
+                              chan=ReplayState(sched=chan.sched, defer=held))
+
+    def held_bytes(self, chan: ReplayState) -> jax.Array:
+        return chan.defer
+
+
+# ---------------------------------------------------------------------------
+# Schedule I/O — plain JSON round-trip of recorded telemetry
+# ---------------------------------------------------------------------------
+
+def schedule_from_arrays(loss, defer=None, cap=None) -> tuple:
+    """Build one edge's schedule tuple from per-slot sequences.
+
+    ``loss``/``defer``/``cap`` are equal-length sequences (``None`` =
+    zeros for loss/defer, ones for cap). Returns the per-edge entry tuple
+    that slots into ``NetConfig.channel_schedule``.
+    """
+    loss = np.asarray(loss, np.float32)
+    k = loss.shape[0]
+    defer = (np.zeros(k, np.float32) if defer is None
+             else np.asarray(defer, np.float32))
+    cap = (np.ones(k, np.float32) if cap is None
+           else np.asarray(cap, np.float32))
+    if defer.shape[0] != k or cap.shape[0] != k:
+        raise ValueError(
+            f"schedule_from_arrays: loss/defer/cap lengths differ "
+            f"({k}, {defer.shape[0]}, {cap.shape[0]})")
+    return tuple((float(l), float(d), float(c))
+                 for l, d, c in zip(loss, defer, cap))
+
+
+def load_schedule_json(path) -> tuple:
+    """Load a recorded schedule file -> ``(channel_schedule, dt_us)``
+    ready for ``NetConfig`` (see ``docs/channel-models.md`` for the
+    format)."""
+    with open(path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    edges = []
+    for e in doc.get("edges", []):
+        edges.append(schedule_from_arrays(
+            e.get("loss", ()), e.get("defer"), e.get("cap")))
+    return tuple(edges), float(doc.get("dt_us", 0.0))
+
+
+def save_schedule_json(path, channel_schedule, dt_us: float = 0.0,
+                       note: Optional[str] = None) -> None:
+    """Write a ``NetConfig.channel_schedule`` tuple back to the JSON
+    format ``load_schedule_json`` reads."""
+    sched = np.asarray(channel_schedule, np.float32)
+    if sched.ndim != 3 or sched.shape[-1] != 3:
+        raise ValueError(
+            f"save_schedule_json: expected an [L, K, 3] schedule, got "
+            f"shape {sched.shape}")
+    doc = {"dt_us": float(dt_us),
+           "edges": [{"loss": e[:, 0].tolist(),
+                      "defer": e[:, 1].tolist(),
+                      "cap": e[:, 2].tolist()} for e in sched]}
+    if note:
+        doc["note"] = note
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=1)
+        fh.write("\n")

@@ -253,15 +253,32 @@ def init_state(cfg: NetConfig, num_flows: int, params: NetParams = None,
     else:
         base_key = scenario_key(
             jax.random.PRNGKey(cfg.channel_seed), params)
+        # models whose init accepts a ``link`` index (the base-class
+        # signature since the trace_replay model landed) are told which
+        # link-axis entry they serve; legacy third-party signatures
+        # without it keep working unchanged
+        import inspect
+        try:
+            takes_link = "link" in inspect.signature(
+                channel.init_channel_state).parameters
+        except (TypeError, ValueError):  # builtins/partials without sigs
+            takes_link = False
         if multi:
             # one independent impairment process per link: fold the link
             # index into the scenario key so parallel paths draw
             # decorrelated noise
             keys = jax.vmap(lambda l: jax.random.fold_in(base_key, l))(
                 jnp.arange(L))
-            chan = jax.vmap(
-                lambda k: channel.init_channel_state(cfg, params, f, key=k)
-            )(keys)
+            if takes_link:
+                chan = jax.vmap(
+                    lambda k, l: channel.init_channel_state(
+                        cfg, params, f, key=k, link=l)
+                )(keys, jnp.arange(L))
+            else:
+                chan = jax.vmap(
+                    lambda k: channel.init_channel_state(cfg, params, f,
+                                                         key=k)
+                )(keys)
         else:
             chan = channel.init_channel_state(cfg, params, f, key=base_key)
         backlog, retx_inflight = z, z
@@ -339,6 +356,12 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
     # bit-identical to the pre-topology engine.
     L = cfg.num_paths
     multi = L > 1
+    if cfg.is_multisite and not multi:
+        raise ValueError(
+            f"make_step_fn: multi-site config (num_sites={cfg.num_sites}, "
+            f"site_edges={cfg.site_edges!r}) requires num_paths > 1 — a "
+            f"site graph compiles onto the link axis (one edge per link; "
+            f"see docs/sites.md)")
     if multi:
         link_ids = jnp.arange(L)
         link_caps = params.link_cap_gbps * 1e9 / 8.0              # [L] B/s
@@ -359,6 +382,19 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
                 f"WorkloadParams.route has {route.shape[-1]} link columns "
                 f"but cfg.num_paths = {L} — give each flow a length-{L} "
                 f"route (or () for the symmetric default)")
+        if cfg.is_multisite:
+            # the endpoint matrix, compiled: mask each flow's spray row
+            # down to the edges serving its (src_site, dst_site) pair
+            # (docs/sites.md). The edge table is static; the flow
+            # endpoints are traced workload leaves, so heterogeneous
+            # meshes share one program. Gated on is_multisite so legacy
+            # single-pair configs keep the exact pre-sites jaxpr.
+            pairs = np.asarray(cfg.edge_pairs(), np.float32)       # [L, 2]
+            f_src = jnp.asarray(wl.src_site)                       # [F]
+            f_dst = jnp.asarray(wl.dst_site)                       # [F]
+            pair_mask = ((f_src[:, None] == pairs[None, :, 0]) &
+                         (f_dst[:, None] == pairs[None, :, 1]))
+            route = route * pair_mask.astype(jnp.float32)          # [F, L]
 
     is_inter = jnp.asarray(wl.is_inter)
     is_intra = 1.0 - is_inter
@@ -379,6 +415,13 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         num_links=L,
         link_caps=link_caps if multi else None,
         link_d_steps=link_d_steps if multi else None,
+        num_sites=cfg.num_sites,
+        edge_sites=(jnp.asarray(cfg.edge_pairs(), jnp.int32)
+                    if cfg.is_multisite else None),
+        flow_src_site=(jnp.asarray(wl.src_site)
+                       if cfg.is_multisite else None),
+        flow_dst_site=(jnp.asarray(wl.dst_site)
+                       if cfg.is_multisite else None),
     )
     rtt_scale = scheme.rtt_scale(ctx)
     if impaired:
@@ -767,6 +810,9 @@ def simulate(cfg: NetConfig, workload, scheme,
     wlp = workload if isinstance(workload, WorkloadParams) \
         else workload.params()
     wlp = WorkloadParams(*(jnp.asarray(v) for v in wlp))
+    if cfg.is_multisite:
+        from repro.netsim.topology import validate_site_endpoints
+        validate_site_endpoints(cfg, wlp)   # host-side: stalls fail early
     return _run_traced(cfg, wlp, scheme, steps, period_slots,
                        delay_pad, history_slots, trace_mode, decimate,
                        int(steps * WARMUP_FRAC), channel)
@@ -873,17 +919,35 @@ def simulate_batch(cfgs: Sequence[NetConfig], workload, scheme,
     delay_pad, history_slots = max(delay_pad, dp), max(history_slots, hs)
     params = stack_net_params(cfgs)
     wlp = as_workload_batch(workload, len(cfgs))
+    if tmpl.is_multisite:
+        from repro.netsim.topology import validate_site_endpoints
+        validate_site_endpoints(tmpl, wlp)  # host-side: stalls fail early
     # fresh host-backed buffers: the jitted runner donates its batch inputs
     # (harmless on CPU where donation is skipped), so caller-held device
     # arrays must never be passed through as-is
     params = NetParams(*(jnp.asarray(np.asarray(v)) for v in params))
     wlp = WorkloadParams(*(jnp.asarray(np.asarray(v)) for v in wlp))
     devs = list(devices) if devices is not None else jax.devices()
-    if len(devs) > 1 and len(cfgs) % len(devs) == 0:
+    b = len(cfgs)
+    pad = (-b) % len(devs) if len(devs) > 1 else 0
+    if pad:
+        # pad-and-shard: replicate the last scenario until the device
+        # count divides the batch, run sharded, then strip the padded
+        # rows from every output leaf — a ragged batch no longer falls
+        # back silently to a single-device launch
+        def rep(x):
+            return jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)],
+                                   axis=0)
+        params = jax.tree.map(rep, params)
+        wlp = jax.tree.map(rep, wlp)
+    if len(devs) > 1:
         params, wlp = shard_scenario_axis(params, wlp, devs)
-    return _run_traced_batch(tmpl, params, wlp, scheme, steps,
-                             period_slots, delay_pad, history_slots,
-                             trace_mode, decimate, warm, channel)
+    out = _run_traced_batch(tmpl, params, wlp, scheme, steps,
+                            period_slots, delay_pad, history_slots,
+                            trace_mode, decimate, warm, channel)
+    if pad:
+        out = jax.tree.map(lambda x: x[:b], out)
+    return out
 
 
 def _run_traced_batch_impl(cfg, params, wlp, scheme, steps, period_slots,

@@ -229,7 +229,8 @@ class _Launch:
 
 def chunk_cells(steps: int, trace_mode: str = "full", decimate: int = 1,
                 chunk_cells: Optional[int] = None,
-                n_devices: int = 1, num_links: int = 1) -> int:
+                n_devices: int = 1, num_links: int = 1,
+                schedule_floats: int = 0) -> int:
     """Scenario cells per device launch of a sweep's plan.
 
     Returns the explicit ``chunk_cells`` override when given, else the
@@ -240,28 +241,56 @@ def chunk_cells(steps: int, trace_mode: str = "full", decimate: int = 1,
     float estimate grows with L and the chunk shrinks accordingly; in
     ``metrics`` mode the launch is O(B) anyway and the flat
     ``METRICS_CHUNK_CELLS`` ceiling only caps per-launch compile/host-row
-    cost. The result is rounded up to a multiple of ``n_devices`` so
-    chunked grids still shard the scenario axis evenly. (Not clamped to
-    the grid size — ``_plan_launches`` caps the final chunk at the cell
-    count and pads the trailing chunk so every launch shares one compiled
-    program.)
+    cost. ``schedule_floats`` is the per-cell resident footprint of a
+    ``trace_replay`` schedule table (``num_paths * schedule_len * 3``
+    f32 values — the stacked ``chan_schedule`` leaf rides along with
+    every launch), folded into the per-cell budget in every mode so a
+    long recorded trace shrinks the chunk instead of blowing the launch
+    past the memory target. The result is rounded up to a multiple of
+    ``n_devices`` so chunked grids still shard the scenario axis evenly.
+    (Not clamped to the grid size — ``_plan_launches`` caps the final
+    chunk at the cell count and pads the trailing chunk so every launch
+    shares one compiled program.)
     """
     if chunk_cells is None:
         if trace_mode == "metrics":
             chunk_cells = METRICS_CHUNK_CELLS
+            if schedule_floats > 0:
+                chunk_cells = min(
+                    chunk_cells,
+                    max(MAX_TRACE_FLOATS // schedule_floats, 1))
         else:
             t = max(steps // max(decimate, 1), 1)
             # q_dst_link / link_tx / link_pause are [L] per step at L>1
             keys = _TRACE_KEYS_EST + (3 * num_links if num_links > 1 else 0)
-            chunk_cells = max(MAX_TRACE_FLOATS // (t * keys), 1)
+            chunk_cells = max(
+                MAX_TRACE_FLOATS // (t * keys + max(schedule_floats, 0)), 1)
     chunk_cells = max(int(chunk_cells), 1)
     if n_devices > 1:
         chunk_cells = -(-chunk_cells // n_devices) * n_devices
     return chunk_cells
 
 
-# historical private name (pre-PR 4); the launch planner below uses it
-_chunk_cells = chunk_cells
+# non-deprecated private alias: inside run_experiment_batch / sweep_grid the
+# ``chunk_cells`` KEYWORD shadows the module-level function
+_auto_chunk_cells = chunk_cells
+
+
+def _sched_floats(cfg: NetConfig) -> int:
+    """Per-cell f32 footprint of the cfg's channel-schedule table."""
+    return cfg.num_paths * cfg.schedule_len * 3
+
+
+def __getattr__(name: str):
+    if name == "_chunk_cells":
+        warnings.warn(
+            "repro.netsim.runner._chunk_cells is deprecated (it was a "
+            "pre-PR 4 private alias) and will be removed in a future PR; "
+            "use runner.chunk_cells instead",
+            DeprecationWarning, stacklevel=2)
+        return chunk_cells
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")
 
 
 def _plan_launches(n_cells: int, schemes: Sequence, chunk: int,
@@ -400,8 +429,9 @@ def run_experiment_batch(cfgs: Sequence[NetConfig], workload, scheme,
     wlp = as_workload_batch(workload, len(cfgs))
     grid_static = _grid_static(cfgs, horizon_us, delay_pad, history_slots)
     n_dev = len(devices) if devices is not None else len(jax.devices())
-    chunk = _chunk_cells(grid_static[1], trace_mode, decimate,
-                         chunk_cells, n_dev, cfgs[0].num_paths)
+    chunk = _auto_chunk_cells(grid_static[1], trace_mode, decimate,
+                              chunk_cells, n_dev, cfgs[0].num_paths,
+                              _sched_floats(cfgs[0]))
     plan = _plan_launches(len(cfgs), (scheme,), chunk, n_dev)
     return _execute_plan(plan, cfgs, wlp, grid_static, period_slots,
                          trace_mode, decimate, devices,
@@ -495,8 +525,9 @@ def sweep_grid(scenarios, workload=None, schemes=(),
     wlp = as_workload_batch(wl, len(cfgs))
     grid_static = _grid_static(cfgs, horizon_us, 0, 0)
     n_dev = len(devices) if devices is not None else len(jax.devices())
-    chunk = _chunk_cells(grid_static[1], trace_mode, decimate,
-                         chunk_cells, n_dev, cfgs[0].num_paths)
+    chunk = _auto_chunk_cells(grid_static[1], trace_mode, decimate,
+                              chunk_cells, n_dev, cfgs[0].num_paths,
+                              _sched_floats(cfgs[0]))
     plan = _plan_launches(len(cfgs), scheme_objs, chunk, n_dev)
     by_scheme = _execute_plan(plan, cfgs, wlp, grid_static, period_slots,
                               trace_mode, decimate, devices,

@@ -96,6 +96,13 @@ class SchemeCtx(NamedTuple):
     num_links: int = 1           # static L
     link_caps: Optional[jax.Array] = None      # f32[L] per-link bytes/s
     link_d_steps: Optional[jax.Array] = None   # i32[L] per-link delay steps
+    # multi-site graph views (cfg.is_multisite only; None on legacy
+    # single-pair configs — docs/sites.md):
+    num_sites: int = 2           # static site count N
+    edge_sites: Optional[jax.Array] = None     # i32[L, 2] per-link
+                                               # (src_site, dst_site) pair
+    flow_src_site: Optional[jax.Array] = None  # f32[F] flow source site
+    flow_dst_site: Optional[jax.Array] = None  # f32[F] flow dest site
 
 
 class SchemeSignals(NamedTuple):

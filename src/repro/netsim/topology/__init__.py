@@ -1,0 +1,17 @@
+"""Multi-site topology subsystem (``docs/sites.md``).
+
+``SiteGraph`` + ``SiteEdge`` declare an N-site mesh; ``compile_site_graph``
+lowers it onto the traced ``[L]`` link axis of ``docs/topology.md``;
+``validate_site_endpoints`` is the host-side pre-flight the simulate
+entry points run on multi-site configs.
+"""
+from repro.netsim.topology.graph import (SiteEdge, SiteGraph,
+                                         compile_site_graph,
+                                         validate_site_endpoints)
+
+__all__ = [
+    "SiteEdge",
+    "SiteGraph",
+    "compile_site_graph",
+    "validate_site_endpoints",
+]

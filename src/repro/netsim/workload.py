@@ -46,6 +46,13 @@ class FlowSpec:
     # every link); a length-L tuple steers this flow's spray proportions.
     # Intra-DC flows never reach the long haul, so their row is unused.
     route: tuple = ()
+    # endpoint sites on the cfg site graph (docs/sites.md). An inter-DC
+    # flow only sprays onto links whose (src_site, dst_site) edge matches
+    # its endpoints; the defaults name the legacy 0 -> 1 pair, so
+    # single-pair workloads need not mention sites at all. Intra-DC flows
+    # contend at dst_site's leaf; their src_site is unused.
+    src_site: int = 0
+    dst_site: int = 1
 
     @property
     def window(self) -> float:
@@ -71,6 +78,8 @@ class WorkloadParams(NamedTuple):
     route: np.ndarray            # f32[..., F, L] — per-flow x per-link spray
                                  # weights (width 1 = the symmetric default,
                                  # broadcast to cfg.num_paths by the engine)
+    src_site: np.ndarray         # f32 — source site index (docs/sites.md)
+    dst_site: np.ndarray         # f32 — destination site index
 
     @classmethod
     def of(cls, workload: "Workload", pad_to: int = 0,
@@ -109,6 +118,8 @@ class WorkloadParams(NamedTuple):
             duty=_p(a["duty"]),
             active_mask=_p(np.ones((f,), np.float32)),
             route=route,
+            src_site=_p(a["src_site"]),
+            dst_site=_p(a["dst_site"]),
         )
 
     @property
@@ -184,6 +195,8 @@ class Workload:
             "start_us": np.array([x.start_us for x in f], np.float32),
             "period_us": np.array([x.period_us for x in f], np.float32),
             "duty": np.array([x.duty for x in f], np.float32),
+            "src_site": np.array([x.src_site for x in f], np.float32),
+            "dst_site": np.array([x.dst_site for x in f], np.float32),
         }
 
     def params(self, pad_to: int = 0) -> WorkloadParams:

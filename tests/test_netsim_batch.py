@@ -109,7 +109,9 @@ def test_stack_net_params_shapes():
     cfgs = [NetConfig(distance_km=d) for d in DISTS]
     stacked = stack_net_params(cfgs)
     for name, leaf in zip(NetParams._fields, stacked):
-        if name.startswith("link_"):
+        if name == "chan_schedule":
+            assert leaf.shape == (len(DISTS), 1, 0, 3)  # [B, L, K=0, 3]
+        elif name.startswith("link_"):
             assert leaf.shape == (len(DISTS), 1)  # [B, L] at L=1
         else:
             assert leaf.shape == (len(DISTS),)

@@ -1,0 +1,293 @@
+"""Multi-site topology subsystem (PR 7): SiteGraph/SiteEdge compilation
+onto the link axis, the per-flow endpoint matrix, endpoint validation,
+the two-site bit-identity guarantee, heterogeneous-endpoint batching,
+and the launch-plan satellites (simulate_batch pad-and-shard, the
+schedule-aware ``chunk_cells``, the ``_chunk_cells`` deprecation shim).
+
+The goldens (tests/test_scheme_api.py) pin the default two-site world;
+this file covers what is NEW on top of it."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.config.base import NetConfig
+from repro.netsim import (
+    SiteEdge, SiteGraph, compile_site_graph, fluid, get_scheme,
+    run_experiment_batch, simulate, simulate_batch, throughput_workload,
+)
+from repro.netsim.topology import validate_site_endpoints
+from repro.netsim.workload import FlowSpec, Workload
+
+HORIZON = 8_000.0
+WL = throughput_workload(msg_size=1 << 20, concurrency=16, num_flows=4)
+
+# The 3-site relay mesh the --sites-grid benchmark sweeps: a direct pair
+# of 0->1 links plus a thin two-hop detour through relay site 2.
+MESH = SiteGraph(num_sites=3, edges=(
+    SiteEdge(0, 1),
+    SiteEdge(0, 1, delay_scale=1.5),
+    SiteEdge(0, 2, cap_frac=0.2),
+    SiteEdge(2, 1, cap_frac=0.2),
+))
+
+
+def _mesh_cfg(**kw):
+    base = NetConfig(distance_km=100.0, horizon_us=HORIZON, **kw)
+    return MESH.to_net_config(base)
+
+
+def _wl(*pairs, intra=0):
+    flows = [FlowSpec(True, 1 << 20, 16, src_site=s, dst_site=d)
+             for s, d in pairs]
+    flows += [FlowSpec(False, 1 << 20, 16) for _ in range(intra)]
+    return Workload(tuple(flows))
+
+
+# ---------------------------------------------------------------------------
+# Graph construction and validation
+# ---------------------------------------------------------------------------
+
+def test_site_graph_validation():
+    with pytest.raises(ValueError, match="num_sites"):
+        SiteGraph(num_sites=1, edges=(SiteEdge(0, 1),))
+    with pytest.raises(ValueError, match="at least one edge"):
+        SiteGraph(num_sites=3, edges=())
+    with pytest.raises(ValueError, match="self-edge"):
+        SiteGraph(num_sites=3, edges=(SiteEdge(1, 1),))
+    with pytest.raises(ValueError, match="outside"):
+        SiteGraph(num_sites=2, edges=(SiteEdge(0, 2),))
+    with pytest.raises(TypeError, match="SiteEdge"):
+        SiteGraph(num_sites=2, edges=((0, 1),))
+
+
+def test_net_config_site_edges_validation():
+    with pytest.raises(ValueError, match="num_sites"):
+        NetConfig(num_sites=1).edge_pairs()
+    with pytest.raises(ValueError, match="site_edges"):
+        NetConfig(num_paths=2, site_edges=((0, 1),)).edge_pairs()
+    with pytest.raises(ValueError, match="self-edge"):
+        NetConfig(site_edges=((0, 0),)).edge_pairs()
+    with pytest.raises(ValueError, match="outside"):
+        NetConfig(num_sites=3, site_edges=((0, 3),)).edge_pairs()
+    # defaults: every link implicitly serves the 0 -> 1 pair
+    assert NetConfig(num_paths=3).edge_pairs() == ((0, 1),) * 3
+    assert not NetConfig(num_paths=3).is_multisite
+    assert NetConfig(num_sites=3, num_paths=1,
+                     site_edges=((0, 2),)).is_multisite
+
+
+def test_compile_site_graph_lowers_edges_onto_links():
+    cfg = _mesh_cfg()
+    assert cfg.num_paths == MESH.num_edges == 4
+    assert cfg.num_sites == 3
+    assert cfg.site_edges == ((0, 1), (0, 1), (0, 2), (2, 1))
+    assert cfg.edge_pairs() == cfg.site_edges
+    assert cfg.is_multisite
+    assert cfg.path_delay_scale == (1.0, 1.5, 1.0, 1.0)
+    # named edges take 0.2 + 0.2; the two unnamed split the remaining 0.6
+    np.testing.assert_allclose(cfg.path_cap_frac, (0.3, 0.3, 0.2, 0.2))
+    assert compile_site_graph(MESH, NetConfig()) == MESH.to_net_config(
+        NetConfig())
+    assert MESH.edges_between(0, 1) == (0, 1)
+    assert MESH.edges_between(2, 1) == (3,)
+    assert MESH.edges_between(1, 0) == ()
+
+
+# ---------------------------------------------------------------------------
+# Two-site invisibility: explicit (0, 1) edges emit the same program
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ("dcqcn", "matchrdma", "rdmacell"))
+def test_two_site_edges_bit_identical_to_plain_links(scheme):
+    """num_sites=2 with every edge spelled out as (0, 1) must reproduce
+    the plain multi-link run bit-for-bit: the endpoint mask is all-ones
+    and multiplies the route matrix by exactly 1.0."""
+    kw = dict(distance_km=100.0, horizon_us=HORIZON, num_paths=3,
+              path_delay_scale=(1.0, 1.5, 2.0),
+              path_cap_frac=(0.5, 0.3, 0.2))
+    plain = NetConfig(**kw)
+    sited = NetConfig(site_edges=((0, 1),) * 3, **kw)
+    f_a, tr_a = simulate(plain, WL, get_scheme(scheme), HORIZON)
+    f_b, tr_b = simulate(sited, WL, get_scheme(scheme), HORIZON)
+    assert set(tr_a) == set(tr_b)
+    for k in tr_a:
+        np.testing.assert_array_equal(np.asarray(tr_a[k]),
+                                      np.asarray(tr_b[k]), err_msg=k)
+    np.testing.assert_array_equal(np.asarray(f_a.delivered),
+                                  np.asarray(f_b.delivered))
+
+
+# ---------------------------------------------------------------------------
+# Endpoint matrix semantics
+# ---------------------------------------------------------------------------
+
+def test_endpoint_matrix_masks_flows_onto_matching_edges():
+    """Flows spray only over the links whose edge serves their site pair:
+    a relay-only workload leaves the direct links dark and vice versa."""
+    _, tr_relay = simulate(_mesh_cfg(), _wl((0, 2), (2, 1)),
+                           get_scheme("dcqcn"), HORIZON)
+    link_tx = np.asarray(tr_relay["link_tx"])
+    assert float(link_tx[:, :2].max()) == 0.0   # direct 0->1 links dark
+    assert float(link_tx[:, 2].sum()) > 0.0
+    assert float(link_tx[:, 3].sum()) > 0.0
+    _, tr_direct = simulate(_mesh_cfg(), _wl((0, 1), (0, 1)),
+                            get_scheme("dcqcn"), HORIZON)
+    link_tx = np.asarray(tr_direct["link_tx"])
+    assert float(link_tx[:, 2:].max()) == 0.0   # relay legs dark
+    assert float(link_tx[:, :2].sum()) > 0.0
+
+
+def test_route_weights_bias_within_edge_set():
+    """Explicit route weights still bias the split WITHIN a flow's edge
+    set: weighting the slow 0->1 link to zero keeps everything on the
+    fast one, never leaking onto relay edges."""
+    wl = Workload(tuple(
+        FlowSpec(True, 1 << 20, 16, route=(1.0, 0.0, 1.0, 1.0),
+                 src_site=0, dst_site=1) for _ in range(4)))
+    _, traces = simulate(_mesh_cfg(), wl, get_scheme("dcqcn"), HORIZON)
+    link_tx = np.asarray(traces["link_tx"])
+    assert float(link_tx[:, 0].sum()) > 0.0
+    assert float(link_tx[:, 1:].max()) == 0.0
+
+
+def test_multisite_conserves_and_completes():
+    final, traces = simulate(_mesh_cfg(), _wl((0, 1), (0, 1), (0, 2), (2, 1),
+                                              intra=2),
+                             get_scheme("matchrdma"), HORIZON)
+    assert float(np.max(np.asarray(traces["cons_err"]))) < 1e-3
+    assert float(np.sum(np.asarray(final.delivered))) > 0
+
+
+def test_unreachable_endpoints_raise():
+    wl = _wl((1, 0))   # no edge serves 1 -> 0 in the mesh
+    with pytest.raises(ValueError, match=r"1 -> 0"):
+        simulate(_mesh_cfg(), wl, get_scheme("dcqcn"), HORIZON)
+    with pytest.raises(ValueError, match="match no edge"):
+        simulate_batch([_mesh_cfg()], wl, get_scheme("dcqcn"), HORIZON)
+    # the host-side checker is reachable directly too
+    from repro.netsim.workload import WorkloadParams
+    validate_site_endpoints(_mesh_cfg(), WorkloadParams.of(_wl((0, 2))))
+
+
+def test_multisite_requires_link_axis():
+    cfg = NetConfig(num_sites=3, num_paths=1, site_edges=((0, 2),))
+    with pytest.raises(ValueError, match="num_paths"):
+        simulate(cfg, _wl((0, 2)), get_scheme("dcqcn"), HORIZON)
+
+
+# ---------------------------------------------------------------------------
+# Batching: heterogeneous endpoints in one compiled program
+# ---------------------------------------------------------------------------
+
+def test_heterogeneous_endpoint_batch_single_compile():
+    """src/dst sites are traced WorkloadParams leaves: scenarios whose
+    flows talk to different sites vmap into ONE compiled program, and
+    each cell's traffic lands on its own edge set."""
+    cfgs = [_mesh_cfg(), _mesh_cfg()]
+    wls = [_wl((0, 1), (0, 1)), _wl((0, 2), (2, 1))]
+    n0 = fluid._run_traced_batch._cache_size()
+    _, traces = simulate_batch(cfgs, wls, get_scheme("dcqcn"), HORIZON)
+    assert fluid._run_traced_batch._cache_size() - n0 <= 1, \
+        "endpoint variation recompiled per cell — endpoints are not traced"
+    link_tx = np.asarray(traces["link_tx"])   # [B, T, L]
+    assert float(link_tx[0, :, 2:].max()) == 0.0
+    assert float(link_tx[0, :, :2].sum()) > 0.0
+    assert float(link_tx[1, :, :2].max()) == 0.0
+    assert float(link_tx[1, :, 2:].sum()) > 0.0
+
+
+def test_mixed_num_sites_batch_rejected():
+    cfgs = [_mesh_cfg(),
+            SiteGraph(num_sites=4, edges=MESH.edges).to_net_config(
+                NetConfig(distance_km=100.0, horizon_us=HORIZON))]
+    with pytest.raises(ValueError, match="num_sites"):
+        simulate_batch(cfgs, _wl((0, 1)), get_scheme("dcqcn"), HORIZON)
+
+
+def test_sites_streaming_rows_finite():
+    rows = run_experiment_batch(
+        [_mesh_cfg()], _wl((0, 1), (0, 2), (2, 1), intra=1),
+        "matchrdma", HORIZON, trace_mode="metrics")
+    (row,) = rows
+    assert np.isfinite(row["throughput_gbps"])
+    assert row["throughput_gbps"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: simulate_batch pads ragged batches onto the device grid
+# ---------------------------------------------------------------------------
+
+_SUBPROC_PAD = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    sys.path.insert(0, "src")
+    import numpy as np
+    import jax
+    from repro.config.base import NetConfig
+    from repro.netsim import get_scheme, simulate_batch, throughput_workload
+    assert len(jax.devices()) == 4
+    wl = throughput_workload(1 << 20, 16, num_flows=4)
+    # 3 scenarios on 4 devices: simulate_batch used to silently fall back
+    # to a single-device launch when the device count did not divide the
+    # batch — now it pads with a replica of the last cell, shards, and
+    # strips the pad from every output leaf
+    cfgs = [NetConfig(distance_km=d, horizon_us=6_000.0)
+            for d in (50.0, 100.0, 200.0)]
+    f4, tr4 = simulate_batch(cfgs, wl, get_scheme("dcqcn"), 6_000.0)
+    f1, tr1 = simulate_batch(cfgs, wl, get_scheme("dcqcn"), 6_000.0,
+                             devices=jax.devices()[:1])
+    assert np.asarray(f4.delivered).shape[0] == 3
+    for k in tr4:
+        a, b = np.asarray(tr4[k]), np.asarray(tr1[k])
+        assert a.shape == b.shape, (k, a.shape, b.shape)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-3, err_msg=k)
+    np.testing.assert_allclose(np.asarray(f4.delivered),
+                               np.asarray(f1.delivered), rtol=1e-5)
+    print("SIM_BATCH_PAD_OK")
+""")
+
+
+def test_simulate_batch_pads_ragged_batch_onto_devices():
+    """Satellite pin: a 3-cell simulate_batch on 4 forced host devices
+    shards (pad-and-strip) and matches the single-device run."""
+    r = subprocess.run([sys.executable, "-c", _SUBPROC_PAD],
+                       capture_output=True, text=True, cwd=".", timeout=600)
+    assert "SIM_BATCH_PAD_OK" in r.stdout, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# Satellite: launch-plan sizing knows about schedule tables; the old
+# private alias warns
+# ---------------------------------------------------------------------------
+
+def test_chunk_cells_accounts_for_schedule_floats():
+    from repro.netsim import runner
+    t = 100_000
+    base = runner.chunk_cells(t, "full")
+    # a fat [L, K, 3] schedule rides per cell -> smaller chunks
+    sched = 4 * 50_000 * 3
+    small = runner.chunk_cells(t, "full", schedule_floats=sched)
+    assert small < base
+    assert small * (t * runner._TRACE_KEYS_EST + sched) \
+        <= runner.MAX_TRACE_FLOATS
+    # metrics mode is normally width-agnostic, but a schedule big enough
+    # to dominate memory still caps the chunk
+    assert runner.chunk_cells(t, "metrics") == runner.METRICS_CHUNK_CELLS
+    huge = 4 * 1_000_000 * 3
+    capped = runner.chunk_cells(t, "metrics", schedule_floats=huge)
+    assert capped < runner.METRICS_CHUNK_CELLS
+    assert capped * huge <= runner.MAX_TRACE_FLOATS
+    # zero/negative schedule footprints are inert
+    assert runner.chunk_cells(t, "full", schedule_floats=0) == base
+
+
+def test_chunk_cells_deprecated_alias_warns():
+    from repro.netsim import runner
+    with pytest.warns(DeprecationWarning, match="_chunk_cells"):
+        fn = runner._chunk_cells
+    assert fn is runner.chunk_cells
+    with pytest.raises(AttributeError):
+        runner.no_such_attribute_here

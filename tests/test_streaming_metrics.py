@@ -186,12 +186,12 @@ def test_auto_chunk_bounds_full_mode_traces():
     under the MAX_TRACE_FLOATS budget, and streaming launches use the flat
     cell ceiling (rounded up to a device multiple)."""
     t = 100_000
-    chunk = runner._chunk_cells(t, "full", 1, None, 1)
+    chunk = runner.chunk_cells(t, "full", 1, None, 1)
     assert chunk * t * runner._TRACE_KEYS_EST <= runner.MAX_TRACE_FLOATS
     assert chunk >= 1
-    assert runner._chunk_cells(t, "metrics", 1, None, 1) \
+    assert runner.chunk_cells(t, "metrics", 1, None, 1) \
         == runner.METRICS_CHUNK_CELLS
-    assert runner._chunk_cells(t, "metrics", 1, 30, 4) == 32
+    assert runner.chunk_cells(t, "metrics", 1, 30, 4) == 32
 
 
 _SUBPROC_SHARDED = textwrap.dedent("""

@@ -124,7 +124,12 @@ def test_stacked_link_leaves_shape():
     cfgs = [_cfg3(), _cfg3(distance_km=300.0)]
     stacked = stack_net_params(cfgs)
     for name, leaf in zip(NetParams._fields, stacked):
-        expect = (2, 3) if name.startswith("link_") else (2,)
+        if name == "chan_schedule":
+            expect = (2, 3, 0, 3)   # [B, L, K=0, 3] — no schedule set
+        elif name.startswith("link_"):
+            expect = (2, 3)
+        else:
+            expect = (2,)
         assert leaf.shape == expect, (name, leaf.shape)
 
 

@@ -1,0 +1,316 @@
+"""The ``trace_replay`` channel model (PR 7): deterministic replay of a
+recorded per-edge impairment schedule. Pins (a) bit-exact determinism —
+the same schedule reproduces the same realization; (b) the schedule
+actually biting where recorded (loss window timing, capacity dips,
+deferral conservation); (c) the no-schedule and all-neutral-slot
+structural identities; (d) cross-mode channel-column parity (satellite);
+(e) the schedule riding as a traced leaf (single compile, batch shape
+validation) and the JSON round-trip helpers."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.config.base import NetConfig, stack_net_params
+from repro.netsim import (
+    fluid, get_channel_model, get_scheme, run_experiment_batch, simulate,
+    simulate_batch, throughput_workload,
+)
+from repro.netsim.channel import (
+    load_schedule_json, save_schedule_json, schedule_from_arrays,
+)
+from repro.netsim.schemes import ALL_SCHEMES
+from repro.netsim.workload import congestion_workload, mixed_fct_workload
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "netsim_scheme_traces.npz")
+WL = throughput_workload(msg_size=1 << 20, concurrency=16, num_flows=4)
+HORIZON = 8_000.0
+K = 8
+SLOT_US = HORIZON / K
+
+
+def _cfg(timeline, **kw):
+    """One link driven by an explicit K-slot schedule (one slot per
+    HORIZON/K µs, so the whole recording plays exactly once)."""
+    return NetConfig(distance_km=100.0, horizon_us=HORIZON,
+                     channel_schedule=(timeline,),
+                     channel_schedule_dt_us=SLOT_US, **kw)
+
+
+def _timeline(loss=(), defer=(), cap=()):
+    l = np.zeros(K, np.float32)
+    d = np.zeros(K, np.float32)
+    c = np.ones(K, np.float32)
+    for i, v in loss:
+        l[i] = v
+    for i, v in defer:
+        d[i] = v
+    for i, v in cap:
+        c[i] = v
+    return schedule_from_arrays(l, d, c)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return np.load(GOLDEN)
+
+
+# ---------------------------------------------------------------------------
+# Determinism: no PRNG anywhere in the model
+# ---------------------------------------------------------------------------
+
+def test_replay_is_bit_deterministic():
+    cfg = _cfg(_timeline(loss=[(2, 0.3)], defer=[(4, 0.4)],
+                         cap=[(5, 0.5)]))
+    f_a, tr_a = simulate(cfg, WL, get_scheme("matchrdma"), HORIZON,
+                         channel="trace_replay")
+    f_b, tr_b = simulate(cfg, WL, get_scheme("matchrdma"), HORIZON,
+                         channel="trace_replay")
+    assert set(tr_a) == set(tr_b)
+    for k in tr_a:
+        np.testing.assert_array_equal(np.asarray(tr_a[k]),
+                                      np.asarray(tr_b[k]), err_msg=k)
+    np.testing.assert_array_equal(np.asarray(f_a.delivered),
+                                  np.asarray(f_b.delivered))
+
+
+# ---------------------------------------------------------------------------
+# The schedule bites where recorded
+# ---------------------------------------------------------------------------
+
+def test_replay_reproduces_loss_window():
+    """Loss recorded only in slot 2 must drop bytes only inside slot 2's
+    simulated-time window — replay is time-indexed, not sampled."""
+    cfg = _cfg(_timeline(loss=[(2, 0.25)]))
+    _, traces = simulate(cfg, WL, get_scheme("dcqcn"), HORIZON,
+                         channel="trace_replay")
+    lost = np.asarray(traces["chan_lost"])             # [T] bytes/step
+    steps_per_slot = int(round(SLOT_US / cfg.dt_us))
+    in_window = lost[2 * steps_per_slot:3 * steps_per_slot]
+    outside = np.concatenate([lost[:2 * steps_per_slot],
+                              lost[3 * steps_per_slot:]])
+    assert float(in_window.sum()) > 0.0
+    assert float(outside.sum()) == 0.0
+    assert float(np.max(np.asarray(traces["cons_err"]))) < 1e-3
+
+
+def test_replay_cap_dip_throttles_wire():
+    """A recorded 60% capacity dip must show as lower wire throughput
+    inside the dip window than in the clean run's same window (the OTN
+    line is the path bottleneck here, as in the otn_flap physics test)."""
+    wl = throughput_workload(4 << 20, 8, num_flows=4)
+    dip = _cfg(_timeline(cap=[(3, 0.4), (4, 0.4)]), num_otn_links=4)
+    clean = _cfg(_timeline(), num_otn_links=4)
+    _, tr_dip = simulate(dip, wl, get_scheme("dcqcn"), HORIZON,
+                         channel="trace_replay")
+    _, tr_clean = simulate(clean, wl, get_scheme("dcqcn"), HORIZON,
+                           channel="trace_replay")
+    steps_per_slot = int(round(SLOT_US / dip.dt_us))
+    sl = slice(3 * steps_per_slot, 5 * steps_per_slot)
+    wire_dip = float(np.asarray(tr_dip["chan_wire"])[sl].sum())
+    wire_clean = float(np.asarray(tr_clean["chan_wire"])[sl].sum())
+    assert wire_dip < 0.7 * wire_clean, (wire_dip, wire_clean)
+
+
+def test_replay_defer_conserves_and_completes():
+    """Recorded deferral (delay jitter) holds fluid without destroying
+    it: conservation includes the deferral buffer and a finite workload
+    still completes."""
+    wl = mixed_fct_workload(msg_size=256 << 10, num_inter=4, num_intra=2,
+                            num_background=2, request_start_us=2_000.0)
+    cfg = NetConfig(distance_km=50.0, horizon_us=20_000.0,
+                    channel_schedule=(
+                        _timeline(defer=[(i, 0.5) for i in range(2, 6)]),),
+                    channel_schedule_dt_us=20_000.0 / K)
+    _, traces = simulate(cfg, wl, get_scheme("dcqcn"), 20_000.0,
+                         channel="trace_replay")
+    assert float(np.asarray(traces["cons_err"]).max()) < 1e-4
+    r = run_experiment_batch([cfg], wl, "dcqcn", 20_000.0,
+                             trace_mode="metrics",
+                             channel="trace_replay")[0]
+    assert r["completion_frac"] == 1.0
+
+
+def test_replay_per_edge_schedules_are_independent():
+    """At L=2 each link replays its OWN row of the [L, K, 3] table: flows
+    routed onto the clean link lose nothing, flows routed onto the lossy
+    link lose bytes."""
+    from repro.netsim.workload import FlowSpec, Workload
+    lossy = _timeline(loss=[(i, 0.2) for i in range(K)])
+    clean = _timeline()
+    kw = dict(distance_km=100.0, horizon_us=HORIZON, num_paths=2,
+              channel_schedule=(lossy, clean),
+              channel_schedule_dt_us=SLOT_US)
+    wl_clean = Workload(tuple(FlowSpec(True, 1 << 20, 16, route=(0.0, 1.0))
+                              for _ in range(4)))
+    wl_lossy = Workload(tuple(FlowSpec(True, 1 << 20, 16, route=(1.0, 0.0))
+                              for _ in range(4)))
+    _, tr_c = simulate(NetConfig(**kw), wl_clean, get_scheme("dcqcn"),
+                       HORIZON, channel="trace_replay")
+    _, tr_l = simulate(NetConfig(**kw), wl_lossy, get_scheme("dcqcn"),
+                       HORIZON, channel="trace_replay")
+    assert float(np.asarray(tr_c["chan_lost"]).sum()) == 0.0
+    assert float(np.asarray(tr_l["chan_lost"]).sum()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Structural identities
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_no_schedule_identity_vs_goldens(golden, scheme):
+    """trace_replay with NO schedule is a structural pass-through: every
+    golden trace key stays bit-identical (the channel machinery exists
+    but never touches a byte)."""
+    cfg = NetConfig(distance_km=100.0)
+    wl = congestion_workload(num_inter=4, num_intra=4,
+                             burst_start_us=3_000.0, burst_len_us=4_000.0,
+                             horizon_us=10_000.0)
+    final, traces = simulate(cfg, wl, get_scheme(scheme), 10_000.0,
+                             channel="trace_replay")
+    golden_keys = {k.rsplit("/", 1)[1] for k in golden.files
+                   if k.startswith(f"seq/{scheme}/traces/")}
+    assert golden_keys <= set(traces)
+    for k in golden_keys:
+        np.testing.assert_array_equal(
+            golden[f"seq/{scheme}/traces/{k}"], np.asarray(traces[k]),
+            err_msg=f"{scheme}/{k} diverged bit-for-bit under "
+                    f"trace_replay with no schedule")
+    for k in ("sent", "acked", "delivered", "done_at_us"):
+        np.testing.assert_array_equal(
+            golden[f"seq/{scheme}/final/{k}"],
+            np.asarray(getattr(final, k)),
+            err_msg=f"{scheme} final.{k} diverged")
+
+
+def test_neutral_slots_bit_identical_to_no_schedule():
+    """An all-(0, 0, 1) schedule must produce the same bits as no
+    schedule at all: every impairment joins the dataflow through a
+    where() whose clean branch returns the original tensor."""
+    neutral = _cfg(_timeline())
+    empty = NetConfig(distance_km=100.0, horizon_us=HORIZON)
+    _, tr_n = simulate(neutral, WL, get_scheme("matchrdma"), HORIZON,
+                       channel="trace_replay")
+    _, tr_e = simulate(empty, WL, get_scheme("matchrdma"), HORIZON,
+                       channel="trace_replay")
+    assert set(tr_n) == set(tr_e)
+    for k in tr_n:
+        np.testing.assert_array_equal(np.asarray(tr_n[k]),
+                                      np.asarray(tr_e[k]), err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Cross-mode parity (satellite): replay is trace-mode agnostic
+# ---------------------------------------------------------------------------
+
+def test_channel_columns_cross_mode_parity():
+    """goodput/wire/retx_frac agree across full, decimate and metrics
+    modes under a replayed schedule; the histogram-inverted p99 is
+    bin-ratio bounded."""
+    cwl = congestion_workload(num_inter=4, num_intra=4,
+                              burst_start_us=3_000.0,
+                              burst_len_us=4_000.0, horizon_us=12_000.0)
+    tl = _timeline(loss=[(2, 0.1), (5, 0.05)], defer=[(3, 0.3)],
+                   cap=[(6, 0.6)])
+    cfgs = [NetConfig(distance_km=d, horizon_us=12_000.0,
+                      channel_schedule=(tl,),
+                      channel_schedule_dt_us=12_000.0 / K)
+            for d in (50.0, 300.0)]
+    full = run_experiment_batch(cfgs, cwl, "sdr_rdma", 12_000.0,
+                                channel="trace_replay")
+    dec = run_experiment_batch(cfgs, cwl, "sdr_rdma", 12_000.0,
+                               trace_mode="decimate", decimate=8,
+                               channel="trace_replay")
+    stream = run_experiment_batch(cfgs, cwl, "sdr_rdma", 12_000.0,
+                                  trace_mode="metrics",
+                                  channel="trace_replay")
+    for f, d, s in zip(full, dec, stream):
+        for m in ("goodput_gbps", "wire_gbps", "retx_frac"):
+            hi = max(abs(f[m]), abs(d[m]), abs(s[m]), 1e-4)
+            assert abs(f[m] - s[m]) / hi < 1e-3, (m, f[m], s[m])
+            assert abs(f[m] - d[m]) / hi < 1e-3, (m, f[m], d[m])
+        p99 = (abs(f["p99_repair_latency_us"] - s["p99_repair_latency_us"])
+               / max(f["p99_repair_latency_us"],
+                     s["p99_repair_latency_us"], 1e-3))
+        assert p99 < 0.1, (f["p99_repair_latency_us"],
+                           s["p99_repair_latency_us"])
+
+
+# ---------------------------------------------------------------------------
+# The schedule is a traced leaf
+# ---------------------------------------------------------------------------
+
+def test_schedule_value_grid_single_compile():
+    """Equal-K schedules with different VALUES are one jaxpr: the table
+    is a traced NetParams leaf, K is the only static part."""
+    cfgs = [_cfg(_timeline(loss=[(2, lr)], cap=[(5, c)]))
+            for lr in (0.0, 0.1) for c in (1.0, 0.5)]
+    n0 = fluid._run_traced_batch._cache_size()
+    rows = run_experiment_batch(cfgs, WL, "dcqcn", HORIZON,
+                                trace_mode="metrics",
+                                channel="trace_replay")
+    assert fluid._run_traced_batch._cache_size() - n0 <= 1, \
+        "schedule values recompiled per cell — the table is not traced"
+    assert len(rows) == len(cfgs)
+    # cells are ordered (lr, cap): (0, 1), (0, .5), (.1, 1), (.1, .5) —
+    # the values bite inside the one launch
+    assert rows[2]["retx_frac"] > rows[0]["retx_frac"] == 0.0
+
+
+def test_schedule_len_mismatch_across_batch_raises():
+    a = _cfg(_timeline())
+    b = NetConfig(distance_km=100.0, horizon_us=HORIZON,
+                  channel_schedule=(schedule_from_arrays(
+                      np.zeros(K + 4, np.float32)),),
+                  channel_schedule_dt_us=SLOT_US)
+    with pytest.raises(ValueError, match="schedule"):
+        stack_net_params([a, b])
+    with pytest.raises(ValueError, match="schedule"):
+        simulate_batch([a, b], WL, get_scheme("dcqcn"), HORIZON,
+                       channel="trace_replay")
+
+
+def test_schedule_shape_validation():
+    with pytest.raises(ValueError, match="channel_schedule"):
+        NetConfig(num_paths=2, channel_schedule=(_timeline(),)).schedule_len
+    with pytest.raises(ValueError):
+        NetConfig(channel_schedule=(
+            _timeline(), _timeline())).schedule_len
+    assert NetConfig().schedule_len == 0
+    assert _cfg(_timeline()).schedule_len == K
+    assert NetConfig().schedule_array().shape == (1, 0, 3)
+    assert _cfg(_timeline()).schedule_array().shape == (1, K, 3)
+
+
+# ---------------------------------------------------------------------------
+# Schedule I/O helpers
+# ---------------------------------------------------------------------------
+
+def test_schedule_json_roundtrip(tmp_path):
+    sched = (_timeline(loss=[(1, 0.2)], defer=[(2, 0.3)], cap=[(3, 0.5)]),
+             _timeline())
+    path = tmp_path / "recorded.json"
+    save_schedule_json(path, sched, dt_us=125.0, note="unit fixture")
+    loaded, dt = load_schedule_json(path)
+    assert dt == 125.0
+    np.testing.assert_allclose(np.asarray(loaded, np.float32),
+                               np.asarray(sched, np.float32))
+    # a loaded schedule drops straight into NetConfig
+    cfg = NetConfig(num_paths=2, channel_schedule=loaded,
+                    channel_schedule_dt_us=dt)
+    assert cfg.schedule_len == K
+
+
+def test_schedule_from_arrays_validation():
+    with pytest.raises(ValueError, match="lengths differ"):
+        schedule_from_arrays([0.1, 0.2], defer=[0.0])
+    tl = schedule_from_arrays([0.1, 0.2])
+    np.testing.assert_allclose(np.asarray(tl, np.float32),
+                               [[0.1, 0.0, 1.0], [0.2, 0.0, 1.0]],
+                               rtol=1e-6)
+
+
+def test_save_schedule_rejects_bad_shape(tmp_path):
+    with pytest.raises(ValueError, match="L, K, 3"):
+        save_schedule_json(tmp_path / "x.json", ((0.1, 0.2),))

@@ -21,6 +21,12 @@ Four checks, all against the live code so the docs cannot silently rot:
      dataclass field) appears in a table row of ``docs/topology.md``, so
      adding a topology or rdmacell knob without documenting it breaks
      the build.
+  6. Sites-knob coverage — same for the multi-site subsystem:
+     ``num_sites`` + every ``site_*`` ``NetConfig`` field and every
+     ``SiteEdge`` field in a table row of ``docs/sites.md``.
+  7. Channel-knob coverage — every ``channel_*`` ``NetConfig`` field
+     (the model-choice seed and the ``trace_replay`` schedule knobs) in
+     a table row of ``docs/channel-models.md``.
 
 Exit status is the error count (0 = clean).
 
@@ -37,6 +43,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SCHEME_API_MD = os.path.join(ROOT, "docs", "scheme-api.md")
 CHANNEL_MD = os.path.join(ROOT, "docs", "channel-models.md")
 TOPOLOGY_MD = os.path.join(ROOT, "docs", "topology.md")
+SITES_MD = os.path.join(ROOT, "docs", "sites.md")
 
 # [text](target) — excluding images' inner brackets is unnecessary here;
 # nested ![alt](img) links resolve the same way
@@ -106,6 +113,23 @@ def check_channel_table(errors: list) -> None:
                        ChannelModel, "channel model")
 
 
+def _check_knob_table(errors: list, md_path: str, knobs, label: str) -> None:
+    """Shared knob-vs-doc check: every name in ``knobs`` must sit in a
+    table row of ``md_path``."""
+    rel = os.path.relpath(md_path, ROOT)
+    if not os.path.exists(md_path):
+        errors.append(f"{rel} is missing")
+        return
+    text = open(md_path, encoding="utf-8").read()
+    table_rows = [ln for ln in text.splitlines()
+                  if ln.lstrip().startswith("|")]
+    for knob in knobs:
+        if not any(f"`{knob}`" in row for row in table_rows):
+            errors.append(
+                f"{rel}: {label} knob {knob!r} missing from the table "
+                f"— document it")
+
+
 def check_topology_table(errors: list) -> None:
     """Every multi-link NetConfig knob must sit in a table row of
     docs/topology.md. The field list is introspected from the dataclass,
@@ -118,18 +142,37 @@ def check_topology_table(errors: list) -> None:
     knobs = ["num_paths"] + sorted(
         f.name for f in dataclasses.fields(NetConfig)
         if f.name.startswith(("path_", "rdmacell_")))
-    rel = os.path.relpath(TOPOLOGY_MD, ROOT)
-    if not os.path.exists(TOPOLOGY_MD):
-        errors.append(f"{rel} is missing")
-        return
-    text = open(TOPOLOGY_MD, encoding="utf-8").read()
-    table_rows = [ln for ln in text.splitlines()
-                  if ln.lstrip().startswith("|")]
-    for knob in knobs:
-        if not any(f"`{knob}`" in row for row in table_rows):
-            errors.append(
-                f"{rel}: topology knob {knob!r} missing from the table "
-                f"— document it")
+    _check_knob_table(errors, TOPOLOGY_MD, knobs, "topology")
+
+
+def check_sites_table(errors: list) -> None:
+    """Every multi-site NetConfig knob (``num_sites`` + ``site_*``) and
+    every ``SiteEdge`` field must sit in a table row of docs/sites.md —
+    both introspected, so new site-graph knobs fail the lint until
+    written up."""
+    import dataclasses
+
+    from repro.config.base import NetConfig
+    from repro.netsim.topology import SiteEdge
+
+    knobs = ["num_sites"] + sorted(
+        f.name for f in dataclasses.fields(NetConfig)
+        if f.name.startswith("site_"))
+    knobs += [f.name for f in dataclasses.fields(SiteEdge)]
+    _check_knob_table(errors, SITES_MD, knobs, "site-graph")
+
+
+def check_channel_knobs(errors: list) -> None:
+    """Every ``channel_*`` NetConfig knob (the PRNG seed and the
+    trace_replay schedule fields) must sit in a table row of
+    docs/channel-models.md."""
+    import dataclasses
+
+    from repro.config.base import NetConfig
+
+    knobs = sorted(f.name for f in dataclasses.fields(NetConfig)
+                   if f.name.startswith("channel_"))
+    _check_knob_table(errors, CHANNEL_MD, knobs, "channel")
 
 
 def main() -> int:
@@ -138,13 +181,15 @@ def main() -> int:
     check_scheme_table(errors)
     check_channel_table(errors)
     check_topology_table(errors)
+    check_sites_table(errors)
+    check_channel_knobs(errors)
     for e in errors:
         print(f"docs-check: {e}", file=sys.stderr)
     n_files = len(_md_files())
     if not errors:
         print(f"docs-check: OK ({n_files} markdown files, links + scheme "
               f"table + hook coverage + channel-model table + topology "
-              f"knobs)")
+              f"knobs + site-graph knobs + channel knobs)")
     return min(len(errors), 100)
 
 
