@@ -26,6 +26,11 @@
 #                               (tiny, seconds, no json append); asserts one
 #                               compile per scheme and that the replayed
 #                               schedule bites at full amplitude
+#   make bench-failover-smoke - link/site hard-outage grid across all schemes
+#                               (tiny, seconds, no json append); asserts
+#                               finite failover columns, strict conservation
+#                               through the outages, and that a site outage
+#                               collapses throughput harder than one link
 #   make docs-check           - docs lint: intra-repo links in README/docs,
 #                               scheme-table completeness, hook coverage
 #   make ci                   - deps + test + smokes + docs-check
@@ -40,6 +45,8 @@
 #                               BENCH_netsim_sweep.json
 #   make bench-sites          - full 3-site mesh grid (trace_replay channel);
 #                               appends to BENCH_netsim_sweep.json
+#   make bench-failover       - full link/site outage grid; appends to
+#                               BENCH_netsim_sweep.json
 
 PYTHON ?= python
 
@@ -52,7 +59,8 @@ PYTEST_W = -W "error:passing a scheme name string:DeprecationWarning:repro\.nets
 	bench-scheme-compare bench-scheme-compare-smoke \
 	bench-impairment bench-impairment-smoke \
 	bench-topology bench-topology-smoke \
-	bench-sites bench-sites-smoke docs-check
+	bench-sites bench-sites-smoke \
+	bench-failover bench-failover-smoke docs-check
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt || \
@@ -76,12 +84,15 @@ bench-topology-smoke:
 bench-sites-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --sites-grid --smoke
 
+bench-failover-smoke:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --failover-grid --smoke
+
 docs-check:
 	PYTHONPATH=src $(PYTHON) tools/docs_check.py
 
 ci: deps test bench-netsim-smoke bench-scheme-compare-smoke \
 	bench-impairment-smoke bench-topology-smoke bench-sites-smoke \
-	docs-check
+	bench-failover-smoke docs-check
 
 bench-netsim:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.netsim_sweep_bench
@@ -97,3 +108,6 @@ bench-topology:
 
 bench-sites:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --sites-grid
+
+bench-failover:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --failover-grid

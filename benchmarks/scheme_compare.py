@@ -44,9 +44,23 @@ a traced leaf, so the grid is ONE compiled launch plan per scheme
 (asserted), and the replayed schedule must bite at full amplitude while
 staying invisible at zero.
 
+``--failover-grid`` switches to the fault-injection comparison: all
+schemes over a {no outage, link-0 outage, full site outage} x duration
+grid at ``num_paths=3`` (unequal caps), driven by the failure-event
+subsystem (``repro.netsim.failures``). Window TIMES are traced, the
+window count is static — the whole grid is ONE compiled launch plan per
+scheme (asserted) — and the run scores each scheme's
+``failover_collapse_frac`` (goodput collapse during the outage span) and
+``failover_recovery_us`` (time to regain 90 % of the pre-outage mean).
+The sweep runs with ``strict_conservation`` armed, and the grid doubles
+as the crash/resume harness: ``--checkpoint-dir`` + ``--resume`` +
+``--crash-after-launches`` exercise the runner's per-chunk checkpointing
+(the kill-and-resume subprocess test asserts byte-identical rows).
+
     PYTHONPATH=src python -m benchmarks.scheme_compare \
         [--smoke] [--full] [--impairment-grid] [--topology-grid] \
-        [--sites-grid]
+        [--sites-grid] [--failover-grid] [--checkpoint-dir DIR] \
+        [--resume] [--crash-after-launches N]
 """
 from __future__ import annotations
 
@@ -56,6 +70,7 @@ import dataclasses
 
 from repro.config.base import NetConfig
 from repro.netsim import sweep_grid
+from repro.netsim.failures import FailureSchedule
 from repro.netsim.runner import convergence_horizon_us
 from repro.netsim.schemes import ALL_SCHEMES
 from repro.netsim.topology import SiteEdge, SiteGraph
@@ -392,6 +407,117 @@ def run_sites_grid(full: bool = False, smoke: bool = False):
     return rows, cells, summary, wall_s
 
 
+# the columns every failover-grid row must carry (and the resume test
+# compares byte-for-byte across crash -> resume vs uninterrupted runs)
+FAILOVER_COLS = ("failover_collapse_frac", "failover_recovery_us")
+
+
+def run_failover_grid(full: bool = False, smoke: bool = False,
+                      checkpoint_dir=None, resume: bool = False,
+                      crash_after_launches=None):
+    """All seven schemes over a fault-injection grid: three unequal links
+    at 100 km, cells = {no outage, link-0 outage, full site outage (every
+    edge down — ``FailureSchedule.site_outage``)} x outage duration.
+    Every cell carries exactly ONE window per edge (no-op ``(0, 0)``
+    windows on the clean cells), so the static window count matches
+    grid-wide and the traced window TIMES batch — one compiled launch
+    plan per scheme (asserted). Decimated traces feed the failover
+    scoring columns; ``strict_conservation`` is armed for the whole grid,
+    so a conservation leak through any outage aborts the bench."""
+    from repro.netsim import fluid
+
+    horizon_us = 6_000.0 if smoke else 20_000.0
+    t_down = horizon_us / 3.0
+    durations = (horizon_us / 6.0,) if smoke \
+        else (horizon_us / 10.0, horizon_us / 5.0)
+    if full:
+        durations = durations + (horizon_us / 3.0,)
+    kinds = ("none", "link0", "site")
+    edge_pairs = ((0, 1),) * 3          # all three links join site 0 -> 1
+
+    def _schedule(kind: str, dur: float) -> FailureSchedule:
+        if kind == "link0":
+            return FailureSchedule(3).link_outage(0, t_down, t_down + dur)
+        if kind == "site":
+            return FailureSchedule(3).site_outage(1, t_down, t_down + dur,
+                                                  edge_pairs)
+        return FailureSchedule(3, (((0.0, 0.0),),) * 3)   # all-up control
+
+    cells = [(k, d) for k in kinds for d in durations]
+    base = NetConfig(distance_km=100.0, num_paths=3,
+                     path_cap_frac=(0.5, 0.3, 0.2))
+    cfgs = [_schedule(k, d).apply(base) for k, d in cells]
+    wl = _workload(horizon_us)
+
+    t0 = time.time()
+    n0 = fluid._run_traced_batch._cache_size()
+    rows = sweep_grid(cfgs, wl, ALL_SCHEMES, horizon_us,
+                      trace_mode="decimate", decimate=4,
+                      strict_conservation=True,
+                      checkpoint_dir=checkpoint_dir, resume=resume,
+                      abort_after_launches=crash_after_launches)
+    compiles = fluid._run_traced_batch._cache_size() - n0
+    wall_s = time.time() - t0
+    if not resume:     # a resumed run legitimately re-runs fewer launches
+        assert compiles <= len(ALL_SCHEMES), (
+            f"{compiles} compiles for {len(ALL_SCHEMES)} schemes — the "
+            f"failure-window times stopped being traced leaves")
+
+    by_scheme = {}
+    for r in rows:
+        by_scheme.setdefault(r["scheme"], []).append(r)
+    for name, rs in by_scheme.items():
+        assert len(rs) == len(cells), (name, len(rs))
+        for col in FAILOVER_COLS:
+            assert all(col in r and _finite(r[col]) for r in rs), (name, col)
+        for i, (kind, dur) in enumerate(cells):
+            r = rs[i]
+            assert 0.0 <= r["failover_collapse_frac"] <= 1.0, (name, r)
+            assert r["failover_recovery_us"] >= 0.0, (name, r)
+            if kind == "none":     # all-up control rows score zero
+                assert r["failover_collapse_frac"] == 0.0, (name, r)
+                assert r["failover_recovery_us"] == 0.0, (name, r)
+    # headline physics: a FULL site outage collapses goodput hard (every
+    # link is dead — nothing reroutes), and never less than losing only
+    # link 0 of the same duration (half the capacity survives there)
+    for i, (kind, dur) in enumerate(cells):
+        if kind != "site":
+            continue
+        j = cells.index(("link0", dur))
+        dc_site = by_scheme["dcqcn"][i]["failover_collapse_frac"]
+        dc_link = by_scheme["dcqcn"][j]["failover_collapse_frac"]
+        assert dc_site > 0.5, (dur, dc_site)
+        assert dc_site >= dc_link - 1e-9, (dur, dc_site, dc_link)
+
+    summary = {}
+    for name, rs in by_scheme.items():
+        outage = [r for r, (k, _) in zip(rs, cells) if k != "none"]
+        summary[name] = {
+            "collapse_frac_worst":
+                round(max(r["failover_collapse_frac"] for r in outage), 4),
+            "recovery_us_worst":
+                round(max(r["failover_recovery_us"] for r in outage), 1),
+            "throughput_gbps_mean":
+                round(sum(r["throughput_gbps"] for r in rs) / len(rs), 2),
+        }
+
+    if not smoke:
+        _append_record({
+            "grid": {"bench": "scheme_compare_failover",
+                     "num_paths": 3, "distance_km": 100.0,
+                     "kinds": list(kinds),
+                     "outage_durations_us": [float(d) for d in durations],
+                     "schemes": list(ALL_SCHEMES),
+                     "horizon_us": horizon_us,
+                     "cells": len(cells) * len(ALL_SCHEMES)},
+            "git_rev": _git_rev(),
+            "wall_s": round(wall_s, 3),
+            "summary": summary,
+            "backend": __import__("jax").default_backend(),
+        })
+    return rows, cells, summary, wall_s
+
+
 def run(full: bool = False, smoke: bool = False):
     dists = (1.0, 10.0, 50.0, 100.0, 300.0, 500.0, 1000.0)
     if full:
@@ -481,7 +607,49 @@ def main():
                          "channel — one compiled launch plan per scheme; "
                          "asserts the replayed schedule bites at full "
                          "amplitude and is invisible at zero")
+    ap.add_argument("--failover-grid", action="store_true",
+                    help="schemes x {no outage, link-0 outage, site "
+                         "outage} x duration grid at num_paths=3 — one "
+                         "compiled launch plan per scheme; scores goodput "
+                         "collapse + recovery time per scheme with "
+                         "strict_conservation armed")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="(failover grid) write one atomic JSON checkpoint "
+                         "per finished launch into this directory")
+    ap.add_argument("--resume", action="store_true",
+                    help="(failover grid) skip launches already "
+                         "checkpointed in --checkpoint-dir (bit-identical "
+                         "rows)")
+    ap.add_argument("--crash-after-launches", type=int, default=None,
+                    help="(failover grid) crash-injection hook: abort the "
+                         "sweep after N executed launches (their "
+                         "checkpoints are already on disk)")
     args = ap.parse_args()
+    if args.failover_grid:
+        rows, cells, summary, wall_s = run_failover_grid(
+            full=args.full, smoke=args.smoke,
+            checkpoint_dir=args.checkpoint_dir, resume=args.resume,
+            crash_after_launches=args.crash_after_launches)
+        cols = ("scheme", "fail_kind", "outage_us", "throughput_gbps",
+                "goodput_gbps", "failover_collapse_frac",
+                "failover_recovery_us", "peak_buffer_mb")
+        print(",".join(cols))
+        per_scheme = len(rows) // len(cells)
+        for i, r in enumerate(rows):
+            kind, dur = cells[i // per_scheme]
+            vals = dict(r, fail_kind=kind, outage_us=dur)
+            print(",".join(f"{vals[c]:.6g}" if isinstance(vals[c], float)
+                           else str(vals[c]) for c in cols))
+        print(f"# {len(rows)} cells in {wall_s:.1f}s (failover grid, "
+              f"decimated traces, strict conservation, one compile per "
+              f"scheme)")
+        for name, s in summary.items():
+            print(f"# {name}: worst collapse={s['collapse_frac_worst']}, "
+                  f"worst recovery={s['recovery_us_worst']} us, mean thr="
+                  f"{s['throughput_gbps_mean']} Gbps")
+        if args.smoke:
+            print("SCHEME_COMPARE_FAILOVER_SMOKE_OK")
+        return
     if args.sites_grid:
         rows, cells, summary, wall_s = run_sites_grid(
             full=args.full, smoke=args.smoke)

@@ -289,6 +289,11 @@ class NetParams(NamedTuple):
     chan_schedule: Any           # f32[L, K, 3]
     chan_sched_dt_us: Any        # f32 — schedule entry duration (µs;
                                  # <= 0 means one entry per dt_us step)
+    # failure schedule (repro.netsim.failures): per-edge hard-outage
+    # windows. The WINDOW TIMES are traced; the window count W is static
+    # shape (W = cfg.failure_len keys the compile — grids sharing one
+    # window count share one program). [L, 0, 2] = no failures.
+    fail_windows: Any            # f32[L, W, 2] — (down_at_us, up_at_us)
 
     @classmethod
     def of(cls, cfg: "NetConfig") -> "NetParams":
@@ -313,7 +318,8 @@ class NetParams(NamedTuple):
                        np.float32(cfg.path_pfc_kb())),
                    chan_schedule=jnp.asarray(cfg.schedule_array()),
                    chan_sched_dt_us=jnp.float32(
-                       cfg.channel_schedule_dt_us))
+                       cfg.channel_schedule_dt_us),
+                   fail_windows=jnp.asarray(cfg.failure_array()))
 
     def delay_steps(self, dt_us: float):
         """Traced step count of the long-haul delay (>= 1)."""
@@ -333,6 +339,14 @@ def stack_net_params(cfgs: Sequence["NetConfig"]) -> NetParams:
             f"batch ({sorted(lens)}) — the [L, K, 3] schedule table is a "
             f"stacked traced leaf, so every scenario must carry the same "
             f"number of entries (pad shorter schedules)")
+    wlens = {c.failure_len for c in cfgs}
+    if len(wlens) > 1:
+        raise ValueError(
+            f"stack_net_params: failure_schedule window counts differ "
+            f"across the batch ({sorted(wlens)}) — the [L, W, 2] outage "
+            f"table is a stacked traced leaf, so every scenario must carry "
+            f"the same number of windows (pad with no-op (0, 0) windows; "
+            f"repro.netsim.failures.FailureSchedule does this)")
     return jax.tree.map(lambda *xs: jnp.stack(xs),
                         *[NetParams.of(c) for c in cfgs])
 
@@ -353,7 +367,8 @@ NET_TRACED_FIELDS = ("distance_km", "num_otn_links", "link_gbps",
                      "jitter_us", "flap_period_us", "flap_depth",
                      "rdmacell_token_bucket_us", "rdmacell_rob_limit_mb",
                      "path_delay_scale", "path_cap_frac", "path_thresh_kb",
-                     "channel_schedule", "channel_schedule_dt_us")
+                     "channel_schedule", "channel_schedule_dt_us",
+                     "failure_schedule")
 
 
 def batch_template(cfgs: Sequence["NetConfig"]) -> "NetConfig":
@@ -417,6 +432,15 @@ class NetConfig:
     # are traced NetParams leaves; the entry count K is static shape.
     channel_schedule: tuple = ()
     channel_schedule_dt_us: float = 0.0
+    # hard-failure schedule (docs/failures.md): link/site outage timelines
+    # for the ``repro.netsim.failures`` subsystem. () = no failures, or a
+    # length-num_paths tuple of per-edge window tuples, each window a
+    # (down_at_us, up_at_us) pair during which that link is DEAD (zero
+    # capacity, in-flight bytes dumped into the retransmit path). All
+    # edges carry the same window count W (pad with no-op (0, 0) windows —
+    # ``FailureSchedule`` builds/pads these). The window TIMES are traced
+    # NetParams leaves; W is static shape keying the compile.
+    failure_schedule: tuple = ()
 
     # simulation
     dt_us: float = 5.0                    # fluid integration step
@@ -606,6 +630,49 @@ class NetConfig:
         if k == 0:
             return np.zeros((self.num_paths, 0, 3), np.float32)
         return np.asarray(self.channel_schedule, np.float32)
+
+    # -- failure schedule (docs/failures.md) -------------------------------
+    @property
+    def failure_len(self) -> int:
+        """Static window count W of the failure schedule (0 = none).
+        Validates the nested tuple: one per-edge window list per link, all
+        of equal length, each window a (down_at_us, up_at_us) pair. A
+        window with up <= down is a no-op (the padding convention)."""
+        if not self.failure_schedule:
+            return 0
+        if len(self.failure_schedule) != self.num_paths:
+            raise ValueError(
+                f"NetConfig.failure_schedule: expected {self.num_paths} "
+                f"(num_paths) per-edge window lists or an empty tuple, got "
+                f"{len(self.failure_schedule)}")
+        lens = {len(edge) for edge in self.failure_schedule}
+        if len(lens) > 1:
+            raise ValueError(
+                f"NetConfig.failure_schedule: per-edge window lists differ "
+                f"in length ({sorted(lens)}) — pad with no-op (0, 0) "
+                f"windows to a common W (FailureSchedule does this)")
+        for li, edge in enumerate(self.failure_schedule):
+            for win in edge:
+                if len(win) != 2:
+                    raise ValueError(
+                        f"NetConfig.failure_schedule: edge {li}: each "
+                        f"window is a (down_at_us, up_at_us) pair, got "
+                        f"{win!r}")
+                d, u = float(win[0]), float(win[1])
+                if d < 0.0 or u < 0.0:
+                    raise ValueError(
+                        f"NetConfig.failure_schedule: edge {li}: window "
+                        f"times must be >= 0, got ({d}, {u})")
+        return lens.pop() if lens else 0
+
+    def failure_array(self):
+        """The outage windows as an f32 [L, W, 2] numpy table (the traced
+        ``NetParams.fail_windows`` leaf; [L, 0, 2] when unset)."""
+        import numpy as np
+        w = self.failure_len
+        if w == 0:
+            return np.zeros((self.num_paths, 0, 2), np.float32)
+        return np.asarray(self.failure_schedule, np.float32)
 
     @property
     def control_proc_steps(self) -> int:

@@ -24,6 +24,13 @@ Public surface:
                axis; flows name endpoints via
                ``FlowSpec(src_site=..., dst_site=...)``. Documented in
                ``docs/sites.md``.
+  * failures — hard link/site outage timelines (``FailureSchedule`` +
+               JSON I/O): per-edge (down_at, up_at) windows drive a
+               per-step live-mask, dead links zero their capacity and
+               dump in-flight bytes into the loss-repair path, and
+               schemes re-spray over survivors via
+               ``SchemeCtx.link_live``. Documented in
+               ``docs/failures.md``.
   * fluid    — the scheme-agnostic engine (``simulate``, ``simulate_batch``;
                execution modes ``TRACE_MODES`` = full / decimate / metrics,
                streaming accumulators ``MetricAcc`` + ``hist_quantile``,
@@ -37,6 +44,9 @@ Public surface:
 from repro.netsim.channel import (
     CHANNEL_MODELS, ChannelModel, available_channel_models,
     get_channel_model, register_channel_model,
+)
+from repro.netsim.failures import (
+    FailureSchedule, load_failure_json, save_failure_json,
 )
 from repro.netsim.fluid import (
     TRACE_MODES, MetricAcc, SimState, batch_padding, hist_quantile,
@@ -60,14 +70,15 @@ from repro.netsim.workload import (
 )
 
 __all__ = [
-    "ALL_SCHEMES", "CHANNEL_MODELS", "ChannelModel", "MetricAcc",
+    "ALL_SCHEMES", "CHANNEL_MODELS", "ChannelModel", "FailureSchedule",
+    "MetricAcc",
     "RELATED_SCHEMES", "SCHEMES", "Scheme",
     "Scenario", "SimState", "SiteEdge", "SiteGraph", "TRACE_MODES",
     "WorkloadParams", "compile_site_graph", "validate_site_endpoints",
     "available_channel_models", "available_schemes", "batch_padding",
     "chunk_cells", "get_channel_model", "get_scheme",
-    "hist_quantile", "register_channel_model", "register_scheme",
-    "shard_scenario_axis",
+    "hist_quantile", "load_failure_json", "register_channel_model",
+    "register_scheme", "save_failure_json", "shard_scenario_axis",
     "simulate", "simulate_batch", "run_experiment", "run_experiment_batch",
     "stack_workload_params", "sweep", "sweep_grid",
     "BIG", "FlowSpec", "Workload", "aicb_workload", "congestion_workload",

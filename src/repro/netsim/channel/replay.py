@@ -144,13 +144,44 @@ def schedule_from_arrays(loss, defer=None, cap=None) -> tuple:
 def load_schedule_json(path) -> tuple:
     """Load a recorded schedule file -> ``(channel_schedule, dt_us)``
     ready for ``NetConfig`` (see ``docs/channel-models.md`` for the
-    format)."""
+    format).
+
+    Malformed timelines fail HERE, naming the offending edge — not three
+    layers later as an opaque shape error when ``NetConfig.schedule_len``
+    stacks the table: every edge must carry equal-length numeric
+    ``loss``/``defer``/``cap`` sequences, and all edges must share one
+    schedule length (the [L, K, 3] table is rectangular)."""
     with open(path, encoding="utf-8") as fh:
         doc = json.load(fh)
+    if not isinstance(doc, dict):
+        raise ValueError(
+            f"load_schedule_json: {path}: expected a JSON object with an "
+            f"'edges' list, got {type(doc).__name__}")
     edges = []
-    for e in doc.get("edges", []):
-        edges.append(schedule_from_arrays(
-            e.get("loss", ()), e.get("defer"), e.get("cap")))
+    for i, e in enumerate(doc.get("edges", [])):
+        if not isinstance(e, dict):
+            raise ValueError(
+                f"load_schedule_json: {path}: edge {i} must be an object "
+                f"with 'loss'/'defer'/'cap' lists, got {type(e).__name__}")
+        try:
+            edges.append(schedule_from_arrays(
+                e.get("loss", ()), e.get("defer"), e.get("cap")))
+        except ValueError as err:
+            # schedule_from_arrays reports the ragged lengths; name the
+            # edge that carried them
+            raise ValueError(
+                f"load_schedule_json: {path}: edge {i} has a malformed "
+                f"timeline: {err}") from err
+        except TypeError as err:  # non-numeric entries
+            raise ValueError(
+                f"load_schedule_json: {path}: edge {i} has non-numeric "
+                f"timeline entries: {err}") from err
+        if i > 0 and len(edges[i]) != len(edges[0]):
+            raise ValueError(
+                f"load_schedule_json: {path}: edge {i} has {len(edges[i])} "
+                f"schedule entries but edge 0 has {len(edges[0])} — all "
+                f"edges of a schedule must share one length (pad short "
+                f"edges with (0, 0, 1) pass-through entries)")
     return tuple(edges), float(doc.get("dt_us", 0.0))
 
 

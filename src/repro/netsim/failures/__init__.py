@@ -1,0 +1,34 @@
+"""Hard-failure subsystem: link/site outage timelines for the netsim engine.
+
+Where the channel models (``repro.netsim.channel``) impair a link that is
+still *up* — loss, jitter, capacity dips — this package kills links
+outright: a :class:`FailureSchedule` holds per-edge ``(down_at_us,
+up_at_us)`` windows during which a link is DEAD. Compiled into
+``NetConfig.failure_schedule`` it rides into the vmapped scan as the
+traced ``NetParams.fail_windows`` leaf ([L, W, 2]; the window count W is
+static shape), so outage grids batch like every other axis.
+
+Engine semantics (``docs/failures.md``):
+
+  * a dead link's capacity is zeroed — nothing new launches onto it;
+  * bytes already in flight are dumped into the engine-owned retransmit
+    path as they reach the far end, so byte conservation holds through
+    the outage and the data is eventually re-sent on surviving links;
+  * schemes see a per-step ``SchemeCtx.link_live`` mask and re-spray
+    their routing weights over the surviving links, stalling (never
+    NaN-ing) when every link of a flow is down.
+
+An all-up schedule (windows that never fire) is bit-identical to no
+schedule at all — the engine-wide zero-impairment identity rule.
+"""
+from repro.netsim.failures.schedule import (
+    FailureSchedule,
+    load_failure_json,
+    save_failure_json,
+)
+
+__all__ = [
+    "FailureSchedule",
+    "load_failure_json",
+    "save_failure_json",
+]

@@ -158,6 +158,28 @@ class MetricAcc(NamedTuple):
                       # (ChannelModel.init_metric_acc; None when ideal)
 
 
+def _failure_len(cfg, params) -> int:
+    """STATIC outage-window count W of a compiled program. Prefer the
+    ``fail_windows`` leaf SHAPE over ``cfg.failure_len``: inside a batched
+    program ``cfg`` is the ``batch_template`` (every traced field reset to
+    its default, so ``cfg.failure_len`` reads 0 there) and only the
+    stacked leaf still carries W — the same shape-from-params idiom
+    ``trace_replay`` uses for its schedule length."""
+    fw = getattr(params, "fail_windows", None) if params is not None else None
+    if fw is None:
+        return cfg.failure_len
+    return int(fw.shape[-2])
+
+
+def _track_chan(channel, cfg, params=None) -> bool:
+    """Whether the chan_* trace keys / streamed channel columns exist for
+    this run: any non-ideal channel, OR a failure schedule (an outage
+    activates the loss-repair path even under the ideal channel — the
+    base ``ChannelModel`` streaming hooks then reduce the engine-owned
+    chan_* keys)."""
+    return (not channel.is_ideal) or _failure_len(cfg, params) > 0
+
+
 def _init_metric_acc(scheme, channel, ctx, state0) -> MetricAcc:
     z = jnp.float32(0.0)
     return MetricAcc(
@@ -166,8 +188,8 @@ def _init_metric_acc(scheme, channel, ctx, state0) -> MetricAcc:
         maxes={k: z for k in STREAM_MAX_KEYS},
         hist=jnp.zeros((HIST_BINS,), jnp.int32),
         scheme=scheme.init_metric_acc(ctx, state0),
-        chan=(None if channel.is_ideal
-              else channel.init_metric_acc(ctx, state0)),
+        chan=(channel.init_metric_acc(ctx, state0)
+              if _track_chan(channel, ctx.cfg, ctx.params) else None),
     )
 
 
@@ -248,8 +270,17 @@ def init_state(cfg: NetConfig, num_flows: int, params: NetParams = None,
     L = cfg.num_paths
     z = jnp.zeros((f,), jnp.float32)
     nic = params.nic_gbps * 1e9 / 8.0
+    # the loss-repair slots exist whenever anything can LOSE bytes: a
+    # non-ideal channel, or a failure schedule (a dead link dumps its
+    # in-flight bytes into the retransmit path — docs/failures.md)
+    repair = (not channel.is_ideal) or _failure_len(cfg, params) > 0
+    if repair:
+        backlog, retx_inflight = z, z
+        retx_line = jnp.zeros((delay_pad, f), jnp.float32)
+    else:
+        backlog = retx_line = retx_inflight = None
     if channel.is_ideal:
-        chan = backlog = retx_line = retx_inflight = None
+        chan = None
     else:
         base_key = scenario_key(
             jax.random.PRNGKey(cfg.channel_seed), params)
@@ -281,8 +312,6 @@ def init_state(cfg: NetConfig, num_flows: int, params: NetParams = None,
                 )(keys)
         else:
             chan = channel.init_channel_state(cfg, params, f, key=base_key)
-        backlog, retx_inflight = z, z
-        retx_line = jnp.zeros((delay_pad, f), jnp.float32)
     return SimState(
         sent=z, acked=z, delivered=z,
         done_at_us=jnp.full((f,), INF),
@@ -330,8 +359,15 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
     scheme = get_scheme(scheme)
     channel = get_channel_model(channel)
     impaired = not channel.is_ideal
+    # hard-failure schedule (docs/failures.md; STATIC window count keys
+    # the compile). ``repair`` gates the loss-repair machinery: a dead
+    # link dumps its in-flight bytes into the retransmit path, so the
+    # backlog/notification-ring plumbing must exist even under the ideal
+    # channel whenever failures can fire.
     if params is None:
         params = NetParams.of(cfg)
+    has_fail = _failure_len(cfg, params) > 0
+    repair = impaired or has_fail
     if delay_pad <= 0:
         delay_pad = _delay_steps(cfg)
     dt_us = cfg.dt_us
@@ -432,10 +468,28 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         chan_key0 = scenario_key(
             jax.random.PRNGKey(cfg.channel_seed), params)
     zero_f = jnp.zeros((is_inter.shape[0],), jnp.float32)
+    if has_fail:
+        fw = jnp.asarray(params.fail_windows)          # [L, W, 2]
+        fail_lo, fail_hi = fw[..., 0], fw[..., 1]      # [L, W]
 
     def step(state: SimState, t: jax.Array):
         t_us = t.astype(jnp.float32) * dt_us
         ridx = jnp.mod(t, d_steps)
+
+        # -------------------------------------------- 0. failure live-mask
+        # A link is DOWN inside any of its (down_at, up_at) windows
+        # (strict upper bound, so padding (0, 0) windows never fire).
+        # Schemes see the mask through ``SchemeCtx.link_live`` and
+        # re-spray their routing weights over the survivors; at an
+        # all-up step every where() below selects the ORIGINAL tensor,
+        # keeping the program bit-identical to a schedule-free run.
+        if has_fail:
+            link_down = jnp.any((t_us >= fail_lo) & (t_us < fail_hi),
+                                axis=-1)                           # [L]
+            link_live = 1.0 - link_down.astype(jnp.float32)        # [L]
+            hctx = ctx._replace(link_live=link_live)
+        else:
+            hctx = ctx
 
         # ------------------------------------------------ 1. flow phase
         started = (t_us >= start_us).astype(jnp.float32)
@@ -471,11 +525,15 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         paused_src = pause_sig > 0.5                   # delayed dst PFC
         if multi:
             cap_link = jnp.where(paused_src, 0.0, link_caps * dt_s)  # [L]
+            if has_fail:
+                cap_link = jnp.where(link_down, 0.0, cap_link)
             cap_src = jnp.sum(cap_link)
         else:
             cap_src = jnp.where(paused_src, 0.0, c_otn * dt_s)
+            if has_fail:
+                cap_src = jnp.where(link_down[0], 0.0, cap_src)
+        retx_arr = state.retx_line[ridx] if repair else zero_f
         if impaired:
-            retx_arr = state.retx_line[ridx]
             if multi:
                 step_key = jax.random.fold_in(chan_key0, t)
                 keys = jax.vmap(
@@ -496,11 +554,28 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
                 pipe_arrivals, lost = eff.arrivals, eff.lost
                 cap_src, chan_new = eff.cap_src, eff.chan
         else:
-            retx_arr = zero_f
             pipe_arrivals, lost, chan_new = pipe_out, zero_f, None
+        # -------------------------------------------- 2c. outage dump
+        # Bytes reaching the far end of a DEAD link are lost there and
+        # ride the loss-notification ring back: conservation holds
+        # through the outage and the data re-enters the source queue to
+        # be re-sprayed over the surviving links. (Bytes in flight when
+        # a link dies keep transiting the ring; they are dumped at exit
+        # time while the link stays down, delivered if it came back.)
+        if has_fail:
+            if multi:
+                deadc = link_down[:, None]                       # [L, 1]
+                fail_lost = jnp.sum(
+                    jnp.where(deadc, pipe_arrivals, 0.0), axis=0)  # [F]
+                pipe_arrivals = jnp.where(deadc, 0.0, pipe_arrivals)
+            else:
+                fail_lost = jnp.where(link_down[0], pipe_arrivals, zero_f)
+                pipe_arrivals = jnp.where(link_down[0], zero_f,
+                                          pipe_arrivals)
+            lost = jnp.where(fail_lost > 0.0, lost + fail_lost, lost)
 
         # ------------------------------------------------ 3. ACK accounting
-        acked_inter = scheme.ack_view(ctx, state, ack_arr)
+        acked_inter = scheme.ack_view(hctx, state, ack_arr)
         acked = jnp.where(is_inter > 0, acked_inter,
                           state.delivered)             # intra: ~µs loop
         acked = jnp.minimum(acked, state.sent)
@@ -508,7 +583,7 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         # ------------------------------------------------ 4. sender rates
         win_avail = jnp.maximum(window - (state.sent - acked), 0.0)
         base_rate = jnp.minimum(win_avail / dt_s, nic)
-        rate = scheme.sender_rate(ctx, state, base_rate)
+        rate = scheme.sender_rate(hctx, state, base_rate)
         # src-OTN -> sender PFC (1 step, from last-step queue)
         src_nic_pause = (jnp.sum(state.q_src) > xoff_otn).astype(jnp.float32)
         rate = rate * jnp.where(is_inter > 0, 1.0 - src_nic_pause, 1.0)
@@ -523,9 +598,9 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         # arithmetic (XLA fusion/FMA contraction included) is the
         # pre-channel program's, which the zero-impairment identity test
         # pins bit-for-bit against the goldens.
-        if impaired:
+        if repair:
             backlog_avail = state.retx_backlog + retx_arr
-            retx_bps = jnp.maximum(scheme.retx_rate(ctx, state, rate), 0.0)
+            retx_bps = jnp.maximum(scheme.retx_rate(hctx, state, rate), 0.0)
             retx_send = (jnp.minimum(jnp.minimum(backlog_avail,
                                                  retx_bps * dt_s),
                                      nic * dt_s)
@@ -541,12 +616,12 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
 
         # ------------------------------------------------ 5. source OTN
         arrivals_src = send * is_inter
-        if impaired:
+        if repair:
             # where(): at retx_send == 0 the select returns the original
             # arrivals tensor (see the send select above)
             arrivals_src = jnp.where(retx_send > 0.0,
                                      arrivals_src + retx_send, arrivals_src)
-        q_src, drained_src = scheme.src_otn_release(ctx, state, arrivals_src,
+        q_src, drained_src = scheme.src_otn_release(hctx, state, arrivals_src,
                                                     cap_src, active)
         if multi:
             # spray the scheme's aggregate release across the parallel
@@ -557,7 +632,7 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
             # equal-weight spray over unequal paths therefore bottlenecks
             # on its slowest link, which is exactly the imbalance
             # token-gated spraying (rdmacell) adapts away.
-            w = jnp.maximum(scheme.route_weights(ctx, state, route), 0.0)
+            w = jnp.maximum(scheme.route_weights(hctx, state, route), 0.0)
             w = w * (cap_link > 0.0)[None, :]                     # [F, L]
             row = jnp.sum(w, axis=1, keepdims=True)
             share = w / jnp.maximum(row, 1e-9)                    # [F, L]
@@ -615,7 +690,7 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
 
         # ------------------------------------------------ 9. scheme feedback
         # (CNP routing, pseudo-ACK ledger, proxy brake, slot/budget/channel)
-        fb = scheme.feedback(ctx, state, SchemeSignals(
+        fb = scheme.feedback(hctx, state, SchemeSignals(
             t=t, active=active, sent=sent, cnp_out=cnp_out, cnp_arr=cnp_arr,
             egress_bytes=egress_bytes, q_dst_tot=q_dst_tot, q_leaf=q_leaf,
             leaf_pfc=leaf_pfc, retx_arr=retx_arr, retx_backlog=retx_backlog,
@@ -636,7 +711,7 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
             state.done_at_us)
         done_at = jnp.where(newly_done, t_us, state.done_at_us)
 
-        if impaired:
+        if repair:
             retx_line = state.retx_line.at[ridx].set(lost)
             retx_inflight = state.retx_inflight + lost - retx_arr
         else:
@@ -650,7 +725,7 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
             pipe=pipe, inflight=inflight,
             ack_line=ack_line, cnp_line=cnp_line,
             pause_line=pause_line, pause_dst=pause_dst, extra=fb.extra,
-            chan=chan_new, retx_backlog=(retx_backlog if impaired else None),
+            chan=chan_new, retx_backlog=(retx_backlog if repair else None),
             retx_line=retx_line, retx_inflight=retx_inflight,
         )
         # per-flow byte conservation residual: everything the sender emitted
@@ -659,10 +734,12 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         # retransmit backlog, or a jitter deferral buffer
         q_dst_f = jnp.sum(q_dst, axis=0) if multi else q_dst
         residual = sent - delivered - q_src - q_dst_f - q_leaf - inflight
+        if repair:
+            residual = residual - retx_inflight - retx_backlog
         if impaired:
             held = (jnp.sum(jax.vmap(channel.held_bytes)(chan_new), axis=0)
                     if multi else channel.held_bytes(chan_new))
-            residual = residual - retx_inflight - retx_backlog - held
+            residual = residual - held
         cons_err = jnp.max(jnp.abs(residual) / jnp.maximum(sent, 1.0))
         if multi:
             # capacity-weighted pause means keep the scalar trace keys (and
@@ -688,7 +765,7 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
                 "link_tx": link_tx,           # [L] bytes launched per link
                 "link_pause": pause_dst,      # [L] per-link PFC state
             })
-        if impaired:
+        if repair:
             # engine-owned channel trace keys (goodput = wire - lost: with
             # selective repair nothing delivered is ever a duplicate)
             backlog_tot = jnp.sum(retx_backlog)
@@ -713,7 +790,10 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
                 "chan_backlog": backlog_tot,
                 "chan_repair_wait_us": wait_us,
             })
-        out.update(scheme.extra_traces(ctx, state))
+        if has_fail:
+            # the live mask as a trace key ([L] at multi; scalar at L=1)
+            out["fail_live"] = link_live if multi else link_live[0]
+        out.update(scheme.extra_traces(hctx, state))
         return new_state, out
 
     step.ctx = ctx      # shared per-run quantities for the metric machinery
@@ -732,6 +812,7 @@ def _scan_with_mode(step, scheme, channel, state0, steps: int, mode: str,
     ts = jnp.arange(steps, dtype=jnp.int32)
     if mode == "metrics":
         acc0 = _init_metric_acc(scheme, channel, step.ctx, state0)
+        track_chan = _track_chan(channel, step.ctx.cfg, step.ctx.params)
 
         def mstep(carry, t):
             state, acc = carry
@@ -740,7 +821,7 @@ def _scan_with_mode(step, scheme, channel, state0, steps: int, mode: str,
             acc = _accumulate_engine(acc, out, inc)
             acc = acc._replace(scheme=scheme.accumulate_metrics(
                 step.ctx, acc.scheme, state, out, inc))
-            if not channel.is_ideal:
+            if track_chan:
                 acc = acc._replace(chan=channel.accumulate_metrics(
                     step.ctx, acc.chan, state, out, inc))
             return (state, acc), None

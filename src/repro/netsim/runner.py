@@ -29,6 +29,9 @@ spelling.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
+import os
 import warnings
 from typing import Dict, List, Optional, Sequence
 
@@ -151,6 +154,58 @@ def _channel_cols_from_traces(traces_np: dict, warm: int, dt_s: float,
     }
 
 
+def _failover_cols_from_traces(cfgs: Sequence[NetConfig], traces_np: dict,
+                               decimate: int = 1) -> dict:
+    """Failover scoring columns from the ``thr_inter`` time series of a
+    grid whose cells carry a failure schedule (``cfg.failure_len > 0``):
+
+      ``failover_collapse_frac``  1 - (mean inter-DC throughput DURING the
+                                  cell's outage span) / (mean before the
+                                  first down edge), clipped to [0, 1] —
+                                  0 = the scheme rode through the outage,
+                                  1 = goodput fully collapsed.
+      ``failover_recovery_us``    time from the LAST up edge until the
+                                  throughput first regains 90 % of its
+                                  pre-outage mean (clamped to the end of
+                                  the trace when it never does).
+
+    The outage span of a cell is [min down_at, max up_at] over its REAL
+    windows (``up > down``; padding (0, 0) windows are ignored). Cells with
+    no real window — the all-up control rows of a failover grid — report 0
+    for both columns. Sample j of a decimated trace is the engine value at
+    step ``(j+1)*decimate - 1``, so recovery times stay decimation-exact.
+    Full/decimate modes only (``trace_mode="metrics"`` streams no per-step
+    series to recover a timeline from)."""
+    thr = np.asarray(traces_np["thr_inter"], np.float64)       # [B, S]
+    n_cells, n_samples = thr.shape
+    t_us = (np.arange(n_samples, dtype=np.float64) + 1.0) \
+        * max(decimate, 1) * cfgs[0].dt_us
+    collapse = np.zeros(n_cells)
+    recovery = np.zeros(n_cells)
+    for i, cfg in enumerate(cfgs[:n_cells]):
+        fa = np.asarray(cfg.failure_array(), np.float64)       # [L, W, 2]
+        real = fa[..., 1] > fa[..., 0]
+        if not real.any():
+            continue
+        down = fa[..., 0][real].min()
+        up = fa[..., 1][real].max()
+        pre = thr[i][t_us < down]
+        base = pre.mean() if pre.size else 0.0
+        if base <= 0.0:
+            continue
+        span = thr[i][(t_us >= down) & (t_us < up)]
+        during = span.mean() if span.size else 0.0
+        collapse[i] = min(max(1.0 - during / base, 0.0), 1.0)
+        post = t_us >= up
+        rec = post & (thr[i] >= 0.9 * base)
+        if rec.any():
+            recovery[i] = t_us[rec].min() - up
+        elif post.any():
+            recovery[i] = max(t_us[-1] - up, 0.0)
+    return {"failover_collapse_frac": collapse,
+            "failover_recovery_us": recovery}
+
+
 def _metrics_batch(cfgs: Sequence[NetConfig], wl: WorkloadParams,
                    scheme_name: str, final_np: dict, traces_np: dict,
                    decimate: int = 1) -> List[Dict[str, float]]:
@@ -177,6 +232,8 @@ def _metrics_batch(cfgs: Sequence[NetConfig], wl: WorkloadParams,
     if "chan_wire" in traces_np:
         cols.update(_channel_cols_from_traces(
             traces_np, warm, cfgs[0].dt_us * 1e-6, decimate))
+    if cfgs[0].failure_len > 0:
+        cols.update(_failover_cols_from_traces(cfgs, traces_np, decimate))
     return _assemble_rows(cfgs, scheme_name, cols)
 
 
@@ -203,7 +260,10 @@ def _metrics_streaming(cfgs: Sequence[NetConfig], wl: WorkloadParams,
     }
     extra = scheme.finalize_metrics(
         jax.tree.map(np.asarray, acc.scheme), steps, n_warm)
-    if not channel.is_ideal:
+    # the channel accumulator also streams under the IDEAL channel when a
+    # failure schedule is active (outage losses ride the chan_* keys —
+    # fluid._track_chan), so finalize under the same condition
+    if not channel.is_ideal or cfgs[0].failure_len > 0:
         extra = dict(extra or {})
         extra.update(channel.finalize_metrics(
             jax.tree.map(np.asarray, acc.chan), steps, n_warm,
@@ -277,8 +337,13 @@ _auto_chunk_cells = chunk_cells
 
 
 def _sched_floats(cfg: NetConfig) -> int:
-    """Per-cell f32 footprint of the cfg's channel-schedule table."""
-    return cfg.num_paths * cfg.schedule_len * 3
+    """Per-cell f32 footprint of the cfg's resident schedule tables: the
+    ``trace_replay`` channel schedule ([L, W, 3]) plus the failure-window
+    table ([L, W', 2]) — both stacked leaves ride along with every launch,
+    so long schedules shrink the auto chunk instead of blowing the memory
+    target."""
+    return (cfg.num_paths * cfg.schedule_len * 3
+            + cfg.num_paths * cfg.failure_len * 2)
 
 
 def __getattr__(name: str):
@@ -334,41 +399,282 @@ def _grid_static(cfgs, horizon_us, delay_pad: int, history_slots: int):
             max(delay_pad, dp), max(history_slots, hs))
 
 
-def _execute_plan(plan: Sequence[_Launch], cfgs, wlp: WorkloadParams,
-                  grid_static, period_slots, trace_mode, decimate,
-                  devices, channel=None) -> Dict[object, list]:
-    """Run every launch; returns scheme -> full row list (grid order).
-    ``grid_static`` is the shared ``_grid_static`` tuple, so all chunks
-    (and all schemes) see identical static shapes, hence one compiled
-    program per scheme."""
-    horizon, steps, warm, delay_pad, history_slots = grid_static
-    channel = get_channel_model(channel)
-    wlp_np = [np.asarray(v) for v in wlp]
+# ---------------------------------------------------------------------------
+# Runner hardening: conservation guard, finite guard, checkpoint/resume, OOM
+# backoff (docs/failures.md)
+# ---------------------------------------------------------------------------
 
-    rows: Dict[object, list] = {}
-    for launch in plan:
-        sub_cfgs = cfgs[launch.lo:launch.hi]
-        sub_wlp = WorkloadParams(*(v[launch.lo:launch.hi] for v in wlp_np))
-        n_real = len(sub_cfgs)
-        sub_cfgs, sub_wlp = _pad_chunk(sub_cfgs, sub_wlp, launch.pad_to)
+
+class ConservationError(RuntimeError):
+    """``strict_conservation``: a cell's byte-conservation residual
+    (``cons_err`` — max over flows of |residual| / max(sent, 1)) exceeded
+    the tolerance. Carries the GRID-ORDER ``cell`` index and the engine
+    ``step`` of the first violation (``None`` under ``trace_mode="metrics"``,
+    where only the running max streams)."""
+
+    def __init__(self, scheme_name: str, cell: int, step: Optional[int],
+                 err: float, tol: float):
+        self.scheme_name, self.cell, self.step = scheme_name, cell, step
+        self.err, self.tol = err, tol
+        where = (f"step {step}" if step is not None
+                 else "step unknown (trace_mode='metrics' streams only the "
+                      "running max — rerun with trace_mode='full' to "
+                      "localize)")
+        super().__init__(
+            f"strict_conservation: scheme {scheme_name!r} violated byte "
+            f"conservation at cell {cell}, {where}: "
+            f"|residual|/sent = {err:.3e} > tol {tol:.1e}")
+
+
+def _check_conservation(scheme_name: str, aux, lo: int, n_real: int,
+                        trace_mode: str, decimate: int, tol: float) -> None:
+    """First ``cons_err > tol`` violation -> ``ConservationError`` with
+    grid-order (cell, step) coordinates. Sample j of a decimated trace is
+    the engine value AT step ``(j+1)*decimate - 1``, so reported steps are
+    exact at any decimation; metrics mode only streams the per-cell running
+    max, so its step is ``None``."""
+    if trace_mode == "metrics":
+        m = np.asarray(aux.maxes["cons_err"])[:n_real]
+        bad = m > tol
+        if bad.any():
+            i = int(np.argmax(bad))
+            raise ConservationError(scheme_name, lo + i, None,
+                                    float(m[i]), tol)
+        return
+    k = decimate if trace_mode == "decimate" else 1
+    cons = np.asarray(aux["cons_err"])[:n_real]
+    bad = cons > tol
+    if bad.any():
+        i, j = np.argwhere(bad)[0]
+        raise ConservationError(scheme_name, lo + int(i),
+                                (int(j) + 1) * k - 1,
+                                float(cons[i, j]), tol)
+
+
+# ``avg_fct_us`` is exempt from the finite guard: inf (no flow finished)
+# and nan (no finite flow in the cell) are its documented in-band sentinels.
+_NONFINITE_EXEMPT = ("avg_fct_us",)
+
+
+def _guard_nonfinite(rows: List[dict], lo: int,
+                     on_nonfinite: str) -> List[dict]:
+    """Per-cell finite guard. ``"keep"`` passes rows through untouched;
+    ``"quarantine"`` replaces a diverged cell's row with a structured
+    failure record (``failed=True`` + the offending column names + the
+    grid-order cell index) so one NaN cell cannot poison a sweep's
+    aggregation; ``"raise"`` aborts naming the cell and columns."""
+    if on_nonfinite == "keep":
+        return rows
+    out = []
+    for i, row in enumerate(rows):
+        bad = sorted(k for k, v in row.items()
+                     if k not in _NONFINITE_EXEMPT
+                     and isinstance(v, float) and not np.isfinite(v))
+        if not bad:
+            out.append(row)
+            continue
+        cell = lo + i
+        if on_nonfinite == "raise":
+            raise RuntimeError(
+                f"non-finite metrics at cell {cell} "
+                f"(scheme {row.get('scheme')!r}): columns {bad} — rerun "
+                f"with on_nonfinite='quarantine' to skip diverged cells")
+        out.append({"scheme": row.get("scheme"),
+                    "distance_km": row.get("distance_km", float("nan")),
+                    "cell_index": cell, "failed": True,
+                    "nonfinite_cols": bad})
+    return out
+
+
+def _plan_fingerprint(plan, cfgs, wlp_np, grid_static, period_slots,
+                      trace_mode, decimate, channel) -> str:
+    """Digest of everything that determines a plan's rows — configs,
+    workload leaves, grid statics, modes, channel, scheme set. A resume
+    against a checkpoint directory written under a DIFFERENT fingerprint
+    refuses loudly instead of silently mixing two sweeps' rows."""
+    h = hashlib.sha256()
+    for c in cfgs:
+        h.update(repr(c).encode())
+    for leaf in wlp_np:
+        a = np.asarray(leaf)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    names = tuple(sorted({launch.scheme.name for launch in plan}))
+    h.update(repr((tuple(grid_static), int(period_slots), trace_mode,
+                   int(decimate), getattr(channel, "name", None),
+                   names)).encode())
+    return h.hexdigest()
+
+
+def _checkpoint_path(checkpoint_dir: str, launch: _Launch) -> str:
+    return os.path.join(
+        checkpoint_dir,
+        f"{launch.scheme.name}_{launch.lo}_{launch.hi}.json")
+
+
+def _load_checkpoint(path: str, fingerprint: str) -> Optional[list]:
+    """Finished-launch rows from a checkpoint file, or None to (re)run the
+    launch. A torn file — the process died mid-write before the atomic
+    rename — parses as garbage and is treated as absent; a VALID file from
+    a different plan raises."""
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (json.JSONDecodeError, OSError, UnicodeDecodeError):
+        return None
+    if data.get("fingerprint") != fingerprint:
+        raise ValueError(
+            f"--resume: checkpoint {path} was written by a DIFFERENT "
+            f"launch plan (grid, workload, horizon, trace mode, channel "
+            f"or scheme set changed); delete the checkpoint directory to "
+            f"start this sweep from scratch")
+    return data["rows"]
+
+
+def _write_checkpoint(path: str, fingerprint: str, launch: _Launch,
+                      rows: list) -> None:
+    """Atomic per-launch checkpoint: rows round-trip through JSON
+    bit-identically (repr-based float serialization; NaN/Infinity use the
+    JSON-extension literals), and the tmp-file + rename means a kill at
+    ANY point leaves either the complete file or none."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"fingerprint": fingerprint, "scheme": launch.scheme.name,
+                   "lo": launch.lo, "hi": launch.hi, "rows": rows}, f)
+    os.replace(tmp, path)
+
+
+def _is_oom_error(e: Exception) -> bool:
+    s = str(e)
+    return "RESOURCE_EXHAUSTED" in s or "out of memory" in s.lower()
+
+
+def _run_launch(launch: _Launch, cfgs, wlp_np, grid_static, period_slots,
+                trace_mode, decimate, devices, channel, n_dev: int,
+                strict_conservation: bool, conservation_tol: float
+                ) -> List[dict]:
+    """One launch -> its REAL cells' rows (grid order), with
+    retry-with-smaller-chunk backoff: a device-OOM failure splits the
+    launch into two half-size launches and recurses (each half still pads
+    to a device multiple), down to single-cell launches before giving up.
+    The conservation guard runs per launch so the raised coordinates are
+    the first violation of the first offending chunk."""
+    horizon, steps, warm, delay_pad, history_slots = grid_static
+    sub_cfgs = cfgs[launch.lo:launch.hi]
+    sub_wlp = WorkloadParams(*(v[launch.lo:launch.hi] for v in wlp_np))
+    n_real = len(sub_cfgs)
+    sub_cfgs, sub_wlp = _pad_chunk(sub_cfgs, sub_wlp, launch.pad_to)
+    try:
         final, aux = simulate_batch(
             sub_cfgs, sub_wlp, launch.scheme, horizon, period_slots,
             trace_mode=trace_mode, decimate=decimate,
             delay_pad=delay_pad, history_slots=history_slots,
             devices=devices, warm_steps=warm, channel=channel)
-        final_np = {"delivered": np.asarray(final.delivered),
-                    "done_at_us": np.asarray(final.done_at_us)}
-        wl_np = WorkloadParams(*(np.asarray(v) for v in sub_wlp))
-        if trace_mode == "metrics":
-            sub_rows = _metrics_streaming(sub_cfgs, wl_np, launch.scheme,
-                                          channel, final_np, aux, steps,
-                                          warm)
-        else:
-            traces_np = {k: np.asarray(v) for k, v in aux.items()}
-            sub_rows = _metrics_batch(
-                sub_cfgs, wl_np, launch.scheme.name, final_np, traces_np,
-                decimate if trace_mode == "decimate" else 1)
-        rows.setdefault(launch.scheme, []).extend(sub_rows[:n_real])
+    except Exception as e:  # noqa: BLE001 — filtered to OOM right below
+        if not _is_oom_error(e) or n_real <= 1:
+            raise
+        mid = launch.lo + (n_real + 1) // 2
+        warnings.warn(
+            f"launch ({launch.scheme.name}, cells [{launch.lo}, "
+            f"{launch.hi})) hit device OOM; retrying as two half-size "
+            f"launches", RuntimeWarning, stacklevel=2)
+        rows = []
+        for lo, hi in ((launch.lo, mid), (mid, launch.hi)):
+            pad = hi - lo
+            if n_dev > 1:
+                pad = -(-pad // n_dev) * n_dev
+            rows.extend(_run_launch(
+                _Launch(launch.scheme, lo, hi, pad), cfgs, wlp_np,
+                grid_static, period_slots, trace_mode, decimate, devices,
+                channel, n_dev, strict_conservation, conservation_tol))
+        return rows
+    if strict_conservation:
+        _check_conservation(launch.scheme.name, aux, launch.lo, n_real,
+                            trace_mode, decimate, conservation_tol)
+    final_np = {"delivered": np.asarray(final.delivered),
+                "done_at_us": np.asarray(final.done_at_us)}
+    wl_np = WorkloadParams(*(np.asarray(v) for v in sub_wlp))
+    if trace_mode == "metrics":
+        sub_rows = _metrics_streaming(sub_cfgs, wl_np, launch.scheme,
+                                      channel, final_np, aux, steps, warm)
+    else:
+        traces_np = {k: np.asarray(v) for k, v in aux.items()}
+        sub_rows = _metrics_batch(
+            sub_cfgs, wl_np, launch.scheme.name, final_np, traces_np,
+            decimate if trace_mode == "decimate" else 1)
+    return sub_rows[:n_real]
+
+
+def _execute_plan(plan: Sequence[_Launch], cfgs, wlp: WorkloadParams,
+                  grid_static, period_slots, trace_mode, decimate,
+                  devices, channel=None, *,
+                  checkpoint_dir: Optional[str] = None, resume: bool = False,
+                  on_nonfinite: str = "keep",
+                  strict_conservation: bool = False,
+                  conservation_tol: float = 1e-3,
+                  abort_after_launches: Optional[int] = None
+                  ) -> Dict[object, list]:
+    """Run every launch; returns scheme -> full row list (grid order).
+    ``grid_static`` is the shared ``_grid_static`` tuple, so all chunks
+    (and all schemes) see identical static shapes, hence one compiled
+    program per scheme.
+
+    Hardening knobs (all opt-in; docs/failures.md):
+      * ``checkpoint_dir`` — write one atomic JSON checkpoint per finished
+        launch; with ``resume=True`` a rerun of the SAME plan loads
+        finished launches from disk (bit-identical rows — JSON floats
+        round-trip exactly) and only executes the rest. A checkpoint from
+        a different plan (fingerprint mismatch) raises.
+      * ``on_nonfinite`` — ``"keep"`` (default) / ``"quarantine"`` (swap
+        diverged cells' rows for structured failure records) / ``"raise"``.
+      * ``strict_conservation`` — raise ``ConservationError`` with (cell,
+        step) coordinates on the first ``cons_err > conservation_tol``.
+      * ``abort_after_launches`` — deterministic crash-injection hook:
+        raise after N launches have executed (checkpoints for those N are
+        already on disk); the resume test kills sweeps with it.
+    """
+    channel = get_channel_model(channel)
+    if on_nonfinite not in ("keep", "quarantine", "raise"):
+        raise ValueError(
+            f"on_nonfinite must be 'keep', 'quarantine' or 'raise', "
+            f"got {on_nonfinite!r}")
+    wlp_np = [np.asarray(v) for v in wlp]
+    n_dev = len(devices) if devices is not None else len(jax.devices())
+
+    fingerprint = None
+    if checkpoint_dir is not None:
+        os.makedirs(checkpoint_dir, exist_ok=True)
+        fingerprint = _plan_fingerprint(plan, cfgs, wlp_np, grid_static,
+                                        period_slots, trace_mode, decimate,
+                                        channel)
+
+    rows: Dict[object, list] = {}
+    executed = 0
+    for launch in plan:
+        ckpt = (_checkpoint_path(checkpoint_dir, launch)
+                if checkpoint_dir is not None else None)
+        if ckpt is not None and resume:
+            cached = _load_checkpoint(ckpt, fingerprint)
+            if cached is not None:
+                rows.setdefault(launch.scheme, []).extend(cached)
+                continue
+        if abort_after_launches is not None \
+                and executed >= abort_after_launches:
+            raise RuntimeError(
+                f"abort_after_launches: aborting sweep after {executed} "
+                f"executed launches (crash-injection hook)")
+        sub_rows = _guard_nonfinite(
+            _run_launch(launch, cfgs, wlp_np, grid_static, period_slots,
+                        trace_mode, decimate, devices, channel, n_dev,
+                        strict_conservation, conservation_tol),
+            launch.lo, on_nonfinite)
+        if ckpt is not None:
+            _write_checkpoint(ckpt, fingerprint, launch, sub_rows)
+        executed += 1
+        rows.setdefault(launch.scheme, []).extend(sub_rows)
     return rows
 
 
@@ -408,7 +714,13 @@ def run_experiment_batch(cfgs: Sequence[NetConfig], workload, scheme,
                          chunk_cells: Optional[int] = None,
                          devices: Optional[Sequence] = None,
                          delay_pad: int = 0, history_slots: int = 0,
-                         channel=None) -> List[Dict[str, float]]:
+                         channel=None,
+                         checkpoint_dir: Optional[str] = None,
+                         resume: bool = False, on_nonfinite: str = "keep",
+                         strict_conservation: bool = False,
+                         conservation_tol: float = 1e-3,
+                         abort_after_launches: Optional[int] = None
+                         ) -> List[Dict[str, float]]:
     """Fig. 3 metrics for every scenario of a grid, from a chunked launch
     plan (one compiled program per scheme) and one vectorized metric pass
     per launch. ``workload``: shared ``Workload``, per-scenario sequence,
@@ -422,7 +734,14 @@ def run_experiment_batch(cfgs: Sequence[NetConfig], workload, scheme,
     ``channel`` selects the long-haul channel model (name or instance,
     None = ``"ideal"``) — non-ideal channels add the ``goodput_gbps`` /
     ``wire_gbps`` / ``retx_frac`` / ``p99_repair_latency_us`` columns in
-    every trace mode."""
+    every trace mode.
+
+    Hardening knobs (opt-in; see ``_execute_plan`` / docs/failures.md):
+    ``checkpoint_dir`` + ``resume`` for crash-proof per-launch
+    checkpointing, ``on_nonfinite`` for the per-cell finite guard,
+    ``strict_conservation`` (+ ``conservation_tol``) to raise
+    ``ConservationError`` with (cell, step) coordinates, and
+    ``abort_after_launches`` as the deterministic crash-injection hook."""
     cfgs = list(cfgs)
     scheme = get_scheme(scheme)
     channel = get_channel_model(channel)
@@ -434,8 +753,12 @@ def run_experiment_batch(cfgs: Sequence[NetConfig], workload, scheme,
                               _sched_floats(cfgs[0]))
     plan = _plan_launches(len(cfgs), (scheme,), chunk, n_dev)
     return _execute_plan(plan, cfgs, wlp, grid_static, period_slots,
-                         trace_mode, decimate, devices,
-                         channel=channel)[scheme]
+                         trace_mode, decimate, devices, channel=channel,
+                         checkpoint_dir=checkpoint_dir, resume=resume,
+                         on_nonfinite=on_nonfinite,
+                         strict_conservation=strict_conservation,
+                         conservation_tol=conservation_tol,
+                         abort_after_launches=abort_after_launches)[scheme]
 
 
 def convergence_horizon_us(cfgs: Sequence[NetConfig],
@@ -473,7 +796,12 @@ def sweep_grid(scenarios, workload=None, schemes=(),
                horizon_us: Optional[float] = None, period_slots: int = 0, *,
                trace_mode: str = "full", decimate: int = 1,
                chunk_cells: Optional[int] = None,
-               devices: Optional[Sequence] = None, channel=None):
+               devices: Optional[Sequence] = None, channel=None,
+               checkpoint_dir: Optional[str] = None, resume: bool = False,
+               on_nonfinite: str = "keep",
+               strict_conservation: bool = False,
+               conservation_tol: float = 1e-3,
+               abort_after_launches: Optional[int] = None):
     """Heterogeneous scenario grids × schemes, executed as ONE launch plan:
     the grid is stacked once, chunked once, and every (scheme, chunk) pair
     is a device launch sharing the grid-wide static shapes. Returns rows in
@@ -494,6 +822,14 @@ def sweep_grid(scenarios, workload=None, schemes=(),
     None = ``"ideal"``); impairment KNOBS (loss_rate, jitter_us, ...) are
     traced ``NetParams`` leaves, so an impairment grid still runs as one
     compiled program per scheme.
+
+    Hardening knobs (opt-in; see ``_execute_plan`` / docs/failures.md):
+    ``checkpoint_dir`` + ``resume`` checkpoint each finished launch
+    atomically and let a rerun of the SAME plan skip finished chunks with
+    bit-identical rows; ``on_nonfinite`` quarantines or raises on diverged
+    cells; ``strict_conservation`` raises ``ConservationError`` naming the
+    (cell, step) of the first violation; ``abort_after_launches`` is the
+    deterministic crash-injection hook the resume test kills sweeps with.
     """
     scenarios = list(scenarios)
     if not scenarios:
@@ -530,7 +866,11 @@ def sweep_grid(scenarios, workload=None, schemes=(),
                               _sched_floats(cfgs[0]))
     plan = _plan_launches(len(cfgs), scheme_objs, chunk, n_dev)
     by_scheme = _execute_plan(plan, cfgs, wlp, grid_static, period_slots,
-                              trace_mode, decimate, devices,
-                              channel=channel)
+                              trace_mode, decimate, devices, channel=channel,
+                              checkpoint_dir=checkpoint_dir, resume=resume,
+                              on_nonfinite=on_nonfinite,
+                              strict_conservation=strict_conservation,
+                              conservation_tol=conservation_tol,
+                              abort_after_launches=abort_after_launches)
     return [by_scheme[s][i]
             for i in range(len(cfgs)) for s in scheme_objs]

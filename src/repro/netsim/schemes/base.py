@@ -71,6 +71,22 @@ def long_haul_bdp(ctx: "SchemeCtx") -> jax.Array:
     return ctx.c_otn * 2.0 * ctx.params.one_way_delay_us * 1e-6
 
 
+def apply_link_live(ctx: "SchemeCtx", weights: jax.Array) -> jax.Array:
+    """Mask [F, L] spray weights down to the links alive this step — the
+    reroute contract every ``route_weights`` implementation honors
+    (docs/failures.md). With no failure schedule (``ctx.link_live is
+    None``) the weights pass through UNTOUCHED, and at an all-up step the
+    ``where()`` selects the ORIGINAL tensor — both keep the program
+    bit-identical to a schedule-free run. When every link of a flow is
+    down its row goes all-zero; the skeleton's renormalization then
+    stalls that flow (zero share, bytes spill back to the source queue)
+    instead of dividing by zero."""
+    if ctx.link_live is None:
+        return weights
+    live = ctx.link_live[None, :]
+    return jnp.where(live < 1.0, weights * live, weights)
+
+
 class SchemeCtx(NamedTuple):
     """Per-run quantities shared by every hook, built once per trace by
     ``make_step_fn``. Traced leaves (capacities, delays) come from
@@ -103,6 +119,13 @@ class SchemeCtx(NamedTuple):
                                                # (src_site, dst_site) pair
     flow_src_site: Optional[jax.Array] = None  # f32[F] flow source site
     flow_dst_site: Optional[jax.Array] = None  # f32[F] flow dest site
+    # hard-failure live mask (docs/failures.md): set PER STEP by the
+    # skeleton whenever a failure schedule is active — f32[L], 1.0 = the
+    # link is up this step, 0.0 = hard outage. None when no schedule
+    # exists (the bit-identity contract: hooks must not perturb the
+    # schedule-free program). ``route_weights`` implementations fold it
+    # in via ``apply_link_live`` so sprays avoid dead links.
+    link_live: Optional[jax.Array] = None      # f32[L] per-step live mask
 
 
 class SchemeSignals(NamedTuple):
@@ -206,8 +229,11 @@ class Scheme:
         workload asked. Schemes that load-balance dynamically (rdmacell's
         token-gated flowcell spraying) reweight it from their extra state.
         Weights are relative per flow — the skeleton normalizes rows and
-        masks links with zero capacity this step."""
-        return base_route
+        masks links with zero capacity this step. Implementations must
+        honor the reroute contract: fold ``ctx.link_live`` in via
+        ``apply_link_live`` so an outage re-sprays onto survivors
+        (docs/failures.md)."""
+        return apply_link_live(ctx, base_route)
 
     def retx_rate(self, ctx: SchemeCtx, state, rate: jax.Array) -> jax.Array:
         """[F] bytes/s the sender may devote to retransmitting lost bytes

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cc_proxy import themis_rtt_scale
-from repro.netsim.schemes.base import Scheme, SchemeCtx
+from repro.netsim.schemes.base import Scheme, SchemeCtx, apply_link_live
 
 
 class DcqcnScheme(Scheme):
@@ -21,6 +21,12 @@ class DcqcnScheme(Scheme):
     Streams the mean inter-DC DCQCN sender rate (the quantity the
     long-feedback-loop bottleneck suppresses) as ``mean_cc_rate_gbps``.
     """
+
+    def route_weights(self, ctx: SchemeCtx, state, base_route):
+        # e2e baselines spray exactly as the workload asked, minus links
+        # the failure schedule killed this step (docs/failures.md);
+        # themis inherits this unchanged
+        return apply_link_live(ctx, base_route)
 
     def init_metric_acc(self, ctx: SchemeCtx, state) -> dict:
         return dict(super().init_metric_acc(ctx, state),

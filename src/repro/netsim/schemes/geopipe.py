@@ -42,7 +42,8 @@ import numpy as np
 from repro.config.base import NetConfig, NetParams
 from repro.core.budget import ControlChannel, channel_send_recv, init_channel
 from repro.netsim.schemes.base import (
-    Feedback, Scheme, SchemeCtx, SchemeSignals, long_haul_bdp,
+    Feedback, Scheme, SchemeCtx, SchemeSignals, apply_link_live,
+    long_haul_bdp,
 )
 
 from typing import NamedTuple
@@ -109,6 +110,12 @@ class GeoPipeScheme(Scheme):
         return credit, window
 
     # -- per-step hooks ----------------------------------------------------
+    def route_weights(self, ctx: SchemeCtx, state, base_route):
+        # credit pacing gates the release volume, not its placement: the
+        # spray follows the workload routing, rerouted off dead links so
+        # the credit-metered bytes land on survivors (docs/failures.md)
+        return apply_link_live(ctx, base_route)
+
     def sender_rate(self, ctx: SchemeCtx, state, base_rate):
         # inter-DC: window-limited only — the credit gate at the source OTN
         # is the rate control; intra-DC: conventional sender DCQCN.

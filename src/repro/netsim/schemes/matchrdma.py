@@ -24,7 +24,9 @@ from repro.core.matchrdma import (
     accumulate_step, maybe_slot_update, step_channel,
 )
 from repro.core.pseudo_ack import step_pseudo_ack
-from repro.netsim.schemes.base import Feedback, Scheme, SchemeCtx, SchemeSignals
+from repro.netsim.schemes.base import (
+    Feedback, Scheme, SchemeCtx, SchemeSignals, apply_link_live,
+)
 
 
 class MatchRdmaScheme(Scheme):
@@ -51,6 +53,12 @@ class MatchRdmaScheme(Scheme):
 
     def ack_view(self, ctx: SchemeCtx, state, ack_arr):
         return state.extra.pseudo.packed
+
+    def route_weights(self, ctx: SchemeCtx, state, base_route):
+        # rate matching shapes the AGGREGATE release; the spray itself
+        # follows the workload routing, rerouted off links the failure
+        # schedule killed this step (docs/failures.md)
+        return apply_link_live(ctx, base_route)
 
     def sender_rate(self, ctx: SchemeCtx, state, base_rate):
         # inter-DC: window-limited only (the source OTN shapes the rate);

@@ -13,13 +13,20 @@ import numpy as np
 
 from repro.core.budget import fair_share
 from repro.core.pseudo_ack import step_pseudo_ack
-from repro.netsim.schemes.base import Feedback, Scheme, SchemeCtx, SchemeSignals
+from repro.netsim.schemes.base import (
+    Feedback, Scheme, SchemeCtx, SchemeSignals, apply_link_live,
+)
 
 
 class PseudoAckScheme(Scheme):
     """Source-OTN pseudo-ACK, ungated; CC still e2e."""
 
     gated = False
+
+    def route_weights(self, ctx: SchemeCtx, state, base_route):
+        # pseudo-ACK only changes the feedback plane: the spray follows
+        # the workload routing, rerouted off dead links (docs/failures.md)
+        return apply_link_live(ctx, base_route)
 
     # -- streaming metrics: the pseudo-ACK "lead" — bytes acknowledged to
     # the sender that have not actually been delivered yet. The ungated

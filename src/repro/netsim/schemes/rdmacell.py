@@ -41,7 +41,7 @@ import numpy as np
 from repro.config.base import NetConfig, NetParams
 from repro.core.matchrdma import MatchRdmaState
 from repro.netsim.schemes.base import (
-    Feedback, Scheme, SchemeCtx, SchemeSignals,
+    Feedback, Scheme, SchemeCtx, SchemeSignals, apply_link_live,
 )
 
 
@@ -98,12 +98,19 @@ class RdmaCellScheme(Scheme):
     def route_weights(self, ctx: SchemeCtx, state, base_route):
         ex = state.extra
         if not isinstance(ex, RdmaCellState):
-            return base_route
+            return apply_link_live(ctx, base_route)
         tok = jnp.maximum(ex.tokens, 0.0)
         # all buckets dry (transient): fall back to the workload's own
-        # weights rather than parking traffic in the source OTN.
-        tok = jnp.where(jnp.sum(tok) > 0.0, tok, jnp.ones_like(tok))
-        return base_route * tok[None, :]
+        # weights rather than parking traffic in the source OTN. During
+        # an outage only the SURVIVING links' tokens count toward the dry
+        # condition — a dead link's full bucket must neither attract
+        # traffic nor mask an otherwise-dry spray (docs/failures.md).
+        if ctx.link_live is not None:
+            dry = jnp.sum(tok * ctx.link_live) <= 0.0
+        else:
+            dry = jnp.sum(tok) <= 0.0
+        tok = jnp.where(dry, jnp.ones_like(tok), tok)
+        return apply_link_live(ctx, base_route * tok[None, :])
 
     def sender_rate(self, ctx: SchemeCtx, state, base_rate):
         rate = super().sender_rate(ctx, state, base_rate)

@@ -43,7 +43,8 @@ import numpy as np
 
 from repro.config.base import NetConfig, NetParams
 from repro.netsim.schemes.base import (
-    Feedback, Scheme, SchemeCtx, SchemeSignals, long_haul_bdp,
+    Feedback, Scheme, SchemeCtx, SchemeSignals, apply_link_live,
+    long_haul_bdp,
 )
 
 from typing import NamedTuple
@@ -78,6 +79,13 @@ class SdrRdmaScheme(Scheme):
                 * state.extra.cong_ewma)
 
     # -- per-step hooks ----------------------------------------------------
+    def route_weights(self, ctx: SchemeCtx, state, base_route):
+        # software-defined reliability repairs losses; it does not place
+        # bytes on dead links in the first place — reroute onto survivors
+        # (docs/failures.md), retransmissions included (they re-enter the
+        # source queue and spray with these same weights)
+        return apply_link_live(ctx, base_route)
+
     def ack_view(self, ctx: SchemeCtx, state, ack_arr):
         # the sender's window only sees the coalesced snapshot
         return state.extra.ack_held

@@ -1,0 +1,508 @@
+"""The fault-injection subsystem: schedule building/validation + JSON I/O,
+all-up bit-identity against the goldens (seq + batch), outage byte
+accounting through the loss-repair path, engine-level reroute onto
+survivors, the NaN-safe all-dead stall, the live-mask property test for
+every registered scheme, and the hardened sweep runner (checkpoints /
+resume, NaN quarantine, strict conservation, OOM backoff, and the
+subprocess crash-then-resume pin on the failover benchmark)."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from _hypo import given, settings, st
+
+from repro.config.base import NetConfig
+from repro.netsim import (
+    FailureSchedule, fluid, get_scheme, load_failure_json,
+    run_experiment_batch, save_failure_json, simulate, simulate_batch,
+    sweep_grid, throughput_workload,
+)
+from repro.netsim import runner
+from repro.netsim.schemes import ALL_SCHEMES
+from repro.netsim.workload import congestion_workload
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "netsim_scheme_traces.npz")
+# keys an armed (but never-firing) failure schedule may ADD on top of a
+# golden run — the goldens' own keys must stay bit-identical
+FAIL_EXTRA_KEYS = {"chan_backlog", "chan_lost", "chan_repair_wait_us",
+                   "chan_retx", "chan_wire", "fail_live"}
+# the all-up L=1 schedule: one no-op (0, 0) window on the single link —
+# machinery compiled in, every where() on its clean branch
+ALL_UP_1 = (((0.0, 0.0),),)
+
+WL = throughput_workload(msg_size=1 << 20, concurrency=1, num_flows=4)
+# streaming traffic that keeps the pipe full (so an outage always catches
+# bytes in flight): big messages, deep concurrency
+SWL = throughput_workload(msg_size=1 << 23, concurrency=4, num_flows=4)
+
+MULTI = NetConfig(distance_km=100.0, num_paths=3,
+                  path_cap_frac=(0.5, 0.3, 0.2))
+
+
+def _outage_cfg(down_us=600.0, up_us=2_000.0, link=0):
+    fs = FailureSchedule.empty(3).link_outage(link, down_us, up_us)
+    return fs.apply(MULTI)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return np.load(GOLDEN)
+
+
+# ---------------------------------------------------------------------------
+# FailureSchedule building + validation
+# ---------------------------------------------------------------------------
+
+def test_schedule_builder_composes_and_pads():
+    fs = (FailureSchedule.empty(3)
+          .link_outage(0, 1_000.0, 2_000.0)
+          .link_outage(0, 5_000.0, 6_000.0)
+          .link_outage(2, 3_000.0, 4_000.0))
+    assert fs.num_windows == 2
+    t = fs.to_config_tuple()
+    assert len(t) == 3 and all(len(edge) == 2 for edge in t)
+    assert t[1] == ((0.0, 0.0), (0.0, 0.0))       # padded no-ops
+    assert t[2][0] == (3_000.0, 4_000.0)
+    cfg = fs.apply(MULTI)
+    assert cfg.failure_len == 2
+    assert cfg.failure_array().shape == (3, 2, 2)
+
+
+def test_schedule_builder_validation():
+    with pytest.raises(ValueError, match="up_at_us must be > down_at_us"):
+        FailureSchedule.empty(2).link_outage(0, 5_000.0, 5_000.0)
+    with pytest.raises(ValueError, match="down_at_us must be >= 0"):
+        FailureSchedule.empty(2).link_outage(0, -1.0, 5.0)
+    with pytest.raises(ValueError, match="outside"):
+        FailureSchedule.empty(2).link_outage(2, 0.0, 5.0)
+    with pytest.raises(ValueError, match="num_paths is 3"):
+        FailureSchedule.empty(2).link_outage(0, 1.0, 2.0).apply(MULTI)
+    with pytest.raises(ValueError, match="no edge is incident"):
+        FailureSchedule.empty(2).site_outage(7, 1.0, 2.0, ((0, 1), (0, 1)))
+
+
+def test_site_outage_hits_every_incident_edge():
+    pairs = ((0, 1), (0, 2), (2, 1))
+    fs = FailureSchedule.empty(3).site_outage(2, 1_000.0, 2_000.0, pairs)
+    assert fs.windows[0] == ()                    # 0->1 untouched
+    assert fs.windows[1] == ((1_000.0, 2_000.0),)
+    assert fs.windows[2] == ((1_000.0, 2_000.0),)
+
+
+def test_empty_schedule_is_structurally_absent():
+    assert FailureSchedule.empty(4).to_config_tuple() == ()
+    cfg = FailureSchedule.empty(3).apply(MULTI)
+    assert cfg.failure_len == 0
+    assert cfg.failure_array().shape == (3, 0, 2)
+
+
+def test_config_validation_names_the_problem():
+    with pytest.raises(ValueError, match="expected 3 .* window lists"):
+        _ = dataclasses.replace(MULTI, failure_schedule=ALL_UP_1).failure_len
+    ragged = (((0.0, 0.0), (1.0, 2.0)), ((0.0, 0.0),), ((0.0, 0.0),))
+    with pytest.raises(ValueError, match="differ in length"):
+        _ = dataclasses.replace(MULTI, failure_schedule=ragged).failure_len
+
+
+def test_failure_json_roundtrip(tmp_path):
+    fs = (FailureSchedule.empty(2)
+          .link_outage(0, 1_000.0, 2_000.0)
+          .link_outage(1, 3_000.0, 4_500.0))
+    p = tmp_path / "outages.json"
+    save_failure_json(p, fs)
+    back = load_failure_json(p)
+    assert back == fs
+
+
+def test_failure_json_errors_name_the_edge(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps(
+        {"edges": [{"windows": [[0.0, 5.0]]}, {"windows": [[1.0]]}]}))
+    with pytest.raises(ValueError, match="edge 1"):
+        load_failure_json(p)
+    p.write_text(json.dumps({"edges": [{"windows": [[5.0, 2.0]]}]}))
+    with pytest.raises(ValueError, match="up_at_us must be > down_at_us"):
+        load_failure_json(p)
+
+
+# ---------------------------------------------------------------------------
+# All-up bit-identity: an armed schedule whose windows never fire must not
+# perturb a single bit of the goldens (seq + batch), and at L > 1 the
+# schedule-free and all-up programs must agree on every shared trace key.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_all_up_identity_vs_goldens(golden, scheme):
+    cfg = NetConfig(distance_km=100.0, failure_schedule=ALL_UP_1)
+    wl = congestion_workload(num_inter=4, num_intra=4,
+                             burst_start_us=3_000.0, burst_len_us=4_000.0,
+                             horizon_us=10_000.0)
+    final, traces = simulate(cfg, wl, get_scheme(scheme), 10_000.0)
+    golden_keys = {k.rsplit("/", 1)[1] for k in golden.files
+                   if k.startswith(f"seq/{scheme}/traces/")}
+    assert golden_keys <= set(traces)
+    assert set(traces) - golden_keys <= FAIL_EXTRA_KEYS
+    for k in golden_keys:
+        np.testing.assert_array_equal(
+            golden[f"seq/{scheme}/traces/{k}"], np.asarray(traces[k]),
+            err_msg=f"{scheme}/{k} diverged bit-for-bit under an all-up "
+                    f"failure schedule")
+    for k in ("sent", "acked", "delivered", "done_at_us"):
+        np.testing.assert_array_equal(
+            golden[f"seq/{scheme}/final/{k}"],
+            np.asarray(getattr(final, k)),
+            err_msg=f"{scheme} final.{k} diverged under all-up schedule")
+    # the no-op windows are visibly armed: every step reports 1.0 live
+    assert np.all(np.asarray(traces["fail_live"]) == 1.0)
+
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_all_up_identity_batched(golden, scheme):
+    cfgs = [NetConfig(distance_km=d, failure_schedule=ALL_UP_1)
+            for d in (1.0, 300.0)]
+    final, traces = simulate_batch(cfgs, WL, get_scheme(scheme), 8_000.0)
+    keys = {k.rsplit("/", 1)[1] for k in golden.files
+            if k.startswith(f"batch/{scheme}/traces/")}
+    for k in keys:
+        np.testing.assert_array_equal(
+            golden[f"batch/{scheme}/traces/{k}"], np.asarray(traces[k]),
+            err_msg=f"batched {scheme}/{k} diverged under all-up schedule")
+    np.testing.assert_array_equal(
+        golden[f"batch/{scheme}/final/delivered"],
+        np.asarray(final.delivered))
+
+
+def test_all_up_multilink_matches_no_schedule():
+    """At L=3 the all-up program agrees with the schedule-free program on
+    every shared trace key and the final state, bit for bit."""
+    fs = FailureSchedule(3, (((0.0, 0.0),),) * 3)
+    cfg_up = fs.apply(MULTI)
+    sch = get_scheme("dcqcn")
+    f0, t0 = simulate(MULTI, SWL, sch, 3_000.0)
+    f1, t1 = simulate(cfg_up, SWL, sch, 3_000.0)
+    assert set(t0) <= set(t1)
+    for k in t0:
+        np.testing.assert_array_equal(np.asarray(t0[k]), np.asarray(t1[k]),
+                                      err_msg=k)
+    np.testing.assert_array_equal(np.asarray(f0.delivered),
+                                  np.asarray(f1.delivered))
+
+
+# ---------------------------------------------------------------------------
+# Outage physics: dump-at-exit byte accounting, reroute, all-dead stall
+# ---------------------------------------------------------------------------
+
+def test_outage_dumps_and_repairs_with_conservation():
+    """A dead link's in-flight bytes land in ``lost``, ride the
+    notification ring home, and are retransmitted — conservation holds
+    through the whole outage (the subsystem's core accounting pin)."""
+    cfg = _outage_cfg(600.0, 2_000.0)
+    _, tr = simulate(cfg, SWL, get_scheme("dcqcn"), 4_000.0)
+    lost = float(np.asarray(tr["chan_lost"]).sum())
+    retx = float(np.asarray(tr["chan_retx"]).sum())
+    assert lost > 0, "outage caught no bytes in flight"
+    assert retx > 0
+    assert float(np.asarray(tr["cons_err"]).max()) < 1e-3
+    # the live-mask trace shades the window: link 0 down strictly inside
+    # (600, 2000) us, siblings up throughout (dt = 5 us -> steps 120..399)
+    live = np.asarray(tr["fail_live"])                    # [T, L]
+    assert np.all(live[:, 1:] == 1.0)
+    assert np.all(live[125:395, 0] == 0.0)
+    assert np.all(live[:115, 0] == 1.0) and np.all(live[405:, 0] == 1.0)
+
+
+@pytest.mark.parametrize("scheme", ("dcqcn", "rdmacell"))
+def test_reroute_shifts_spray_onto_survivors(scheme):
+    """During the outage the dead link transmits nothing while the
+    surviving links keep carrying traffic — the ``link_live`` reroute
+    contract, for the default hook and rdmacell's token spray."""
+    cfg = _outage_cfg(600.0, 2_000.0)
+    _, tr = simulate(cfg, SWL, get_scheme(scheme), 4_000.0)
+    tx = np.asarray(tr["link_tx"])                        # [T, L]
+    down = slice(125, 395)
+    assert float(tx[down, 0].sum()) == 0.0, \
+        f"{scheme} sprayed bytes onto a dead link"
+    assert float(tx[down, 1].sum()) > 0.0
+    assert float(tx[down, 2].sum()) > 0.0
+    assert float(tx[:115, 0].sum()) > 0.0                 # alive before
+
+
+def test_all_links_down_stalls_without_nans():
+    """Every link dead: flows stall (zero throughput, bytes wait at the
+    source) and NOTHING goes non-finite — the spray renormalization must
+    not divide by zero (the NaN-safety pin)."""
+    fs = FailureSchedule.empty(3)
+    for li in range(3):
+        fs = fs.link_outage(li, 600.0, 1_500.0)
+    cfg = fs.apply(MULTI)
+    final, tr = simulate(cfg, SWL, get_scheme("matchrdma"), 3_000.0)
+    for k, v in tr.items():
+        assert np.isfinite(np.asarray(v)).all(), f"non-finite {k}"
+    thr = np.asarray(tr["thr_inter"])
+    assert float(thr[150:280].sum()) == 0.0               # fully stalled
+    assert float(thr[:110].sum()) > 0.0
+    assert np.isfinite(np.asarray(final.sent)).all()
+    assert float(np.asarray(tr["cons_err"]).max()) < 1e-3
+
+
+def test_batch_path_keeps_failure_trace_keys():
+    """Regression: ``batch_template`` resets ``failure_schedule``, so the
+    batched program must gate the failure machinery on the traced
+    ``fail_windows`` leaf SHAPE — single-cell and batched runs expose the
+    same trace-key set, and metric rows carry the channel columns."""
+    cfg = _outage_cfg(600.0, 2_000.0)
+    _, t1 = simulate(cfg, SWL, get_scheme("dcqcn"), 3_000.0,
+                     trace_mode="decimate", decimate=4)
+    _, tb = simulate_batch([cfg], [SWL], get_scheme("dcqcn"), 3_000.0,
+                           trace_mode="decimate", decimate=4)
+    assert sorted(t1) == sorted(tb)
+    assert "fail_live" in tb and "chan_lost" in tb
+    rows = run_experiment_batch([cfg], SWL, "dcqcn", 3_000.0,
+                                trace_mode="metrics")
+    assert np.isfinite(rows[0]["goodput_gbps"])
+    assert rows[0]["retx_frac"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Live-mask property: for EVERY registered scheme, route weights under an
+# arbitrary live-mask (including all-dead) stay finite, non-negative, and
+# zero on dead links — and the skeleton's renormalization stays NaN-free.
+# ---------------------------------------------------------------------------
+
+_ROUTE_FIXTURES = {}
+
+
+def _route_fixture(scheme_name):
+    if scheme_name not in _ROUTE_FIXTURES:
+        scheme = get_scheme(scheme_name)
+        wlp = SWL.params()
+        step = fluid.make_step_fn(MULTI, wlp, scheme)
+        state = fluid.init_state(MULTI, int(wlp.is_inter.shape[0]),
+                                 scheme=scheme)
+        _ROUTE_FIXTURES[scheme_name] = (scheme, step.ctx, state)
+    return _ROUTE_FIXTURES[scheme_name]
+
+
+@settings(max_examples=25, deadline=None)
+@given(scheme_name=st.sampled_from(ALL_SCHEMES),
+       live_bits=st.integers(min_value=0, max_value=7),
+       route_bits=st.integers(min_value=1, max_value=7),
+       scale=st.floats(min_value=0.01, max_value=100.0))
+def test_route_weights_live_mask_property(scheme_name, live_bits,
+                                          route_bits, scale):
+    import jax.numpy as jnp
+    scheme, ctx, state = _route_fixture(scheme_name)
+    live = np.array([(live_bits >> i) & 1 for i in range(3)], np.float32)
+    route_row = np.array([(route_bits >> i) & 1 for i in range(3)],
+                         np.float32) * scale
+    f = int(ctx.is_inter.shape[0])
+    base = jnp.asarray(np.tile(route_row, (f, 1)))
+    w = np.asarray(scheme.route_weights(
+        ctx._replace(link_live=jnp.asarray(live)), state, base))
+    assert np.isfinite(w).all(), (scheme_name, live_bits)
+    assert (w >= 0.0).all(), (scheme_name, live_bits)
+    assert np.all(w[:, live == 0.0] == 0.0), \
+        f"{scheme_name} routed weight onto a dead link"
+    # the skeleton's renormalization on these weights is NaN-free even
+    # when a row is all-zero (all routable links dead -> the flow stalls)
+    s = w.sum(axis=1, keepdims=True)
+    share = np.where(s > 0.0, w / np.maximum(s, 1e-30), 0.0)
+    assert np.isfinite(share).all()
+
+
+# ---------------------------------------------------------------------------
+# Hardened runner: conservation guard, finite guard, checkpoints, OOM
+# ---------------------------------------------------------------------------
+
+def test_strict_conservation_reports_coordinates():
+    """An impossibly tight tolerance turns the outage's benign float
+    residual into a ``ConservationError`` carrying grid-order (cell, step)
+    coordinates — exact step under materialized traces, ``None`` under
+    streaming metrics."""
+    cfg = _outage_cfg(600.0, 2_000.0)
+    with pytest.raises(runner.ConservationError) as ei:
+        run_experiment_batch([cfg], SWL, "dcqcn", 3_000.0,
+                             trace_mode="decimate", decimate=4,
+                             strict_conservation=True,
+                             conservation_tol=1e-12)
+    err = ei.value
+    assert err.scheme_name == "dcqcn"
+    assert err.cell == 0
+    assert err.step is not None and (err.step + 1) % 4 == 0
+    assert err.err > 1e-12
+    with pytest.raises(runner.ConservationError, match="step unknown"):
+        run_experiment_batch([cfg], SWL, "dcqcn", 3_000.0,
+                             trace_mode="metrics",
+                             strict_conservation=True,
+                             conservation_tol=1e-12)
+    # the default tolerance passes the same cell
+    rows = run_experiment_batch([cfg], SWL, "dcqcn", 3_000.0,
+                                trace_mode="decimate", decimate=4,
+                                strict_conservation=True)
+    assert len(rows) == 1
+
+
+def test_conservation_coordinate_math():
+    """Unit pin on the coordinate report: grid-order cell = launch ``lo``
+    + batch row, step = ``(j + 1) * decimate - 1`` (sample j of a
+    decimated trace is the engine value AT that step), padded rows beyond
+    ``n_real`` are ignored, metrics mode reports ``step=None``."""
+    from types import SimpleNamespace
+    cons = np.zeros((3, 5), np.float32)
+    cons[1, 2] = 7e-3                             # first real violation
+    cons[2, 0] = 9e-3                             # a PADDED row: ignored
+    aux = {"cons_err": cons}
+    with pytest.raises(runner.ConservationError) as ei:
+        runner._check_conservation("dcqcn", aux, lo=10, n_real=2,
+                                   trace_mode="decimate", decimate=4,
+                                   tol=1e-3)
+    assert (ei.value.cell, ei.value.step) == (11, 11)   # 10+1, (2+1)*4-1
+    runner._check_conservation("dcqcn", aux, lo=10, n_real=1,
+                               trace_mode="decimate", decimate=4, tol=1e-3)
+    macc = SimpleNamespace(maxes={"cons_err": np.array([0.0, 5e-3, 9e-3])})
+    with pytest.raises(runner.ConservationError) as ei:
+        runner._check_conservation("themis", macc, lo=4, n_real=2,
+                                   trace_mode="metrics", decimate=1,
+                                   tol=1e-3)
+    assert (ei.value.cell, ei.value.step) == (5, None)
+
+
+def test_nonfinite_guard_quarantines_and_raises():
+    good = {"scheme": "dcqcn", "distance_km": 10.0, "throughput_gbps": 1.0,
+            "avg_fct_us": float("inf")}          # documented sentinel: kept
+    bad = {"scheme": "dcqcn", "distance_km": 20.0,
+           "throughput_gbps": float("nan"), "peak_buffer_mb": float("inf")}
+    assert runner._guard_nonfinite([good, bad], 4, "keep") == [good, bad]
+    out = runner._guard_nonfinite([good, bad], 4, "quarantine")
+    assert out[0] is good
+    assert out[1] == {"scheme": "dcqcn", "distance_km": 20.0,
+                      "cell_index": 5, "failed": True,
+                      "nonfinite_cols": ["peak_buffer_mb",
+                                         "throughput_gbps"]}
+    with pytest.raises(RuntimeError, match="cell 5 .*peak_buffer_mb"):
+        runner._guard_nonfinite([good, bad], 4, "raise")
+    with pytest.raises(ValueError, match="on_nonfinite"):
+        run_experiment_batch([MULTI], SWL, "dcqcn", 1_000.0,
+                             trace_mode="metrics", on_nonfinite="explode")
+
+
+def test_checkpoint_resume_is_bit_identical(tmp_path):
+    """Kill a sweep mid-plan (the deterministic crash hook), resume it,
+    and get row-for-row, bit-for-bit the rows of an uninterrupted run —
+    resumed cells replay from the JSON checkpoints exactly."""
+    cfgs = [_outage_cfg(600.0, 1_200.0 + 300.0 * i) for i in range(4)]
+    kw = dict(trace_mode="metrics", chunk_cells=1)
+    ref = sweep_grid(cfgs, SWL, ("dcqcn", "matchrdma"), 2_500.0, **kw)
+    ck = str(tmp_path / "ck")
+    with pytest.raises(RuntimeError, match="abort_after_launches"):
+        sweep_grid(cfgs, SWL, ("dcqcn", "matchrdma"), 2_500.0,
+                   checkpoint_dir=ck, abort_after_launches=3, **kw)
+    assert len(os.listdir(ck)) == 3               # the finished launches
+    resumed = sweep_grid(cfgs, SWL, ("dcqcn", "matchrdma"), 2_500.0,
+                         checkpoint_dir=ck, resume=True, **kw)
+    assert len(resumed) == len(ref) == 8
+    for a, b in zip(ref, resumed):
+        assert set(a) == set(b)
+        for k, v in a.items():
+            if isinstance(v, float):
+                assert (v == b[k]
+                        or (np.isnan(v) and np.isnan(b[k]))), (k, v, b[k])
+            else:
+                assert v == b[k], k
+
+
+def test_checkpoint_fingerprint_mismatch_refuses(tmp_path):
+    ck = str(tmp_path / "ck")
+    sweep_grid([MULTI], SWL, ("dcqcn",), 1_500.0, trace_mode="metrics",
+               checkpoint_dir=ck)
+    with pytest.raises(ValueError, match="DIFFERENT launch plan"):
+        sweep_grid([MULTI], SWL, ("dcqcn",), 2_000.0, trace_mode="metrics",
+                   checkpoint_dir=ck, resume=True)
+    # a torn checkpoint (killed mid-write) is treated as absent, re-run
+    path = os.path.join(ck, os.listdir(ck)[0])
+    with open(path, "w") as f:
+        f.write('{"fingerprint": "abc", "rows": [{"thro')
+    rows = sweep_grid([MULTI], SWL, ("dcqcn",), 1_500.0,
+                      trace_mode="metrics", checkpoint_dir=ck, resume=True)
+    assert len(rows) == 1 and "throughput_gbps" in rows[0]
+
+
+def test_oom_backoff_splits_launches(monkeypatch):
+    """A device-OOM failure retries as half-size launches (down to single
+    cells), warns, and still returns every cell's row."""
+    real = runner.simulate_batch
+    calls = []
+
+    def fake(cfgs, *a, **kw):
+        calls.append(len(cfgs))
+        if len(cfgs) > 1:
+            raise RuntimeError("RESOURCE_EXHAUSTED: out of memory "
+                               "allocating 1 exabyte")
+        return real(cfgs, *a, **kw)
+
+    monkeypatch.setattr(runner, "simulate_batch", fake)
+    cfgs = [dataclasses.replace(MULTI, distance_km=d)
+            for d in (10.0, 50.0, 100.0, 200.0)]
+    with pytest.warns(RuntimeWarning, match="device OOM"):
+        rows = run_experiment_batch(cfgs, SWL, "dcqcn", 1_500.0,
+                                    trace_mode="metrics")
+    assert len(rows) == 4
+    assert all(np.isfinite(r["throughput_gbps"]) for r in rows)
+    assert max(calls) > 1 and calls.count(1) == 4
+
+
+def test_oom_backoff_gives_up_at_single_cell(monkeypatch):
+    def always_oom(cfgs, *a, **kw):
+        raise RuntimeError("RESOURCE_EXHAUSTED: out of memory")
+
+    monkeypatch.setattr(runner, "simulate_batch", always_oom)
+    with pytest.warns(RuntimeWarning, match="device OOM"), \
+            pytest.raises(RuntimeError, match="RESOURCE_EXHAUSTED"):
+        run_experiment_batch([MULTI, MULTI], SWL, "dcqcn", 1_500.0,
+                             trace_mode="metrics")
+
+
+# ---------------------------------------------------------------------------
+# The failover benchmark end to end: crash a real sweep subprocess
+# mid-plan, resume it, and pin the CSV rows against an uninterrupted run.
+# ---------------------------------------------------------------------------
+
+def _run_failover(tmp_dir, *extra):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), os.pardir,
+                                       "src"))
+    cmd = [sys.executable, "-m", "benchmarks.scheme_compare",
+           "--failover-grid", "--smoke", *extra]
+    return subprocess.run(
+        cmd, capture_output=True, text=True, env=env, timeout=600,
+        cwd=os.path.join(os.path.dirname(__file__), os.pardir))
+
+
+def _csv_rows(stdout):
+    return [ln for ln in stdout.splitlines()
+            if "," in ln and not ln.startswith("#")
+            and not ln.startswith("scheme,")]
+
+
+def test_failover_sweep_crash_then_resume_reproduces_rows(tmp_path):
+    ck = str(tmp_path / "ck")
+    crashed = _run_failover(tmp_path, "--checkpoint-dir", ck,
+                            "--crash-after-launches", "2")
+    assert crashed.returncode != 0
+    assert "abort_after_launches" in crashed.stderr
+    assert os.listdir(ck), "crash left no checkpoints behind"
+    resumed = _run_failover(tmp_path, "--checkpoint-dir", ck, "--resume")
+    assert resumed.returncode == 0, resumed.stderr[-2000:]
+    assert "SCHEME_COMPARE_FAILOVER_SMOKE_OK" in resumed.stdout
+    clean = _run_failover(tmp_path)
+    assert clean.returncode == 0, clean.stderr[-2000:]
+    rows_resumed, rows_clean = _csv_rows(resumed.stdout), \
+        _csv_rows(clean.stdout)
+    assert rows_resumed, "no CSV rows in resumed output"
+    assert rows_resumed == rows_clean, \
+        "resumed sweep's rows differ from the uninterrupted run"

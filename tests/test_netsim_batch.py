@@ -111,6 +111,8 @@ def test_stack_net_params_shapes():
     for name, leaf in zip(NetParams._fields, stacked):
         if name == "chan_schedule":
             assert leaf.shape == (len(DISTS), 1, 0, 3)  # [B, L, K=0, 3]
+        elif name == "fail_windows":
+            assert leaf.shape == (len(DISTS), 1, 0, 2)  # [B, L, W=0, 2]
         elif name.startswith("link_"):
             assert leaf.shape == (len(DISTS), 1)  # [B, L] at L=1
         else:

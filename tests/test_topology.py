@@ -126,6 +126,8 @@ def test_stacked_link_leaves_shape():
     for name, leaf in zip(NetParams._fields, stacked):
         if name == "chan_schedule":
             expect = (2, 3, 0, 3)   # [B, L, K=0, 3] — no schedule set
+        elif name == "fail_windows":
+            expect = (2, 3, 0, 2)   # [B, L, W=0, 2] — no outages set
         elif name.startswith("link_"):
             expect = (2, 3)
         else:

@@ -27,6 +27,10 @@ Four checks, all against the live code so the docs cannot silently rot:
   7. Channel-knob coverage — every ``channel_*`` ``NetConfig`` field
      (the model-choice seed and the ``trace_replay`` schedule knobs) in
      a table row of ``docs/channel-models.md``.
+  8. Failure-knob coverage — every ``failure_*`` ``NetConfig`` field and
+     every ``FailureSchedule`` constructor field in a table row of
+     ``docs/failures.md``, so adding a fault-injection knob without
+     documenting it breaks the build.
 
 Exit status is the error count (0 = clean).
 
@@ -44,6 +48,7 @@ SCHEME_API_MD = os.path.join(ROOT, "docs", "scheme-api.md")
 CHANNEL_MD = os.path.join(ROOT, "docs", "channel-models.md")
 TOPOLOGY_MD = os.path.join(ROOT, "docs", "topology.md")
 SITES_MD = os.path.join(ROOT, "docs", "sites.md")
+FAILURES_MD = os.path.join(ROOT, "docs", "failures.md")
 
 # [text](target) — excluding images' inner brackets is unnecessary here;
 # nested ![alt](img) links resolve the same way
@@ -175,6 +180,22 @@ def check_channel_knobs(errors: list) -> None:
     _check_knob_table(errors, CHANNEL_MD, knobs, "channel")
 
 
+def check_failures_table(errors: list) -> None:
+    """Every fault-injection knob — the ``failure_*`` ``NetConfig``
+    fields and the ``FailureSchedule`` constructor fields — must sit in
+    a table row of docs/failures.md. Both introspected, so a new outage
+    knob fails the lint until written up."""
+    import dataclasses
+
+    from repro.config.base import NetConfig
+    from repro.netsim.failures import FailureSchedule
+
+    knobs = sorted(f.name for f in dataclasses.fields(NetConfig)
+                   if f.name.startswith("failure_"))
+    knobs += [f.name for f in dataclasses.fields(FailureSchedule)]
+    _check_knob_table(errors, FAILURES_MD, knobs, "failure")
+
+
 def main() -> int:
     errors: list = []
     check_links(errors)
@@ -183,13 +204,14 @@ def main() -> int:
     check_topology_table(errors)
     check_sites_table(errors)
     check_channel_knobs(errors)
+    check_failures_table(errors)
     for e in errors:
         print(f"docs-check: {e}", file=sys.stderr)
     n_files = len(_md_files())
     if not errors:
         print(f"docs-check: OK ({n_files} markdown files, links + scheme "
               f"table + hook coverage + channel-model table + topology "
-              f"knobs + site-graph knobs + channel knobs)")
+              f"knobs + site-graph knobs + channel knobs + failure knobs)")
     return min(len(errors), 100)
 
 
