@@ -31,8 +31,13 @@
 #                               finite failover columns, strict conservation
 #                               through the outages, and that a site outage
 #                               collapses throughput harder than one link
+#   make bench-grad-smoke     - grad tuner vs hillclimb on a tiny tuning
+#                               cell (seconds, no json append); asserts the
+#                               grad tuner matches the hillclimb objective
+#                               with fewer simulator evaluations
 #   make docs-check           - docs lint: intra-repo links in README/docs,
-#                               scheme-table completeness, hook coverage
+#                               scheme-table completeness, hook coverage,
+#                               soft/grad knob coverage in differentiable.md
 #   make ci                   - deps + test + smokes + docs-check
 #   make bench-netsim         - batched-vs-sequential + streaming-vs-full
 #                               sweep micro-bench; appends to
@@ -47,6 +52,8 @@
 #                               appends to BENCH_netsim_sweep.json
 #   make bench-failover       - full link/site outage grid; appends to
 #                               BENCH_netsim_sweep.json
+#   make bench-grad           - full grad-tuner-vs-hillclimb comparison;
+#                               appends to BENCH_netsim_sweep.json
 
 PYTHON ?= python
 
@@ -60,7 +67,8 @@ PYTEST_W = -W "error:passing a scheme name string:DeprecationWarning:repro\.nets
 	bench-impairment bench-impairment-smoke \
 	bench-topology bench-topology-smoke \
 	bench-sites bench-sites-smoke \
-	bench-failover bench-failover-smoke docs-check
+	bench-failover bench-failover-smoke \
+	bench-grad bench-grad-smoke docs-check
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt || \
@@ -87,12 +95,15 @@ bench-sites-smoke:
 bench-failover-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --failover-grid --smoke
 
+bench-grad-smoke:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.grad_tune_bench --smoke
+
 docs-check:
 	PYTHONPATH=src $(PYTHON) tools/docs_check.py
 
 ci: deps test bench-netsim-smoke bench-scheme-compare-smoke \
 	bench-impairment-smoke bench-topology-smoke bench-sites-smoke \
-	bench-failover-smoke docs-check
+	bench-failover-smoke bench-grad-smoke docs-check
 
 bench-netsim:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.netsim_sweep_bench
@@ -111,3 +122,6 @@ bench-sites:
 
 bench-failover:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.scheme_compare --failover-grid
+
+bench-grad:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.grad_tune_bench

@@ -14,7 +14,11 @@ evaluates a whole POPULATION of candidate NetConfigs in one batched
 ``simulate_batch`` launch (the batched scenario engine as the inner loop):
 
     PYTHONPATH=src python -m benchmarks.hillclimb --cell netsim-tune \
-        --variant headroom|slot
+        --variant headroom|slot|grad|grad-slot
+
+``grad*`` variants route to the gradient tuner (``repro.netsim.grad_tune``
+— Adam through the differentiable soft-step engine, scored on the hard
+engine); the bracket variants stay the zeroth-order regression baseline.
 """
 import argparse
 import dataclasses
@@ -243,30 +247,51 @@ def _train_cell(arch, variant, grouped_moe=False, hier=None):
     return analyse(lowered, True, mf, 512, f"{arch} train_4k multi [{variant}]")
 
 
-def netsim_tune(variant: str, iters: int = 4, scheme: str = "matchrdma"):
-    """Coordinate-descent hillclimb of a netsim controller knob.
+def netsim_tune(variant: str, iters: int = 4, scheme: str = "matchrdma",
+                dists=(100.0, 1000.0), horizon_us: float = 80_000.0,
+                grad_steps: int = 8):
+    """Tune a netsim controller knob: zeroth-order bracket search (the
+    historical hillclimb — kept as the regression baseline) or the
+    gradient tuner (``--variant grad*`` — ``repro.netsim.grad_tune``).
 
-    Each iteration evaluates the full candidate population x distance grid
-    with ONE `simulate_batch` launch per scheme-free candidate batch: the
-    per-scenario knob values live in the traced ``NetParams``-backed grid,
-    so the whole population shares one compiled scan. Objective: steady
-    inter-DC throughput minus a destination-buffer penalty (the paper's
+    Zeroth-order: each iteration evaluates the full candidate population x
+    distance grid with ONE `simulate_batch` launch. Both knobs are traced
+    ``NetParams`` leaves (``slot_us`` became traced with the soft-step
+    engine), so the whole population — slot sweeps included — shares one
+    compiled scan across every iteration. Objective: steady inter-DC
+    throughput minus a destination-buffer penalty (the paper's
     throughput-vs-buffer tradeoff). ``scheme`` is resolved through the
     scheme registry, so a custom ``@register_scheme`` scheme tunes with
-    the same harness."""
+    the same harness.
+
+    Returns ``(best_knob_value, best_score, sim_evals_per_cell)`` —
+    ``sim_evals_per_cell`` is the honest per-cell simulator-evaluation
+    count the grad-vs-hillclimb bench compares on.
+    """
     from repro.config.base import NetConfig
     from repro.netsim import get_scheme, run_experiment_batch
     from repro.netsim.workload import congestion_workload
+
+    if variant.startswith("grad"):
+        # gradient path: Adam through the soft-step engine, scored hard —
+        # 2 evals per step + 1 final vs the bracket's 5 per iteration
+        from repro.netsim.grad_tune import tune
+        knob = {"grad": "budget_headroom", "grad-headroom": "budget_headroom",
+                "grad-slot": "slot_us"}[variant]
+        res = tune(knobs=(knob,), scheme=scheme, dists=dists,
+                   horizon_us=horizon_us, steps=grad_steps, verbose=True)
+        print(f"best {knob}={res.knobs[knob]:.4g} score={res.objective:.2f} "
+              f"({res.sim_evals} evals/cell)")
+        return res.knobs[knob], res.objective, res.sim_evals
 
     scheme = get_scheme(scheme)
     knob = {"headroom": "budget_headroom", "slot": "slot_us",
             "baseline": "budget_headroom"}[variant]
     lo, hi = {"budget_headroom": (0.85, 1.0),
               "slot_us": (50.0, 400.0)}[knob]
-    traced_knob = knob != "slot_us"   # slot_us fixes compiled structure
     wl = congestion_workload()
-    dists = (100.0, 1000.0)
     best = None
+    evals = 0
     center = (lo + hi) / 2.0
     span = (hi - lo) / 2.0
     for it in range(iters):
@@ -277,32 +302,22 @@ def netsim_tune(variant: str, iters: int = 4, scheme: str = "matchrdma"):
                             for f in (-1.0, -0.5, 0.0, 0.5, 1.0))
         t0 = time.time()
         scores = {}
-        if traced_knob:
-            # the knob is a traced NetParams leaf: the ENTIRE population x
-            # distance grid is one vmapped launch, and every iteration of
-            # the hillclimb reuses the same compiled program.
-            cfgs = [NetConfig(distance_km=d, **{knob: val})
-                    for val in candidates for d in dists]
-            # streaming metrics: the tuner only consumes scalar columns
-            # (p99 via the in-scan histogram), so no [B, T] trace block is
-            # ever materialized across hillclimb iterations
-            rows = run_experiment_batch(cfgs, wl, scheme, 80_000.0,
-                                        trace_mode="metrics")
-            for j, val in enumerate(candidates):
-                cell = rows[j * len(dists):(j + 1) * len(dists)]
-                thr = sum(r["throughput_gbps"] for r in cell) / len(cell)
-                buf = sum(r["p99_buffer_mb"] for r in cell) / len(cell)
-                scores[val] = thr - 0.5 * buf
-        else:
-            # structural knob (steps per slot): one batch per candidate,
-            # still vmapped over the distance grid.
-            for val in candidates:
-                cfgs = [NetConfig(distance_km=d, **{knob: val})
-                        for d in dists]
-                rows = run_experiment_batch(cfgs, wl, scheme, 80_000.0)
-                thr = sum(r["throughput_gbps"] for r in rows) / len(rows)
-                buf = sum(r["p99_buffer_mb"] for r in rows) / len(rows)
-                scores[val] = thr - 0.5 * buf
+        # both knobs are traced NetParams leaves: the ENTIRE population x
+        # distance grid is one vmapped launch, and every iteration of the
+        # hillclimb reuses the same compiled program.
+        cfgs = [NetConfig(distance_km=d, **{knob: val})
+                for val in candidates for d in dists]
+        # streaming metrics: the tuner only consumes scalar columns
+        # (p99 via the in-scan histogram), so no [B, T] trace block is
+        # ever materialized across hillclimb iterations
+        rows = run_experiment_batch(cfgs, wl, scheme, horizon_us,
+                                    trace_mode="metrics")
+        for j, val in enumerate(candidates):
+            cell = rows[j * len(dists):(j + 1) * len(dists)]
+            thr = sum(r["throughput_gbps"] for r in cell) / len(cell)
+            buf = sum(r["p99_buffer_mb"] for r in cell) / len(cell)
+            scores[val] = thr - 0.5 * buf
+        evals += len(candidates)
         val, score = max(scores.items(), key=lambda kv: kv[1])
         dt = time.time() - t0
         print(f"iter {it}: {knob}={val:.4g} score={score:.2f} "
@@ -311,7 +326,7 @@ def netsim_tune(variant: str, iters: int = 4, scheme: str = "matchrdma"):
             best = (val, score)
         center, span = val, span / 2.0
     print(f"best {knob}={best[0]:.4g} score={best[1]:.2f}")
-    return best
+    return best[0], best[1], evals
 
 
 def main():

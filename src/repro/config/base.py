@@ -277,6 +277,15 @@ class NetParams(NamedTuple):
     rdmacell_token_bucket_us: Any  # f32 — per-link token-bucket depth (µs
                                    # of that link's line rate)
     rdmacell_rob_limit_mb: Any     # f32 — dst reorder-buffer budget (MB)
+    # traced slot length (docs/differentiable.md): steps-per-slot and the
+    # control-processing delay derive from this leaf at trace time, so a
+    # slot_us sweep shares ONE compiled program (the static
+    # ``NetConfig.slot_us`` twin still sizes history rings).
+    slot_us: Any                 # f32 — MatchRDMA slot duration (µs)
+    # soft-step relaxation temperature (docs/differentiable.md): consumed
+    # only when ``NetConfig.soft_step`` is True; traced so a temperature
+    # anneal batches in one compile.
+    soft_temp: Any               # f32 — sigmoid temperature (→0 = hard)
     # per-link topology leaves ([L], L = cfg.num_paths — static):
     link_delay_us: Any           # f32[L] — per-link one-way delay
     link_cap_gbps: Any           # f32[L] — per-link line capacity
@@ -307,7 +316,8 @@ class NetParams(NamedTuple):
             cfg.sdr_window_bdp_frac, cfg.sdr_ack_coalesce_us,
             cfg.sdr_retx_budget_frac, cfg.loss_rate, cfg.loss_burst_len,
             cfg.jitter_us, cfg.flap_period_us, cfg.flap_depth,
-            cfg.rdmacell_token_bucket_us, cfg.rdmacell_rob_limit_mb))
+            cfg.rdmacell_token_bucket_us, cfg.rdmacell_rob_limit_mb,
+            cfg.slot_us, cfg.soft_temp))
         import numpy as np
         return cls(*scalars,
                    link_delay_us=jnp.asarray(
@@ -366,6 +376,7 @@ NET_TRACED_FIELDS = ("distance_km", "num_otn_links", "link_gbps",
                      "sdr_retx_budget_frac", "loss_rate", "loss_burst_len",
                      "jitter_us", "flap_period_us", "flap_depth",
                      "rdmacell_token_bucket_us", "rdmacell_rob_limit_mb",
+                     "slot_us", "soft_temp",
                      "path_delay_scale", "path_cap_frac", "path_thresh_kb",
                      "channel_schedule", "channel_schedule_dt_us",
                      "failure_schedule")
@@ -514,6 +525,18 @@ class NetConfig:
     flap_depth: float = 0.0       # long-haul capacity cut inside a dip [0,1]
     channel_seed: int = 0         # static PRNG seed of the impairment draws
                                   # (counter-based: folded with the scan step)
+
+    # Differentiable engine (docs/differentiable.md). ``soft_step`` is
+    # STATIC structure: True swaps every knob-dependent hard select in the
+    # step function for a sigmoid-tempered blend so jax.grad flows through
+    # the scan; False emits the untouched hard jaxpr the goldens pin.
+    # ``soft_temp`` is the traced temperature leaf (→ 0 recovers the hard
+    # gates); ``remat_steps`` > 0 checkpoints the metrics-mode scan in
+    # blocks of that many steps so reverse-mode AD over long horizons
+    # stays in memory (0 = off; forward values are unchanged either way).
+    soft_step: bool = False
+    soft_temp: float = 1.0
+    remat_steps: int = 0
 
     @property
     def one_way_delay_us(self) -> float:

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 
 from repro.config.base import NetConfig, NetParams
 from repro.core.estimator import RateEstimate
+# submodule import (not the package __init__), so no core<->netsim cycle
+from repro.netsim.soft import lerp, reset_gate, soft_gt
 
 
 class BudgetState(NamedTuple):
@@ -36,10 +38,22 @@ def ctrl_window_slots(cfg: NetConfig) -> int:
 
 
 def ctrl_window_slots_traced(params: NetParams, cfg: NetConfig) -> jax.Array:
-    """τ in slots from TRACED delay — the batched-engine twin of
-    ``ctrl_window_slots`` (which must stay Python-int for shape sizing)."""
+    """τ in slots from TRACED delay and TRACED slot length — the
+    batched-engine twin of ``ctrl_window_slots`` (which must stay
+    Python-int for shape sizing). Since the slot length became the traced
+    ``NetParams.slot_us`` leaf, a ``slot_us`` sweep shares one compile."""
     return jnp.maximum(
-        jnp.ceil(2.0 * params.one_way_delay_us / cfg.slot_us) + 1.0, 4.0)
+        jnp.ceil(2.0 * params.one_way_delay_us / params.slot_us) + 1.0, 4.0)
+
+
+def control_proc_steps_traced(cfg: NetConfig, params: NetParams) -> jax.Array:
+    """Traced twin of ``NetConfig.control_proc_steps`` (int32). Uses
+    ``jnp.floor`` to reproduce the static property's ``int()`` truncation
+    exactly at matching slot values; rings are SIZED with the static
+    padding, this traced count only sets the wrap index."""
+    return jnp.floor(
+        cfg.control_proc_slots * params.slot_us / cfg.dt_us
+    ).astype(jnp.int32)
 
 
 def init_budget(cfg: NetConfig, params: NetParams = None) -> BudgetState:
@@ -55,7 +69,8 @@ def init_budget(cfg: NetConfig, params: NetParams = None) -> BudgetState:
 
 def update_budget(state: BudgetState, est: RateEstimate, cnp_in_slot: jax.Array,
                   cong_recent: jax.Array, cfg: NetConfig,
-                  ctrl_slots=1, params: NetParams = None) -> BudgetState:
+                  ctrl_slots=1, params: NetParams = None,
+                  soft=None) -> BudgetState:
     """Per-slot budget update at the destination OTN.
 
     Two regimes (the rate-*matched* principle):
@@ -68,54 +83,97 @@ def update_budget(state: BudgetState, est: RateEstimate, cnp_in_slot: jax.Array,
         bytes at the destination buffer (Eq. 1).
     ``tighten`` decays multiplicatively on CNP-heavy slots (reactive path)
     and recovers slowly when clear.
+
+    ``soft`` (docs/differentiable.md): None emits the hard machine above;
+    a traced temperature replaces every threshold select with a
+    sigmoid-tempered blend so jax.grad flows through the controller.
     """
     if params is None:
         params = NetParams.of(cfg)
     cap = params.otn_capacity_gbps * 1e9 / 8.0
     floor = params.budget_floor_mbps * 1e6 / 8.0
-    congested = cnp_in_slot > cfg.cnp_freq_thresh
-    tighten = jnp.where(congested,
-                        jnp.maximum(state.tighten * 0.95, 0.7),
-                        jnp.minimum(state.tighten * 1.02, 1.0))
+    if soft is None:
+        congested = cnp_in_slot > cfg.cnp_freq_thresh
+        tighten = jnp.where(congested,
+                            jnp.maximum(state.tighten * 0.95, 0.7),
+                            jnp.minimum(state.tighten * 1.02, 1.0))
+    else:
+        w_cong = soft_gt(cnp_in_slot, cfg.cnp_freq_thresh, soft, 0.25)
+        tighten = lerp(w_cong,
+                       jnp.maximum(state.tighten * 0.95, 0.7),
+                       jnp.minimum(state.tighten * 1.02, 1.0))
 
     # sticky EWMA capability: fold in fresh busy-slot measurements, keep the
     # last known value otherwise (ring rotation must not amnesia the budget).
-    fresh = est.have_capability > 0
-    cap_ewma = jnp.where(
-        fresh,
-        jnp.where(state.have_cap > 0,
-                  0.8 * state.cap_ewma + 0.2 * est.capability,
-                  est.capability),
-        state.cap_ewma)
+    # In soft mode ``est.have_capability`` is itself a gate weight in [0,1]
+    # and ``state.have_cap`` its running max — blend with them directly.
+    if soft is None:
+        fresh = est.have_capability > 0
+        cap_ewma = jnp.where(
+            fresh,
+            jnp.where(state.have_cap > 0,
+                      0.8 * state.cap_ewma + 0.2 * est.capability,
+                      est.capability),
+            state.cap_ewma)
+    else:
+        w_fresh = est.have_capability
+        w_have = soft_gt(state.have_cap, 0.5, soft, 0.25)
+        cap_ewma = lerp(
+            w_fresh,
+            lerp(w_have, 0.8 * state.cap_ewma + 0.2 * est.capability,
+                 est.capability),
+            state.cap_ewma)
     have_cap = jnp.maximum(state.have_cap, est.have_capability)
 
     # match to demonstrated forwarding CAPABILITY, never to self-throttled
     # egress; fall back to the plain slot-weighted estimate early on.
-    cap_rate = jnp.where(have_cap > 0, cap_ewma, est.rate)
+    if soft is None:
+        cap_rate = jnp.where(have_cap > 0, cap_ewma, est.rate)
+    else:
+        w_havenew = soft_gt(have_cap, 0.5, soft, 0.25)
+        cap_rate = lerp(w_havenew, cap_ewma, est.rate)
     matched = params.budget_headroom * cap_rate * tighten
 
-    constrained = cong_recent > 0.02
-    slots_clear = jnp.where(constrained, 0.0, state.slots_clear + 1.0)
-    raise_now = slots_clear >= ctrl_slots
-    # a full clear control window at the current rate is itself capability
-    # evidence: the destination absorbed the recent egress cleanly. Ratchet
-    # the capability up to it so the probe ceiling cannot deadlock below the
-    # true forwarding capability.
-    cap_ewma = jnp.where(raise_now & (have_cap > 0),
-                         jnp.maximum(cap_ewma, est.rate), cap_ewma)
-    # gentle probe once capability is known; ×2 slow-start before — but never
-    # blind-probe above 1.1× the destination's own egress-port speed (known
-    # at flow setup): that bound is physical.
     declared = params.dst_dc_gbps * 1e9 / 8.0
-    ceiling = jnp.minimum(
-        1.1 * jnp.where(have_cap > 0, cap_ewma, declared), cap)
-    factor = jnp.where(have_cap > 0, cfg.budget_probe, 2.0)
-    open_up = jnp.where(raise_now,
-                        jnp.minimum(state.budget * factor, ceiling),
-                        state.budget)
-    slots_clear = jnp.where(raise_now, 0.0, slots_clear)
-
-    budget = jnp.clip(jnp.where(constrained, matched, open_up), floor, cap)
+    if soft is None:
+        constrained = cong_recent > 0.02
+        slots_clear = jnp.where(constrained, 0.0, state.slots_clear + 1.0)
+        raise_now = slots_clear >= ctrl_slots
+        # a full clear control window at the current rate is itself
+        # capability evidence: the destination absorbed the recent egress
+        # cleanly. Ratchet the capability up to it so the probe ceiling
+        # cannot deadlock below the true forwarding capability.
+        cap_ewma = jnp.where(raise_now & (have_cap > 0),
+                             jnp.maximum(cap_ewma, est.rate), cap_ewma)
+        # gentle probe once capability is known; ×2 slow-start before — but
+        # never blind-probe above 1.1× the destination's own egress-port
+        # speed (known at flow setup): that bound is physical.
+        ceiling = jnp.minimum(
+            1.1 * jnp.where(have_cap > 0, cap_ewma, declared), cap)
+        factor = jnp.where(have_cap > 0, cfg.budget_probe, 2.0)
+        open_up = jnp.where(raise_now,
+                            jnp.minimum(state.budget * factor, ceiling),
+                            state.budget)
+        slots_clear = jnp.where(raise_now, 0.0, slots_clear)
+        budget = jnp.clip(jnp.where(constrained, matched, open_up),
+                          floor, cap)
+    else:
+        w_con = soft_gt(cong_recent, 0.02, soft, 0.02)
+        # slots_clear is a phase counter: its own resets take the DETACHED
+        # gate (soft.reset_gate) — knob gradients still reach w_raise
+        # through the traced ctrl_slots threshold
+        slots_clear = lerp(reset_gate(w_con), 0.0, state.slots_clear + 1.0)
+        w_raise = soft_gt(slots_clear, ctrl_slots, soft, 1.0)
+        cap_ewma = lerp(w_raise * w_havenew,
+                        jnp.maximum(cap_ewma, est.rate), cap_ewma)
+        ceiling = jnp.minimum(
+            1.1 * lerp(w_havenew, cap_ewma, declared), cap)
+        factor = lerp(w_havenew, jnp.float32(cfg.budget_probe), 2.0)
+        open_up = lerp(w_raise,
+                       jnp.minimum(state.budget * factor, ceiling),
+                       state.budget)
+        slots_clear = lerp(reset_gate(w_raise), 0.0, slots_clear)
+        budget = jnp.clip(lerp(w_con, matched, open_up), floor, cap)
     return BudgetState(budget=budget, tighten=tighten,
                        slots_clear=slots_clear,
                        cap_ewma=cap_ewma, have_cap=have_cap)

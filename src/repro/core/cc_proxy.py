@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import NetConfig
+# submodule import (not the package __init__), so no core<->netsim cycle
+from repro.netsim.soft import lerp, reset_gate, soft_gt, soft_or
 
 _F = 5  # fast-recovery stage count
 
@@ -57,6 +59,7 @@ def step_dcqcn(
     cfg: NetConfig,
     *,
     rtt_scale: jax.Array = None,   # [F] THEMIS fairness factor (None = 1)
+    soft=None,                     # traced temperature (None = hard machine)
 ) -> DcqcnState:
     dt = cfg.dt_us
     g = cfg.dcqcn_g
@@ -66,48 +69,92 @@ def step_dcqcn(
     if rtt_scale is None:
         rtt_scale = jnp.ones_like(state.rc)
 
-    cut = cnp > 0
     # --- rate cut on CNP (THEMIS: attenuate for long-RTT flows) ---
     alpha_eff = state.alpha / rtt_scale
     rc_cut = jnp.maximum(state.rc * (1.0 - alpha_eff / 2.0), rmin)
     rt_cut = state.rc
     alpha_cut = (1.0 - g) * state.alpha + g
 
-    # --- alpha decay timer ---
     t_alpha = state.t_alpha + dt
-    alpha_dec = t_alpha >= cfg.dcqcn_alpha_timer_us
-    alpha_no = jnp.where(alpha_dec, (1.0 - g) * state.alpha, state.alpha)
-    t_alpha_no = jnp.where(alpha_dec, 0.0, t_alpha)
-
-    # --- rate increase events (timer and byte counter) ---
     t_rate = state.t_rate + dt
     bytes_ctr = state.bytes_ctr + sent_bytes
-    timer_fire = t_rate >= cfg.dcqcn_rate_timer_us
-    byte_fire = bytes_ctr >= cfg.dcqcn_bytes_counter_mb * 1e6
-    fire = timer_fire | byte_fire
-    stage_t = jnp.where(timer_fire, state.stage_t + 1, state.stage_t)
-    stage_b = jnp.where(byte_fire, state.stage_b + 1, state.stage_b)
+
+    if soft is None:
+        cut = cnp > 0
+        # --- alpha decay timer ---
+        alpha_dec = t_alpha >= cfg.dcqcn_alpha_timer_us
+        alpha_no = jnp.where(alpha_dec, (1.0 - g) * state.alpha, state.alpha)
+        t_alpha_no = jnp.where(alpha_dec, 0.0, t_alpha)
+
+        # --- rate increase events (timer and byte counter) ---
+        timer_fire = t_rate >= cfg.dcqcn_rate_timer_us
+        byte_fire = bytes_ctr >= cfg.dcqcn_bytes_counter_mb * 1e6
+        fire = timer_fire | byte_fire
+        stage_t = jnp.where(timer_fire, state.stage_t + 1, state.stage_t)
+        stage_b = jnp.where(byte_fire, state.stage_b + 1, state.stage_b)
+        max_stage = jnp.maximum(stage_t, stage_b)
+
+        hyper = (stage_t > _F) & (stage_b > _F)
+        additive = (max_stage > _F) & ~hyper
+        inc = jnp.where(hyper, rhai, jnp.where(additive, rai, 0.0)) * rtt_scale
+        rt_inc = jnp.where(fire, state.rt + inc, state.rt)
+        rc_inc = jnp.where(fire, 0.5 * (state.rc + rt_inc), state.rc)
+
+        # --- merge: cut dominates ---
+        rc = jnp.where(cut, rc_cut, rc_inc)
+        rt = jnp.where(cut, rt_cut, rt_inc)
+        alpha = jnp.where(cut, alpha_cut, alpha_no)
+        return DcqcnState(
+            rc=jnp.clip(rc, rmin, None),
+            rt=rt,
+            alpha=jnp.clip(alpha, 0.0, 1.0),
+            t_alpha=jnp.where(cut, 0.0, t_alpha_no),
+            t_rate=jnp.where(cut | fire, 0.0, t_rate),
+            bytes_ctr=jnp.where(cut | byte_fire, 0.0, bytes_ctr),
+            stage_t=jnp.where(cut, 0.0, stage_t),
+            stage_b=jnp.where(cut, 0.0, stage_b),
+        )
+
+    # --- soft machine (docs/differentiable.md): every gate a tempered
+    # sigmoid, every select a lerp; converges to the hard machine above as
+    # soft -> 0. CNPs are fractional in soft mode, so the cut gate sits at
+    # the 0.5 midpoint.
+    w_cut = soft_gt(cnp, 0.5, soft, 0.25)
+    w_adec = soft_gt(t_alpha, cfg.dcqcn_alpha_timer_us, soft, dt)
+    alpha_no = lerp(w_adec, (1.0 - g) * state.alpha, state.alpha)
+    # timer/counter/stage resets use the DETACHED gate: the timer phase is
+    # cadence structure, and the undetached reset recurrence's Jacobian
+    # exceeds 1 near the firing equilibrium (soft.reset_gate docstring)
+    t_alpha_no = lerp(reset_gate(w_adec), 0.0, t_alpha)
+
+    w_tfire = soft_gt(t_rate, cfg.dcqcn_rate_timer_us, soft, dt)
+    w_bfire = soft_gt(bytes_ctr, cfg.dcqcn_bytes_counter_mb * 1e6, soft,
+                      0.01 * cfg.dcqcn_bytes_counter_mb * 1e6)
+    w_fire = soft_or(w_tfire, w_bfire)
+    stage_t = state.stage_t + w_tfire
+    stage_b = state.stage_b + w_bfire
     max_stage = jnp.maximum(stage_t, stage_b)
 
-    hyper = (stage_t > _F) & (stage_b > _F)
-    additive = (max_stage > _F) & ~hyper
-    inc = jnp.where(hyper, rhai, jnp.where(additive, rai, 0.0)) * rtt_scale
-    rt_inc = jnp.where(fire, state.rt + inc, state.rt)
-    rc_inc = jnp.where(fire, 0.5 * (state.rc + rt_inc), state.rc)
+    w_hyper = soft_gt(stage_t, float(_F), soft, 0.5) \
+        * soft_gt(stage_b, float(_F), soft, 0.5)
+    w_add = soft_gt(max_stage, float(_F), soft, 0.5) * (1.0 - w_hyper)
+    inc = (w_hyper * rhai + w_add * rai) * rtt_scale
+    rt_inc = lerp(w_fire, state.rt + inc, state.rt)
+    rc_inc = lerp(w_fire, 0.5 * (state.rc + rt_inc), state.rc)
 
-    # --- merge: cut dominates ---
-    rc = jnp.where(cut, rc_cut, rc_inc)
-    rt = jnp.where(cut, rt_cut, rt_inc)
-    alpha = jnp.where(cut, alpha_cut, alpha_no)
+    rc = lerp(w_cut, rc_cut, rc_inc)
+    rt = lerp(w_cut, rt_cut, rt_inc)
+    alpha = lerp(w_cut, alpha_cut, alpha_no)
+    w_cut_d = reset_gate(w_cut)
     return DcqcnState(
         rc=jnp.clip(rc, rmin, None),
         rt=rt,
         alpha=jnp.clip(alpha, 0.0, 1.0),
-        t_alpha=jnp.where(cut, 0.0, t_alpha_no),
-        t_rate=jnp.where(cut | fire, 0.0, t_rate),
-        bytes_ctr=jnp.where(cut | byte_fire, 0.0, bytes_ctr),
-        stage_t=jnp.where(cut, 0.0, stage_t),
-        stage_b=jnp.where(cut, 0.0, stage_b),
+        t_alpha=lerp(w_cut_d, 0.0, t_alpha_no),
+        t_rate=lerp(reset_gate(soft_or(w_cut, w_fire)), 0.0, t_rate),
+        bytes_ctr=lerp(reset_gate(soft_or(w_cut, w_bfire)), 0.0, bytes_ctr),
+        stage_t=lerp(w_cut_d, 0.0, stage_t),
+        stage_b=lerp(w_cut_d, 0.0, stage_b),
     )
 
 

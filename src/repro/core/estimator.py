@@ -25,6 +25,8 @@ import jax.numpy as jnp
 
 from repro.config.base import NetConfig
 from repro.core.slots import SlotRing, ordered_history
+# submodule import (not the package __init__), so no core<->netsim cycle
+from repro.netsim.soft import lerp, soft_gt, soft_pos
 
 _EPS = 1e-9
 
@@ -38,8 +40,13 @@ class RateEstimate(NamedTuple):
 
 
 def window_stats(rates: jax.Array, congested: jax.Array, busy: jax.Array,
-                 valid: jax.Array, slots_per_window: int):
-    """Reshape oldest-first history into windows; per-window mean/CV/flags."""
+                 valid: jax.Array, slots_per_window: int, soft=None):
+    """Reshape oldest-first history into windows; per-window mean/CV/flags.
+
+    ``soft`` only swaps the std for an epsilon-regularized sqrt(var): at a
+    constant (e.g. all-zero) window ``jnp.std`` has an infinite derivative
+    and its JVP yields NaN tangents — the hard value is unchanged to ~1e-6
+    and the hard path keeps the exact historical expression."""
     r = rates.shape[0]
     nw = r // slots_per_window
     cut = nw * slots_per_window
@@ -49,19 +56,31 @@ def window_stats(rates: jax.Array, congested: jax.Array, busy: jax.Array,
     vw = valid[:cut].reshape(nw, slots_per_window)
     w_valid = vw.min(axis=1)                                  # window fully valid
     mean = rw.mean(axis=1)
-    std = rw.std(axis=1)
+    if soft is None:
+        std = rw.std(axis=1)
+    else:
+        std = jnp.sqrt(rw.var(axis=1) + 1e-12)
     cv = std / jnp.maximum(mean, _EPS)
     cong = cw.max(axis=1)
     busy_frac = bw.mean(axis=1)
     return mean, cv, cong, busy_frac, w_valid
 
 
-def slot_weighted_estimate(ring: SlotRing, cfg: NetConfig) -> RateEstimate:
+def slot_weighted_estimate(ring: SlotRing, cfg: NetConfig,
+                           soft=None) -> RateEstimate:
     rates, congested, busy, valid = ordered_history(ring)
     mean, cv, cong, busy_frac, w_valid = window_stats(
-        rates, congested, busy, valid, cfg.slots_per_window)
-    stable = ((cv < cfg.stable_cv_thresh) & (cong < 0.5)).astype(jnp.float32)
-    w = jnp.where(stable > 0, cfg.stable_weight, cfg.jitter_weight) * w_valid
+        rates, congested, busy, valid, cfg.slots_per_window, soft=soft)
+    if soft is None:
+        stable = ((cv < cfg.stable_cv_thresh)
+                  & (cong < 0.5)).astype(jnp.float32)
+        w = jnp.where(stable > 0, cfg.stable_weight,
+                      cfg.jitter_weight) * w_valid
+    else:
+        stable = (soft_gt(cfg.stable_cv_thresh, cv, soft, 0.05)
+                  * soft_gt(0.5, cong, soft, 0.25))
+        w = lerp(stable, jnp.float32(cfg.stable_weight),
+                 jnp.float32(cfg.jitter_weight)) * w_valid
     # recency weighting: newer windows count more (linear ramp 0.5 .. 1.0)
     nw = mean.shape[0]
     recency = 0.5 + 0.5 * (jnp.arange(nw) + 1) / nw
@@ -74,7 +93,11 @@ def slot_weighted_estimate(ring: SlotRing, cfg: NetConfig) -> RateEstimate:
     # destination's demonstrated drain capability; clear slots only lower-
     # bound it (egress == demand there). Stability weighting still applies.
     wcap = w * busy_frac
-    have_cap = (jnp.sum(wcap) > _EPS).astype(jnp.float32)
+    if soft is None:
+        have_cap = (jnp.sum(wcap) > _EPS).astype(jnp.float32)
+    else:
+        # soft_pos is exactly 0 at 0 — no busy slot ever => no capability
+        have_cap = soft_pos(jnp.sum(wcap) - _EPS, soft, 0.25)
     cap = jnp.sum(wcap * mean) / jnp.maximum(jnp.sum(wcap), _EPS)
     return RateEstimate(rate=est, stable_frac=stable_frac,
                         recurrent=jnp.float32(0.0),
@@ -82,7 +105,7 @@ def slot_weighted_estimate(ring: SlotRing, cfg: NetConfig) -> RateEstimate:
 
 
 def periodic_estimate(ring: SlotRing, cfg: NetConfig,
-                      period_slots: int) -> RateEstimate:
+                      period_slots: int, soft=None) -> RateEstimate:
     """Seasonal forecast keyed to the LLM iteration period.
 
     If the latest ``slots_per_window`` slots match the same-phase window one
@@ -90,7 +113,7 @@ def periodic_estimate(ring: SlotRing, cfg: NetConfig,
     rates that FOLLOWED that historical window; else fall back to the
     slot-weighted estimate.
     """
-    base = slot_weighted_estimate(ring, cfg)
+    base = slot_weighted_estimate(ring, cfg, soft=soft)
     rates, congested, busy, valid = ordered_history(ring)
     r = rates.shape[0]
     spw = cfg.slots_per_window
@@ -104,11 +127,19 @@ def periodic_estimate(ring: SlotRing, cfg: NetConfig,
 
     denom = jnp.maximum(jnp.abs(cur).mean(), _EPS)
     rel = jnp.abs(cur - hist).mean() / denom
-    match = (rel < cfg.stable_cv_thresh) & (cur_valid.min() > 0)
     forecast = nxt.mean()
-    # blend: recurrent forecast replaces the base estimate when it fires
-    rate = jnp.where(match, forecast, base.rate)
+    if soft is None:
+        match = (rel < cfg.stable_cv_thresh) & (cur_valid.min() > 0)
+        # blend: recurrent forecast replaces the base estimate when it fires
+        rate = jnp.where(match, forecast, base.rate)
+        recurrent = match.astype(jnp.float32)
+    else:
+        # the validity mask is count-driven (no knob dependence): keep it
+        # a hard multiplier; only the similarity gate is tempered
+        w_valid = (cur_valid.min() > 0).astype(jnp.float32)
+        recurrent = soft_gt(cfg.stable_cv_thresh, rel, soft, 0.05) * w_valid
+        rate = lerp(recurrent, forecast, base.rate)
     return RateEstimate(rate=rate, stable_frac=base.stable_frac,
-                        recurrent=match.astype(jnp.float32),
+                        recurrent=recurrent,
                         capability=base.capability,
                         have_capability=base.have_capability)

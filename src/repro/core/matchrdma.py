@@ -25,8 +25,9 @@ import jax.numpy as jnp
 
 from repro.config.base import NetConfig, NetParams
 from repro.core.budget import (
-    BudgetState, ControlChannel, channel_send_recv, ctrl_window_slots,
-    ctrl_window_slots_traced, init_budget, init_channel, update_budget,
+    BudgetState, ControlChannel, channel_send_recv, control_proc_steps_traced,
+    ctrl_window_slots, ctrl_window_slots_traced, init_budget, init_channel,
+    update_budget,
 )
 from repro.core.estimator import periodic_estimate, slot_weighted_estimate
 from repro.core.pseudo_ack import PseudoAckState, init_pseudo_ack
@@ -71,7 +72,10 @@ def init_matchrdma(cfg: NetConfig, num_flows: int,
     if params is None:
         actual_delay = chan_delay_pad
     else:
-        actual_delay = params.delay_steps(cfg.dt_us) + proc_steps
+        # traced slot length => traced processing delay (the ring SIZE
+        # stays the static chan_delay_pad; this only sets the wrap index)
+        actual_delay = (params.delay_steps(cfg.dt_us)
+                        + control_proc_steps_traced(cfg, params))
     budget0 = init_budget(cfg, params)
     st = MatchRdmaState(
         ring=init_ring(history_slots),
@@ -125,10 +129,21 @@ def step_channel(state: MatchRdmaState, summary: jax.Array = None) -> MatchRdmaS
 
 def slot_update(state: MatchRdmaState, cfg: NetConfig,
                 period_slots: int = 0,
-                params: NetParams = None) -> MatchRdmaState:
-    """Run at each slot boundary: classify, estimate, regenerate budget."""
-    slot_s = cfg.slot_us * 1e-6
-    steps_per_slot = max(int(round(cfg.slot_us / cfg.dt_us)), 1)
+                params: NetParams = None, soft=None) -> MatchRdmaState:
+    """Run at each slot boundary: classify, estimate, regenerate budget.
+
+    With ``params`` the slot length is the TRACED ``params.slot_us`` leaf
+    (a ``slot_us`` sweep shares one compiled program); without it the
+    static ``cfg.slot_us`` twin is used. ``soft`` (docs/differentiable.md)
+    relaxes the busy/classifier/budget gates to tempered sigmoids.
+    """
+    if params is None:
+        slot_s = cfg.slot_us * 1e-6
+        steps_per_slot = max(int(round(cfg.slot_us / cfg.dt_us)), 1)
+    else:
+        slot_s = params.slot_us * 1e-6
+        steps_per_slot = jnp.maximum(
+            jnp.round(params.slot_us / cfg.dt_us), 1.0)
     # pause-corrected egress rate: bytes / UNPAUSED time. Egress while the
     # egress port is PFC-paused says nothing about forwarding capability.
     paused_frac = state.acc_paused / steps_per_slot
@@ -143,14 +158,20 @@ def slot_update(state: MatchRdmaState, cfg: NetConfig,
     queue_thresh = (cfg.queue_thresh_kb if params is None
                     else params.queue_thresh_kb) * 1024.0
     # capability is only measurable when backlogged AND mostly unpaused
-    busy = ((mean_queue > queue_thresh)
-            & (paused_frac < 0.9)).astype(jnp.float32)
-    ring = push_slot(state.ring, obs, cfg, busy=busy,
-                     queue_thresh_bytes=queue_thresh)
-    if period_slots > 0:
-        est = periodic_estimate(ring, cfg, period_slots)
+    if soft is None:
+        busy = ((mean_queue > queue_thresh)
+                & (paused_frac < 0.9)).astype(jnp.float32)
     else:
-        est = slot_weighted_estimate(ring, cfg)
+        from repro.netsim.soft import soft_gt
+        busy = (soft_gt(mean_queue, queue_thresh, soft,
+                        0.05 * queue_thresh + 1.0)
+                * soft_gt(0.9, paused_frac, soft, 0.1))
+    ring = push_slot(state.ring, obs, cfg, busy=busy,
+                     queue_thresh_bytes=queue_thresh, soft=soft)
+    if period_slots > 0:
+        est = periodic_estimate(ring, cfg, period_slots, soft=soft)
+    else:
+        est = slot_weighted_estimate(ring, cfg, soft=soft)
     # fraction of the last control window flagged congested
     # (drives match vs open-up)
     from repro.core.slots import ordered_history
@@ -168,7 +189,7 @@ def slot_update(state: MatchRdmaState, cfg: NetConfig,
     cong_recent = (jnp.sum(congested_hist * recent_valid)
                    / jnp.maximum(jnp.sum(recent_valid), 1.0))
     budget = update_budget(state.budget, est, state.acc_cnp, cong_recent, cfg,
-                           ctrl_slots=ctrl_slots, params=params)
+                           ctrl_slots=ctrl_slots, params=params, soft=soft)
     return state._replace(
         ring=ring, budget=budget,
         acc_egress=jnp.float32(0.0), acc_cnp=jnp.float32(0.0),
@@ -179,10 +200,22 @@ def slot_update(state: MatchRdmaState, cfg: NetConfig,
 
 def maybe_slot_update(state: MatchRdmaState, cfg: NetConfig, step_idx: jax.Array,
                       period_slots: int = 0,
-                      params: NetParams = None) -> MatchRdmaState:
-    """Branchless slot update: applied when step_idx hits a slot boundary."""
-    steps_per_slot = max(int(round(cfg.slot_us / cfg.dt_us)), 1)
+                      params: NetParams = None, soft=None) -> MatchRdmaState:
+    """Branchless slot update: applied when step_idx hits a slot boundary.
+
+    With ``params`` the boundary trigger is a TRACED-phase comparison
+    (``steps_per_slot`` derives from the ``params.slot_us`` leaf), so a
+    slot-length sweep shares one compiled program. The boundary select
+    itself stays an exact integer comparison even in soft mode — slot
+    cadence is simulator *structure*, not a knob-dependent threshold (the
+    knob sensitivity flows through the traced ``steps_per_slot`` uses
+    inside ``slot_update``)."""
+    if params is None:
+        steps_per_slot = max(int(round(cfg.slot_us / cfg.dt_us)), 1)
+    else:
+        steps_per_slot = jnp.maximum(
+            jnp.round(params.slot_us / cfg.dt_us).astype(jnp.int32), 1)
     at_boundary = jnp.mod(step_idx + 1, steps_per_slot) == 0
-    updated = slot_update(state, cfg, period_slots, params=params)
+    updated = slot_update(state, cfg, period_slots, params=params, soft=soft)
     return jax.tree.map(
         lambda a, b: jnp.where(at_boundary, a, b), updated, state)

@@ -47,6 +47,7 @@ from repro.config.base import NetConfig, NetParams
 from repro.netsim.channel.base import (
     ChannelEffects, ChannelInputs, ChannelModel, register_channel_model,
 )
+from repro.netsim.soft import lerp, soft_gt, soft_pos
 
 # fraction of a flap period spent in the dip (the protection-switch hit)
 FLAP_DUTY = 0.1
@@ -125,10 +126,22 @@ class ImpairedChannel(ChannelModel):
             p_enter = jnp.clip(p_exit * r / jnp.maximum(1.0 - r, 0.5), 0.0, 1.0)
             u = jax.random.uniform(jax.random.fold_in(inp.key, 0),
                                    arrivals.shape, jnp.float32)
-            in_bad = jnp.where(chan.bad > 0.5, u < 1.0 - p_exit, u < p_enter)
-            bad = in_bad.astype(jnp.float32)
-            lost = jnp.where(in_bad, arrivals, 0.0)   # Bad drops the step
-            arrivals = jnp.where(in_bad, 0.0, arrivals)
+            if ctx.soft is None:
+                in_bad = jnp.where(chan.bad > 0.5,
+                                   u < 1.0 - p_exit, u < p_enter)
+                bad = in_bad.astype(jnp.float32)
+                lost = jnp.where(in_bad, arrivals, 0.0)  # Bad drops the step
+                arrivals = jnp.where(in_bad, 0.0, arrivals)
+            else:
+                # tempered chain: the u-vs-probability comparisons become
+                # sigmoids (grads flow into loss_rate / loss_burst_len)
+                # blended by the previous fractional Bad weight
+                w_bad = lerp(soft_gt(chan.bad, 0.5, ctx.soft, 0.25),
+                             soft_gt(1.0 - p_exit, u, ctx.soft, 0.05),
+                             soft_gt(p_enter, u, ctx.soft, 0.05))
+                bad = w_bad
+                lost = w_bad * arrivals
+                arrivals = (1.0 - w_bad) * arrivals
 
         if self.jitter:
             # geometric holding with mean extra delay jitter_us: each step
@@ -150,11 +163,17 @@ class ImpairedChannel(ChannelModel):
             period = p.flap_period_us
             pos = jnp.mod(inp.t.astype(jnp.float32) * ctx.dt_us
                           / jnp.maximum(period, ctx.dt_us) + chan.phase, 1.0)
-            in_dip = (pos < FLAP_DUTY) & (period > 0)
-            cap_src = jnp.where(in_dip,
-                                cap_src
-                                * (1.0 - jnp.clip(p.flap_depth, 0.0, 1.0)),
-                                cap_src)
+            dipped = cap_src * (1.0 - jnp.clip(p.flap_depth, 0.0, 1.0))
+            if ctx.soft is None:
+                in_dip = (pos < FLAP_DUTY) & (period > 0)
+                cap_src = jnp.where(in_dip, dipped, cap_src)
+            else:
+                # flap_depth grads flow through the lerp; the dip PHASE
+                # keeps a mod()-jump in knob space (flap_period_us is
+                # finiteness-only in the FD battery — docs/differentiable.md)
+                w_dip = (soft_gt(FLAP_DUTY, pos, ctx.soft, 0.05)
+                         * soft_pos(period, ctx.soft, ctx.dt_us))
+                cap_src = lerp(w_dip, dipped, cap_src)
 
         return ChannelEffects(arrivals=arrivals, lost=lost, cap_src=cap_src,
                               chan=ImpairState(bad=bad, defer=defer,

@@ -94,6 +94,7 @@ from repro.netsim.channel import (
     ChannelInputs, ChannelModel, get_channel_model, scenario_key,
 )
 from repro.netsim.queues import drain_proportional, ecn_mark_prob, pfc_hysteresis
+from repro.netsim.soft import lerp, reset_gate, soft_gt, soft_pos, ste
 from repro.netsim.schemes import SCHEMES, get_scheme  # noqa: F401 (re-export)
 from repro.netsim.schemes.base import Scheme, SchemeCtx, SchemeSignals
 from repro.netsim.streaming import (
@@ -282,8 +283,14 @@ def init_state(cfg: NetConfig, num_flows: int, params: NetParams = None,
     if channel.is_ideal:
         chan = None
     else:
-        base_key = scenario_key(
-            jax.random.PRNGKey(cfg.channel_seed), params)
+        if cfg.soft_step:
+            # soft mode pins one noise stream per seed (no knob-bit
+            # folding): differentiable + common random numbers across
+            # knob perturbations — mirrors make_step_fn
+            base_key = jax.random.PRNGKey(cfg.channel_seed)
+        else:
+            base_key = scenario_key(
+                jax.random.PRNGKey(cfg.channel_seed), params)
         # models whose init accepts a ``link`` index (the base-class
         # signature since the trace_replay model landed) are told which
         # link-axis entry they serve; legacy third-party signatures
@@ -372,6 +379,10 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         delay_pad = _delay_steps(cfg)
     dt_us = cfg.dt_us
     dt_s = dt_us * 1e-6
+    # soft-step relaxation (docs/differentiable.md): with cfg.soft_step the
+    # traced temperature replaces every knob-dependent hard select below by
+    # a tempered blend; None (the default) leaves the hard jaxpr untouched.
+    soft = params.soft_temp if cfg.soft_step else None
     # traced actual delay, clamped to the static ring allocation (mirrors
     # budget.init_channel) — an out-of-range wrap would silently alias
     # ring rows through JAX's index clamping instead of erroring
@@ -458,6 +469,7 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
                        if cfg.is_multisite else None),
         flow_dst_site=(jnp.asarray(wl.dst_site)
                        if cfg.is_multisite else None),
+        soft=soft,
     )
     rtt_scale = scheme.rtt_scale(ctx)
     if impaired:
@@ -465,8 +477,15 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         # (static seed, per-scenario salt, step index) — deterministic,
         # resume-safe inside lax.scan, shared across schemes (common
         # random numbers for paired comparisons)
-        chan_key0 = scenario_key(
-            jax.random.PRNGKey(cfg.channel_seed), params)
+        if cfg.soft_step:
+            # knob-bit folding is a non-differentiable bitcast AND would
+            # redraw the noise at every knob perturbation — soft mode pins
+            # one stream per seed (common random numbers across gradient
+            # steps, the CRN contract grad_tune relies on)
+            chan_key0 = jax.random.PRNGKey(cfg.channel_seed)
+        else:
+            chan_key0 = scenario_key(
+                jax.random.PRNGKey(cfg.channel_seed), params)
     zero_f = jnp.zeros((is_inter.shape[0],), jnp.float32)
     if has_fail:
         fw = jnp.asarray(params.fail_windows)          # [L, W, 2]
@@ -492,13 +511,28 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
             hctx = ctx
 
         # ------------------------------------------------ 1. flow phase
-        started = (t_us >= start_us).astype(jnp.float32)
-        in_period = jnp.where(
-            period_us > 0,
-            (jnp.mod(jnp.maximum(t_us - start_us, 0.0), jnp.maximum(period_us, 1.0))
-             < duty * period_us).astype(jnp.float32),
-            1.0)
-        not_done = (state.delivered < total_bytes).astype(jnp.float32)
+        if soft is None:
+            started = (t_us >= start_us).astype(jnp.float32)
+            in_period = jnp.where(
+                period_us > 0,
+                (jnp.mod(jnp.maximum(t_us - start_us, 0.0),
+                         jnp.maximum(period_us, 1.0))
+                 < duty * period_us).astype(jnp.float32),
+                1.0)
+            not_done = (state.delivered < total_bytes).astype(jnp.float32)
+        else:
+            started = soft_gt(t_us, start_us, soft, dt_us)
+            phase = jnp.mod(jnp.maximum(t_us - start_us, 0.0),
+                            jnp.maximum(period_us, 1.0))
+            gate = soft_gt(duty * period_us, phase, soft, dt_us)
+            in_period = lerp(soft_pos(period_us, soft, dt_us), gate, 1.0)
+            # STE on the activity gate: the forward pass keeps the exact
+            # live-mask (consistent with the hard completion latch below);
+            # the backward pass sees the tempered gate
+            not_done = ste(
+                (state.delivered < total_bytes).astype(jnp.float32),
+                soft_gt(total_bytes, state.delivered, soft,
+                        jnp.maximum(1e-3 * total_bytes, MTU)))
         active = started * in_period * not_done * active_mask
 
         # ------------------------------------------------ 2. delayed inputs
@@ -522,16 +556,34 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         # At L > 1 the model is vmapped over the link axis — each parallel
         # path carries its own impairment process (independent keys, own
         # flap phase / loss chain / jitter buffer).
-        paused_src = pause_sig > 0.5                   # delayed dst PFC
-        if multi:
-            cap_link = jnp.where(paused_src, 0.0, link_caps * dt_s)  # [L]
-            if has_fail:
-                cap_link = jnp.where(link_down, 0.0, cap_link)
-            cap_src = jnp.sum(cap_link)
+        if soft is None:
+            paused_src = pause_sig > 0.5               # delayed dst PFC
+            if multi:
+                cap_link = jnp.where(paused_src, 0.0,
+                                     link_caps * dt_s)           # [L]
+                if has_fail:
+                    cap_link = jnp.where(link_down, 0.0, cap_link)
+                cap_src = jnp.sum(cap_link)
+            else:
+                cap_src = jnp.where(paused_src, 0.0, c_otn * dt_s)
+                if has_fail:
+                    cap_src = jnp.where(link_down[0], 0.0, cap_src)
         else:
-            cap_src = jnp.where(paused_src, 0.0, c_otn * dt_s)
-            if has_fail:
-                cap_src = jnp.where(link_down[0], 0.0, cap_src)
+            # the delayed pause signal already lives in [0, 1] in soft
+            # mode (soft_hysteresis); re-temper it around the midpoint and
+            # scale the capacity instead of zeroing it. The failure mask
+            # is schedule-structure (knob-independent), so the hard 0/1
+            # multiplier stays.
+            w_pause = soft_gt(pause_sig, 0.5, soft, 0.25)
+            if multi:
+                cap_link = (1.0 - w_pause) * link_caps * dt_s    # [L]
+                if has_fail:
+                    cap_link = cap_link * link_live
+                cap_src = jnp.sum(cap_link)
+            else:
+                cap_src = (1.0 - w_pause) * c_otn * dt_s
+                if has_fail:
+                    cap_src = cap_src * link_live[0]
         retx_arr = state.retx_line[ridx] if repair else zero_f
         if impaired:
             if multi:
@@ -585,7 +637,12 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         base_rate = jnp.minimum(win_avail / dt_s, nic)
         rate = scheme.sender_rate(hctx, state, base_rate)
         # src-OTN -> sender PFC (1 step, from last-step queue)
-        src_nic_pause = (jnp.sum(state.q_src) > xoff_otn).astype(jnp.float32)
+        if soft is None:
+            src_nic_pause = (jnp.sum(state.q_src)
+                             > xoff_otn).astype(jnp.float32)
+        else:
+            src_nic_pause = soft_gt(jnp.sum(state.q_src), xoff_otn, soft,
+                                    0.05 * xoff_otn + 1.0)
         rate = rate * jnp.where(is_inter > 0, 1.0 - src_nic_pause, 1.0)
         # -------------------------------------------- 4b. loss repair
         # Lost bytes whose notification has arrived are retransmitted with
@@ -633,7 +690,12 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
             # on its slowest link, which is exactly the imbalance
             # token-gated spraying (rdmacell) adapts away.
             w = jnp.maximum(scheme.route_weights(hctx, state, route), 0.0)
-            w = w * (cap_link > 0.0)[None, :]                     # [F, L]
+            if soft is None:
+                w = w * (cap_link > 0.0)[None, :]                 # [F, L]
+            else:
+                # soft zero-cap mask: exactly 0 at cap 0 (soft_pos), so a
+                # fully paused/flapped link still attracts no spray
+                w = w * soft_pos(cap_link, soft, MTU)[None, :]
             row = jnp.sum(w, axis=1, keepdims=True)
             share = w / jnp.maximum(row, 1e-9)                    # [F, L]
             want = drained_src[:, None] * share                   # [F, L]
@@ -652,7 +714,11 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
             inflight = state.inflight + drained_src - pipe_out
 
         # ------------------------------------------------ 6. destination OTN
-        leaf_pfc = (jnp.sum(state.q_leaf) > xoff).astype(jnp.float32)
+        if soft is None:
+            leaf_pfc = (jnp.sum(state.q_leaf) > xoff).astype(jnp.float32)
+        else:
+            leaf_pfc = soft_gt(jnp.sum(state.q_leaf), xoff, soft,
+                               0.05 * xoff + 1.0)
         cap_dst = c_leaf * dt_s * (1.0 - leaf_pfc)
         q_dst, drained_dst = drain_proportional(state.q_dst, pipe_arrivals,
                                                 cap_dst)
@@ -663,18 +729,20 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
             # line; each pause rides back at the LINK's own delay
             q_dst_link = jnp.sum(q_dst, axis=1)                   # [L]
             pause_dst = pfc_hysteresis(state.pause_dst, q_dst_link,
-                                       xoff_link, xon_link)       # [L]
+                                       xoff_link, xon_link,
+                                       soft=soft)                 # [L]
             pause_line = state.pause_line.at[lidx, link_ids].set(pause_dst)
             drained_dst_f = jnp.sum(drained_dst, axis=0)          # [F]
         else:
             pause_dst = pfc_hysteresis(state.pause_dst, q_dst_tot, xoff_otn,
-                                       xon_otn)
+                                       xon_otn, soft=soft)
             pause_line = state.pause_line.at[ridx].set(pause_dst)
             drained_dst_f = drained_dst
 
         # ------------------------------------------------ 7. destination leaf
         arrivals_leaf = drained_dst_f + send * is_intra
-        mark_p = ecn_mark_prob(jnp.sum(state.q_leaf), cfg, params=params)
+        mark_p = ecn_mark_prob(jnp.sum(state.q_leaf), cfg, params=params,
+                               soft=soft)
         q_leaf, drained_leaf = drain_proportional(state.q_leaf, arrivals_leaf,
                                                   c_leaf * dt_s)
         delivered = state.delivered + drained_leaf
@@ -682,11 +750,23 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
 
         # ------------------------------------------------ 8. CNP generation
         cnp_timer = state.cnp_timer + dt_us
-        want = marked_acc >= MTU
-        emit = want & (cnp_timer >= cfg.cnp_interval_us)
-        cnp_out = emit.astype(jnp.float32)
-        cnp_timer = jnp.where(emit, 0.0, cnp_timer)
-        marked_acc = jnp.where(emit, 0.0, marked_acc)
+        if soft is None:
+            want = marked_acc >= MTU
+            emit = want & (cnp_timer >= cfg.cnp_interval_us)
+            cnp_out = emit.astype(jnp.float32)
+            cnp_timer = jnp.where(emit, 0.0, cnp_timer)
+            marked_acc = jnp.where(emit, 0.0, marked_acc)
+        else:
+            # fractional CNPs: downstream consumers (slot classifier, CC
+            # cut gate) already read them through tempered gates at the
+            # 0.5 midpoint
+            cnp_out = (soft_gt(marked_acc, MTU, soft, 0.1 * MTU)
+                       * soft_gt(cnp_timer, cfg.cnp_interval_us, soft,
+                                 dt_us))
+            # self-referential resets take the DETACHED gate (soft.reset_gate
+            # docstring); cnp_out itself keeps full gradients downstream
+            cnp_timer = lerp(reset_gate(cnp_out), 0.0, cnp_timer)
+            marked_acc = lerp(reset_gate(cnp_out), 0.0, marked_acc)
 
         # ------------------------------------------------ 9. scheme feedback
         # (CNP routing, pseudo-ACK ledger, proxy brake, slot/budget/channel)
@@ -704,9 +784,13 @@ def make_step_fn(cfg: NetConfig, wl: WorkloadParams, scheme,
         cnp_line = state.cnp_line.at[ridx].set(fb.cnp_wire)
 
         # ------------------------------------------------ 11. CC update
-        cc = step_dcqcn(state.cc, fb.cnp_in, send, cfg, rtt_scale=rtt_scale)
+        cc = step_dcqcn(state.cc, fb.cnp_in, send, cfg, rtt_scale=rtt_scale,
+                        soft=soft)
 
         # ------------------------------------------------ 12. FCT
+        # the completion latch stays HARD even in soft mode: the INF
+        # sentinel makes any blend meaningless (forward exactness is the
+        # contract; FCT gradients flow through the byte counters instead)
         newly_done = (delivered >= total_bytes) & is_unfinished(
             state.done_at_us)
         done_at = jnp.where(newly_done, t_us, state.done_at_us)
@@ -826,6 +910,29 @@ def _scan_with_mode(step, scheme, channel, state0, steps: int, mode: str,
                     step.ctx, acc.chan, state, out, inc))
             return (state, acc), None
 
+        k = step.ctx.cfg.remat_steps
+        if k > 1 and steps > k:
+            # gradient checkpointing (cfg.remat_steps): rematerialize each
+            # k-step block in the backward pass, so jax.grad through the
+            # whole scan holds O(T/k + k) residuals instead of O(T) —
+            # the memory knob behind long-horizon grad_tune runs. k = 0
+            # (the default) keeps the single flat scan below untouched.
+            nblocks = steps // k
+
+            @jax.checkpoint
+            def block(carry, b):
+                carry, _ = jax.lax.scan(
+                    mstep, carry, b * k + jnp.arange(k, dtype=jnp.int32))
+                return carry, None
+
+            carry, _ = jax.lax.scan(block, (state0, acc0),
+                                    jnp.arange(nblocks, dtype=jnp.int32))
+            rem = steps - nblocks * k
+            if rem:
+                carry, _ = jax.lax.scan(
+                    mstep, carry,
+                    nblocks * k + jnp.arange(rem, dtype=jnp.int32))
+            return carry
         (final, acc), _ = jax.lax.scan(mstep, (state0, acc0), ts)
         return final, acc
     if mode == "decimate" and decimate > 1:
@@ -923,10 +1030,19 @@ def _run_traced(cfg, wlp, scheme, steps, period_slots,
 
 def batch_padding(cfgs: Sequence[NetConfig]):
     """(delay_pad, history_slots) covering every scenario in the grid —
-    the static ring sizes shared by all cells of a batch."""
-    far = max(cfgs, key=lambda c: c.one_way_delay_us)
-    delay_pad = max(_delay_steps(c) for c in cfgs)
-    return delay_pad, default_history_slots(far)
+    the static ring sizes shared by all cells of a batch.
+
+    Control-channel rings are sized ``delay_pad + proc_steps(template)``
+    inside the batched program, and a cell's OWN processing delay derives
+    from its (traced) ``slot_us`` — so the pad absorbs any excess of a
+    cell's proc steps over the template's, and the history covers the
+    longest control window any cell needs. At a uniform default
+    ``slot_us`` both reduce to the historical sizes."""
+    tmpl = batch_template(cfgs)
+    delay_pad = (max(_delay_steps(c) for c in cfgs)
+                 + max(0, max(_proc_steps(c) for c in cfgs)
+                       - _proc_steps(tmpl)))
+    return delay_pad, max(default_history_slots(c) for c in cfgs)
 
 
 def shard_scenario_axis(params: NetParams, wlp: WorkloadParams,

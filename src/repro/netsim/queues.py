@@ -7,22 +7,35 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import NetConfig
+from repro.netsim.soft import soft_gt, soft_hysteresis
 
 
 def ecn_mark_prob(q_bytes: jax.Array, cfg: NetConfig,
-                  params=None) -> jax.Array:
+                  params=None, soft=None) -> jax.Array:
     """DCQCN RED-like marking probability from queue occupancy. ``params``
-    (a ``NetParams``) supplies traced per-scenario thresholds when batching."""
+    (a ``NetParams``) supplies traced per-scenario thresholds when batching;
+    ``soft`` (a traced temperature, docs/differentiable.md) relaxes the
+    above-kmax step term to a tempered sigmoid."""
     src = cfg if params is None else params
     kmin = src.ecn_kmin_kb * 1024.0
     kmax = src.ecn_kmax_kb * 1024.0
     frac = jnp.clip((q_bytes - kmin) / jnp.maximum(kmax - kmin, 1.0), 0.0, 1.0)
-    return frac * cfg.ecn_pmax + (q_bytes > kmax).astype(jnp.float32) * (1.0 - cfg.ecn_pmax)
+    if soft is None:
+        over = (q_bytes > kmax).astype(jnp.float32)
+    else:
+        over = soft_gt(q_bytes, kmax, soft, 0.05 * kmax + 1.0)
+    return frac * cfg.ecn_pmax + over * (1.0 - cfg.ecn_pmax)
 
 
 def pfc_hysteresis(paused: jax.Array, q_bytes: jax.Array,
-                   xoff_bytes: float, xon_bytes: float) -> jax.Array:
-    """XOFF above ``xoff``, XON below ``xon``, hold in between."""
+                   xoff_bytes: float, xon_bytes: float,
+                   soft=None) -> jax.Array:
+    """XOFF above ``xoff``, XON below ``xon``, hold in between. ``soft``
+    (a traced temperature) swaps the hard loop for the tempered blend in
+    ``repro.netsim.soft.soft_hysteresis``; the pause signal then lives in
+    [0, 1] instead of {0, 1}."""
+    if soft is not None:
+        return soft_hysteresis(paused, q_bytes, xoff_bytes, xon_bytes, soft)
     return jnp.where(q_bytes > xoff_bytes, 1.0,
                      jnp.where(q_bytes < xon_bytes, 0.0, paused))
 

@@ -126,6 +126,11 @@ class SchemeCtx(NamedTuple):
     # schedule-free program). ``route_weights`` implementations fold it
     # in via ``apply_link_live`` so sprays avoid dead links.
     link_live: Optional[jax.Array] = None      # f32[L] per-step live mask
+    # soft-step temperature (docs/differentiable.md): the traced
+    # ``params.soft_temp`` leaf when ``cfg.soft_step`` is on, else None.
+    # Hooks thread it into their knob-dependent gates (tempered sigmoids
+    # replacing hard selects); None keeps every hook's hard program.
+    soft: Optional[jax.Array] = None
 
 
 class SchemeSignals(NamedTuple):

@@ -40,7 +40,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import NetConfig, NetParams
-from repro.core.budget import ControlChannel, channel_send_recv, init_channel
+from repro.core.budget import (
+    ControlChannel, channel_send_recv, control_proc_steps_traced,
+    init_channel,
+)
 from repro.netsim.schemes.base import (
     Feedback, Scheme, SchemeCtx, SchemeSignals, apply_link_live,
     long_haul_bdp,
@@ -81,14 +84,18 @@ class GeoPipeScheme(Scheme):
                          chan_delay_pad: int = 0):
         if params is None:
             params = NetParams.of(cfg)
-        proc = cfg.control_proc_steps
         if chan_delay_pad <= 0:
-            chan_delay_pad = cfg.static_delay_steps + proc
+            chan_delay_pad = cfg.static_delay_steps + cfg.control_proc_steps
         # the grant line starts at zero (cumulative egress), unlike the
-        # budget channel which starts at the proactive initial budget
-        chan = init_channel(chan_delay_pad, cfg, params=params,
-                            actual_delay=params.delay_steps(cfg.dt_us) + proc,
-                            fill=0.0)
+        # budget channel which starts at the proactive initial budget.
+        # The ring SIZE is the static pad; the wrap index uses the traced
+        # slot_us-derived processing delay so a slot_us sweep shares one
+        # compiled program (mirrors core.matchrdma.init_matchrdma).
+        chan = init_channel(
+            chan_delay_pad, cfg, params=params,
+            actual_delay=(params.delay_steps(cfg.dt_us)
+                          + control_proc_steps_traced(cfg, params)),
+            fill=0.0)
         return GeoPipeState(chan=chan,
                             granted_at_src=jnp.float32(0.0),
                             egress_cum=jnp.float32(0.0),
@@ -123,8 +130,18 @@ class GeoPipeScheme(Scheme):
                          jnp.minimum(state.cc.rc, base_rate))
 
     def src_otn_release(self, ctx: SchemeCtx, state, arrivals, cap, active):
-        credit, _ = self._credit(ctx, state)
-        cap = jnp.minimum(cap, credit)       # PFC-free pacing: credit gate
+        credit, window = self._credit(ctx, state)
+        if ctx.soft is None:
+            cap = jnp.minimum(cap, credit)   # PFC-free pacing: credit gate
+        else:
+            # the credit gate BINDS nearly every steady-state step (release
+            # is credit-paced), so the hard min() sits exactly on its kink
+            # in knob space and FD-vs-AD checks diverge there; a tempered
+            # softmin (width ~1% of the window) keeps the binding region
+            # smooth and converges to min() as the temperature drops
+            w = ctx.soft * (0.01 * window + 1.0)
+            cap = jnp.maximum(
+                -w * jnp.logaddexp(-cap / w, -credit / w), 0.0)
         avail = state.q_src + arrivals
         f = avail.shape[0]
         stage = jnp.mod(jnp.arange(f), self.num_stages)

@@ -24,9 +24,13 @@ from repro.core.matchrdma import (
     accumulate_step, maybe_slot_update, step_channel,
 )
 from repro.core.pseudo_ack import step_pseudo_ack
+from repro.netsim.soft import lerp, reset_gate, soft_gt, soft_or, soft_pos
 from repro.netsim.schemes.base import (
     Feedback, Scheme, SchemeCtx, SchemeSignals, apply_link_live,
 )
+
+# soft-gate byte scale for loss-notification presence (docs/differentiable.md)
+_MTU = 1500.0
 
 
 class MatchRdmaScheme(Scheme):
@@ -94,13 +98,26 @@ class MatchRdmaScheme(Scheme):
         # a dropping long haul is over-injection the budget estimator only
         # sees a control-window later.
         proxy_timer = state.proxy_timer + ctx.dt_us
-        fire = (((mr.summary_at_src > 0.5) | (sig.retx_arr > 0))
-                & (proxy_timer >= cfg.cnp_interval_us))
-        proxy_mod = jnp.where(fire,
-                              jnp.maximum(state.proxy_mod * 0.7, 0.25),
-                              jnp.minimum(state.proxy_mod *
-                                          (1.0 + 5e-4 * ctx.dt_us), 1.0))
-        proxy_timer = jnp.where(fire, 0.0, proxy_timer)
+        cut = jnp.maximum(state.proxy_mod * 0.7, 0.25)
+        recover = jnp.minimum(state.proxy_mod * (1.0 + 5e-4 * ctx.dt_us),
+                              1.0)
+        if ctx.soft is None:
+            fire = (((mr.summary_at_src > 0.5) | (sig.retx_arr > 0))
+                    & (proxy_timer >= cfg.cnp_interval_us))
+            proxy_mod = jnp.where(fire, cut, recover)
+            proxy_timer = jnp.where(fire, 0.0, proxy_timer)
+        else:
+            # tempered brake trigger: the delayed summary is itself a soft
+            # weight (gate at the 0.5 midpoint); loss notifications gate
+            # through soft_pos (exactly 0 with no loss)
+            w_fire = (soft_or(soft_gt(mr.summary_at_src, 0.5, ctx.soft,
+                                      0.25),
+                              soft_pos(sig.retx_arr, ctx.soft, _MTU))
+                      * soft_gt(proxy_timer, cfg.cnp_interval_us, ctx.soft,
+                                ctx.dt_us))
+            proxy_mod = lerp(w_fire, cut, recover)
+            # detached gate in the timer's own reset (soft.reset_gate)
+            proxy_timer = lerp(reset_gate(w_fire), 0.0, proxy_timer)
 
         # ---- destination-side loop: slot accumulation, boundary update,
         # control subchannel
@@ -112,9 +129,14 @@ class MatchRdmaScheme(Scheme):
             leaf_delay_us, jnp.float32(1.0), sig.q_dst_tot,
             egress_paused=sig.leaf_pfc)
         mr = maybe_slot_update(mr, cfg, sig.t, ctx.period_slots,
-                               params=ctx.params)
-        overrun = (sig.q_dst_tot > 0.5 * ctx.xoff_otn)
-        mr = step_channel(mr, overrun.astype(jnp.float32))
+                               params=ctx.params, soft=ctx.soft)
+        if ctx.soft is None:
+            overrun = (sig.q_dst_tot
+                       > 0.5 * ctx.xoff_otn).astype(jnp.float32)
+        else:
+            overrun = soft_gt(sig.q_dst_tot, 0.5 * ctx.xoff_otn, ctx.soft,
+                              0.05 * ctx.xoff_otn + 1.0)
+        mr = step_channel(mr, overrun)
 
         return Feedback(
             # CNPs are consumed at the destination OTN: the long return

@@ -40,9 +40,13 @@ import numpy as np
 
 from repro.config.base import NetConfig, NetParams
 from repro.core.matchrdma import MatchRdmaState
+from repro.netsim.soft import lerp, soft_pos
 from repro.netsim.schemes.base import (
     Feedback, Scheme, SchemeCtx, SchemeSignals, apply_link_live,
 )
+
+# soft dry-gate byte scale (docs/differentiable.md)
+_MTU = 1500.0
 
 
 class RdmaCellState(NamedTuple):
@@ -105,11 +109,16 @@ class RdmaCellScheme(Scheme):
         # an outage only the SURVIVING links' tokens count toward the dry
         # condition — a dead link's full bucket must neither attract
         # traffic nor mask an otherwise-dry spray (docs/failures.md).
-        if ctx.link_live is not None:
-            dry = jnp.sum(tok * ctx.link_live) <= 0.0
+        live_tok = (jnp.sum(tok * ctx.link_live) if ctx.link_live is not None
+                    else jnp.sum(tok))
+        if ctx.soft is None:
+            dry = live_tok <= 0.0
+            tok = jnp.where(dry, jnp.ones_like(tok), tok)
         else:
-            dry = jnp.sum(tok) <= 0.0
-        tok = jnp.where(dry, jnp.ones_like(tok), tok)
+            # tempered dry gate: soft_pos is exactly 0 at 0, so a fully
+            # dry spray still blends all the way to the uniform fallback
+            w_dry = 1.0 - soft_pos(live_tok, ctx.soft, _MTU)
+            tok = lerp(w_dry, jnp.ones_like(tok), tok)
         return apply_link_live(ctx, base_route * tok[None, :])
 
     def sender_rate(self, ctx: SchemeCtx, state, base_rate):

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import NetConfig, NetParams
+from repro.netsim.soft import lerp, reset_gate, soft_gt, soft_or, soft_pos
 from repro.netsim.schemes.base import (
     Feedback, Scheme, SchemeCtx, SchemeSignals, apply_link_live,
     long_haul_bdp,
@@ -51,6 +52,8 @@ from typing import NamedTuple
 
 # the repair-budget reservation can never starve new data entirely
 MAX_RETX_FRAC = 0.9
+# soft-gate byte scale for loss-notification presence (docs/differentiable.md)
+_MTU = 1500.0
 
 
 class SdrRdmaState(NamedTuple):
@@ -118,16 +121,32 @@ class SdrRdmaScheme(Scheme):
         ack_arr = state.ack_line[jnp.mod(sig.t, ctx.d_steps)]
         ack_cum = sd.ack_cum + ack_arr * ctx.is_inter
         timer = sd.coalesce_timer + ctx.dt_us
-        fire = timer >= ctx.params.sdr_ack_coalesce_us
-        held = jnp.where(fire, ack_cum, sd.ack_held)
-        timer = jnp.where(fire, 0.0, timer)
+        if ctx.soft is None:
+            fire = timer >= ctx.params.sdr_ack_coalesce_us
+            held = jnp.where(fire, ack_cum, sd.ack_held)
+            timer = jnp.where(fire, 0.0, timer)
+        else:
+            w_fire = soft_gt(timer, ctx.params.sdr_ack_coalesce_us,
+                             ctx.soft, ctx.dt_us)
+            held = lerp(w_fire, ack_cum, sd.ack_held)
+            # detached gate in the timer's own reset (soft.reset_gate)
+            timer = lerp(reset_gate(w_fire), 0.0, timer)
         # degradation EWMA (~1 ms time constant) engaging the repair
         # budget: CNP arrivals (the congestion proxy) OR actual loss
         # notifications from the channel subsystem (zeros when ideal — the
         # pre-channel pin stays bit-identical)
-        hit = ((jnp.sum(sig.cnp_arr * ctx.is_inter) > 0)
-               | (jnp.sum(sig.retx_arr * ctx.is_inter) > 0)
-               ).astype(jnp.float32)
+        if ctx.soft is None:
+            hit = ((jnp.sum(sig.cnp_arr * ctx.is_inter) > 0)
+                   | (jnp.sum(sig.retx_arr * ctx.is_inter) > 0)
+                   ).astype(jnp.float32)
+        else:
+            # soft_pos is exactly 0 at 0: no CNPs and no losses keep the
+            # EWMA parked at zero even in soft mode
+            hit = soft_or(
+                soft_pos(jnp.sum(sig.cnp_arr * ctx.is_inter), ctx.soft,
+                         0.25),
+                soft_pos(jnp.sum(sig.retx_arr * ctx.is_inter), ctx.soft,
+                         _MTU))
         g = min(ctx.dt_us / 1000.0, 1.0)
         cong = (1.0 - g) * sd.cong_ewma + g * hit
         base = super().feedback(ctx, state, sig)   # e2e CNP routing

@@ -1,0 +1,109 @@
+"""Soft-step relaxation helpers for the differentiable engine.
+
+When ``NetConfig.soft_step`` is True the fluid engine (and the control
+stack underneath it — DCQCN proxy, budget controller, estimators, slot
+accounting, PFC hysteresis, channel impairments) replaces every hard
+``where()``-select whose predicate depends on a traced knob with a
+sigmoid-tempered blend.  The temperature is the traced
+``NetParams.soft_temp`` leaf: as ``soft_temp -> 0`` every gate converges
+pointwise to the hard step it relaxes, so soft-mode streamed metrics
+converge to the hard-mode metrics (tests/test_soft_convergence.py pins
+this).  With ``soft_step=False`` none of these helpers are traced at all
+— the jaxpr is bit-identical to the hard engine (golden tests).
+
+Conventions
+-----------
+* Every gate returns a weight in ``[0, 1]``; callers blend with
+  :func:`lerp` (``lerp(g, on, off)``) instead of ``jnp.where``.
+* ``scale`` is the natural unit of the compared quantity (µs for
+  timers, bytes for queues, …); the sigmoid half-width is
+  ``temp * scale`` so ``soft_temp`` is dimensionless.
+* :func:`soft_pos` is *exactly* 0 at ``x <= 0`` — use it for
+  "any traffic?" / token-bucket dry gates where an exactly-zero input
+  must keep the gate exactly closed (bit-identical quiescent start).
+* :func:`ste` is the straight-through estimator: forward-exact hard
+  value, gradient of the smooth surrogate.  Used only where forward
+  exactness matters (flow live-masks, failure live-masks); completion
+  sentinels (``done_at_us`` INF latches) stay fully hard.
+* :func:`reset_gate` detaches a gate used in a *self-referential*
+  timer/counter reset (``t = lerp(w(t), 0, t)``): near the firing
+  equilibrium that recurrence's Jacobian exceeds 1 and tangents grow
+  exponentially through the scan (inf within ~200 steps).  Phase
+  variables are simulator cadence, not knob response — their resets are
+  structure (zero local sensitivity), while the gate's value and its
+  gradient at every data-path use are untouched.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ste", "soft_gt", "soft_pos", "soft_or", "lerp", "soft_hysteresis",
+    "reset_gate",
+]
+
+
+def ste(hard: jax.Array, soft: jax.Array) -> jax.Array:
+    """Straight-through estimator: ``hard`` forward, ``d soft`` backward."""
+    return soft + jax.lax.stop_gradient(hard - soft)
+
+
+def soft_gt(x, thresh, temp, scale):
+    """Relaxed ``(x > thresh).astype(f32)``: sigmoid of width ``temp*scale``.
+
+    The argument is clipped at ±30 (forward value unchanged to f32
+    precision) so deeply saturated gates — timers parked at 1e9 µs, queues
+    orders of magnitude past threshold — have an *exactly zero* derivative
+    instead of a denormal-times-huge product that pollutes tangents.
+    """
+    return jax.nn.sigmoid(jnp.clip((x - thresh) / (temp * scale),
+                                   -30.0, 30.0))
+
+
+def soft_pos(x, temp, scale):
+    """Relaxed ``(x > 0).astype(f32)`` that is *exactly* 0 at ``x <= 0``.
+
+    ``1 - exp(-relu(x) / (temp*scale))`` — smooth for x > 0, hard zero
+    below, so quiescent state (no tokens, no retransmit backlog) stays
+    bit-quiet instead of leaking a ``sigmoid(0) = 0.5`` ghost signal.
+    """
+    return -jnp.expm1(-jnp.maximum(x, 0.0) / (temp * scale))
+
+
+def soft_or(a, b):
+    """Probabilistic OR of two gate weights: ``a + b - a*b``."""
+    return a + b - a * b
+
+
+def lerp(gate, on, off):
+    """Blend: ``gate*on + (1-gate)*off`` (== ``where(g, on, off)`` at g∈{0,1})."""
+    return off + gate * (on - off)
+
+
+def reset_gate(w):
+    """Detach a gate weight for use in its own state's reset recurrence.
+
+    ``t = lerp(w(t), 0, t + dt)`` has Jacobian ``(1-w) - (t+dt)·w'``; at
+    the firing equilibrium ``(t+dt)·w' ≈ θ·s(1-s)/(temp·scale)`` exceeds 1
+    for any threshold much larger than the sigmoid width, so tangents
+    compound exponentially inside ``lax.scan``.  Detaching the gate makes
+    the reset a contraction (``|∂t⁺/∂t| = 1-w ≤ 1``) while the *same*
+    (undetached) gate keeps full gradients wherever it blends data-path
+    quantities (rates, budgets, CNP volume).  See docs/differentiable.md.
+    """
+    return jax.lax.stop_gradient(w)
+
+
+def soft_hysteresis(paused, q, xoff, xon, temp):
+    """Relaxed PFC xoff/xon hysteresis.
+
+    Hard semantics (``queues.pfc_hysteresis``): q > xoff → 1,
+    q < xon → 0, else hold ``paused``.  Soft: blend with sigmoids whose
+    width is 5% of each threshold, recovering the hard loop as
+    ``temp -> 0``.
+    """
+    up = soft_gt(q, xoff, temp, 0.05 * xoff + 1.0)
+    dn = soft_gt(q, xon, temp, 0.05 * xon + 1.0)
+    # above xoff: 1; between: hold; below xon: 0
+    return up + (1.0 - up) * dn * paused

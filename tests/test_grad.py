@@ -1,0 +1,267 @@
+"""Gradient correctness of the differentiable (soft-step) engine.
+
+Three families (docs/differentiable.md):
+
+  * finiteness — ``jax.grad`` of the streamed Fig. 3 surrogate w.r.t.
+    EVERY traced ``NetParams``/``WorkloadParams`` leaf is finite, for all
+    seven schemes (metrics mode, soft engine);
+  * finite differences — central-difference quotients match ``jax.grad``
+    leaf by leaf for the FD-checked knobs (one batched launch evaluates
+    every ±eps perturbation: the knobs are traced leaves, so the whole FD
+    battery is two compiled programs — one [2K]-cell forward, one B=1
+    backward);
+  * single compile — a ``slot_us`` sweep adds ZERO jit-cache entries
+    beyond its first launch, and traced-slot batch results match the
+    static-slot single-cell engine at matching values.
+
+FD exemptions (finiteness-only, asserted but not FD-compared):
+``flap_period_us`` (the dip phase enters through ``mod()`` — a knob-space
+jump the relaxation deliberately keeps), workload ``period_us``/``duty``
+(same ``mod()`` structure) and the discrete workload leaves
+(``is_inter``/``active_mask``/``route``/sites). ``total_bytes`` rides the
+straight-through estimator: at the throughput workload's unbounded flow
+sizes both FD and AD are exactly zero (the clipped sigmoid saturates).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import NetConfig
+from repro.netsim import get_scheme
+from repro.netsim.fluid import (
+    WARMUP_FRAC, _run_traced_batch, _run_traced_batch_impl,
+    as_workload_batch, batch_padding, batch_template, stack_net_params,
+)
+from repro.netsim.schemes import ALL_SCHEMES
+from repro.netsim.workload import throughput_workload
+
+# Base point chosen OFF every integer boundary of the hard structure:
+# distance 96 km -> 480 µs (96 delay steps, boundaries at 477.5/482.5),
+# slot_us 112 -> 22.4 steps/slot. Impairments engaged so the channel
+# knobs are live. soft_temp 0.3: warm enough for stable tangents, cold
+# enough to stay near the hard trajectory.
+BASE = dict(distance_km=96.0, slot_us=112.0, horizon_us=4000.0,
+            soft_step=True, soft_temp=0.3,
+            loss_rate=0.01, loss_burst_len=4.0, jitter_us=20.0,
+            flap_period_us=1000.0, flap_depth=0.3)
+
+# (leaf name, central-difference eps) — eps small vs the knob, large
+# enough that the f32 objective difference rises above roundoff, and
+# never crossing a steps-per-slot / delay-step rounding boundary.
+FD_NET_KNOBS = [
+    ("one_way_delay_us", 0.5),
+    ("otn_capacity_gbps", 0.05),
+    ("dst_dc_gbps", 0.05),
+    ("nic_gbps", 0.05),
+    ("pfc_xoff_kb", 1.0),
+    ("pfc_xon_kb", 1.0),
+    ("otn_buffer_bdp_frac", 0.002),
+    ("ecn_kmin_kb", 0.5),
+    ("ecn_kmax_kb", 0.5),
+    ("queue_thresh_kb", 0.5),
+    ("budget_floor_mbps", 1.0),
+    ("budget_headroom", 0.003),
+    # tiny eps: the credit loop's objective has strong curvature at the
+    # 1e-3 scale (FD converges to AD only below eps ~ 5e-4)
+    ("geopipe_credit_bdp_frac", 0.0005),
+    ("sdr_window_bdp_frac", 0.002),
+    ("sdr_ack_coalesce_us", 0.5),
+    ("sdr_retx_budget_frac", 0.002),
+    ("loss_rate", 0.002),
+    ("loss_burst_len", 0.25),
+    ("jitter_us", 1.0),
+    ("flap_depth", 0.01),
+    ("rdmacell_token_bucket_us", 1.0),
+    ("rdmacell_rob_limit_mb", 0.05),
+    ("slot_us", 0.4),
+    ("soft_temp", 0.005),
+]
+FD_WL_KNOBS = [
+    ("window", 4096.0),
+    ("total_bytes", 4096.0),
+    ("start_us", 0.5),
+]
+
+# Knobs acting through per-step random draws (the Gilbert–Elliott chain,
+# the jitter hold, the flap dip): the objective is smooth only in
+# expectation — under common random numbers it is a staircase of a few
+# thousand micro-gates, so the FD secant carries realization noise the
+# pointwise AD slope does not. Checked for sign + order of magnitude.
+STOCHASTIC_KNOBS = {"loss_rate", "loss_burst_len", "jitter_us",
+                    "flap_depth"}
+
+
+def _harness(scheme, channel=None, **over):
+    cfg = NetConfig(**{**BASE, **over})
+    wl = throughput_workload(8e6, 4, num_flows=4)
+    cfgs = [cfg]
+    tmpl = batch_template(cfgs)
+    n_steps = tmpl.horizon_steps(None)
+    dp, hs = batch_padding(cfgs)
+    warm = int(n_steps * WARMUP_FRAC)
+    n_warm = max(n_steps - warm, 1)
+    params = stack_net_params(cfgs)
+    wlp = as_workload_batch(wl, 1)
+
+    def objvec(p, w):
+        """Per-cell smooth objective from the streamed sums ([B])."""
+        _, acc = _run_traced_batch_impl(
+            tmpl, p, w, scheme, n_steps, 0, dp, hs,
+            mode="metrics", warm=warm, channel=channel)
+        s = acc.sum_s
+        return (s["thr_inter"] / n_warm * 8.0 / 1e9
+                - 0.5 * s["q_dst"] / n_warm / 1e6
+                - s["pause_dst"] / n_warm)
+
+    return params, wlp, objvec
+
+
+def _tile(batch, n):
+    """Repeat every [1, ...] leaf of a stacked pytree to [n, ...]."""
+    return jax.tree.map(
+        lambda x: np.repeat(np.asarray(x), n, axis=0), batch)
+
+
+# ---------------------------------------------------------------------------
+# finiteness: every scheme, every traced leaf
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_grad_finite_every_leaf(scheme):
+    channel = "impaired" if scheme in ("dcqcn", "matchrdma") else None
+    params, wlp, objvec = _harness(get_scheme(scheme), channel,
+                                   horizon_us=3000.0)
+    gp, gw = jax.jit(jax.grad(lambda p, w: objvec(p, w)[0],
+                              argnums=(0, 1)))(params, wlp)
+    for tree, kind in ((gp, "net"), (gw, "workload")):
+        for name, leaf in zip(tree._fields, tree):
+            if leaf is None:
+                continue
+            a = np.asarray(leaf)
+            assert np.all(np.isfinite(a)), \
+                f"{scheme}: non-finite grad in {kind} leaf {name!r}: {a}"
+
+
+# ---------------------------------------------------------------------------
+# finite differences vs jax.grad
+# ---------------------------------------------------------------------------
+def _fd_battery(scheme_name, channel):
+    scheme = get_scheme(scheme_name)
+    # FD runs WARM (temp 1.0): the quotient needs smooth terrain over a
+    # finite eps — band-shaped sigmoid gates at temp 0.3 put curvature at
+    # the eps scale. Convergence to the hard engine as the temperature
+    # drops is pinned separately (tests/test_soft_convergence.py).
+    params, wlp, objvec = _harness(scheme, channel, soft_temp=1.0)
+    kn, kw = len(FD_NET_KNOBS), len(FD_WL_KNOBS)
+    b = 2 * (kn + kw)
+    pb = _tile(params, b)
+    wb = _tile(wlp, b)
+    pleaves = pb._asdict()
+    for i, (name, eps) in enumerate(FD_NET_KNOBS):
+        pleaves[name][2 * i] += eps
+        pleaves[name][2 * i + 1] -= eps
+    wleaves = wb._asdict()
+    for j, (name, eps) in enumerate(FD_WL_KNOBS):
+        i = kn + j
+        # uniform shift of every real flow: FD then matches the grad leaf
+        # SUMMED over flows
+        wleaves[name][2 * i] += eps * np.asarray(wb.active_mask[2 * i])
+        wleaves[name][2 * i + 1] -= eps * np.asarray(wb.active_mask[2 * i])
+    pb = type(params)(**pleaves)
+    wb = type(wlp)(**wleaves)
+    obj = np.asarray(jax.jit(objvec)(pb, wb), np.float64)
+
+    gp, gw = jax.jit(jax.grad(lambda p, w: objvec(p, w)[0],
+                              argnums=(0, 1)))(params, wlp)
+    rows = []
+    for i, (name, eps) in enumerate(FD_NET_KNOBS):
+        fd = (obj[2 * i] - obj[2 * i + 1]) / (2.0 * eps)
+        ad = float(np.asarray(getattr(gp, name)).sum())
+        rows.append((name, eps, fd, ad))
+    for j, (name, eps) in enumerate(FD_WL_KNOBS):
+        i = kn + j
+        fd = (obj[2 * i] - obj[2 * i + 1]) / (2.0 * eps)
+        ad = float(np.asarray(getattr(gw, name)).sum())
+        rows.append((name, eps, fd, ad))
+    return rows, float(np.mean(np.abs(obj)))
+
+
+def _check_fd(rows, obj_scale, scheme_name):
+    bad = []
+    for name, eps, fd, ad in rows:
+        assert np.isfinite(fd) and np.isfinite(ad), (scheme_name, name)
+        # the FD quotient carries ~(f32 objective noise)/eps of roundoff;
+        # below that floor agreement is vacuous either way
+        floor = 3e-5 * max(obj_scale, 1.0) / eps
+        if max(abs(fd), abs(ad)) <= max(floor, 1e-9):
+            continue
+        rel = abs(fd - ad) / max(abs(fd), abs(ad))
+        gate = 0.75 if name in STOCHASTIC_KNOBS else 0.25
+        if name in STOCHASTIC_KNOBS and fd * ad > 0:
+            continue  # same sign: magnitude noise is realization noise
+        if rel > gate and abs(fd - ad) > floor:
+            bad.append(f"{name}: fd={fd:.4e} ad={ad:.4e} rel={rel:.2f}")
+    assert not bad, f"{scheme_name} FD mismatches:\n  " + "\n  ".join(bad)
+
+
+@pytest.mark.parametrize("scheme", ["dcqcn", "matchrdma"])
+def test_fd_matches_grad(scheme):
+    rows, scale = _fd_battery(scheme, "impaired")
+    _check_fd(rows, scale, scheme)
+
+
+def test_fd_matches_grad_scheme_knobs():
+    """The related-work schemes' own knobs, FD-checked under the scheme
+    that consumes them (they are structurally dead under dcqcn)."""
+    for scheme_name, knobs in (
+            ("geopipe", ("geopipe_credit_bdp_frac",)),
+            ("sdr_rdma", ("sdr_window_bdp_frac", "sdr_ack_coalesce_us",
+                          "sdr_retx_budget_frac"))):
+        rows, scale = _fd_battery(scheme_name, None)
+        keep = [r for r in rows if r[0] in knobs]
+        assert len(keep) == len(knobs)
+        _check_fd(keep, scale, scheme_name)
+
+
+# ---------------------------------------------------------------------------
+# traced steps-per-slot: one compile per scheme across a slot_us sweep
+# ---------------------------------------------------------------------------
+def test_slot_sweep_single_compile_and_static_parity():
+    from repro.netsim import run_experiment, run_experiment_batch
+
+    wl = throughput_workload(8e6, 4, num_flows=4)
+    scheme = get_scheme("matchrdma")
+    slots = (50.0, 100.0, 200.0, 400.0)
+    cfgs = [NetConfig(distance_km=100.0, horizon_us=6000.0, slot_us=s)
+            for s in slots]
+    cfgs2 = [NetConfig(distance_km=100.0, horizon_us=6000.0, slot_us=s)
+             for s in (64.0, 112.0, 250.0, 320.0)]
+    # ring SIZES stay keyed by the static slot_us twin: pin both launches
+    # (and the single-cell references) to the union padding so the only
+    # thing that varies across the sweep is the traced leaf
+    dp, hs = batch_padding(cfgs + cfgs2)
+    rows = run_experiment_batch(cfgs, wl, scheme, 6000.0,
+                                trace_mode="metrics",
+                                delay_pad=dp, history_slots=hs)
+    before = _run_traced_batch._cache_size()
+    # a DIFFERENT slot population, same batch shape: zero new compiles —
+    # slot_us is a traced NetParams leaf, steps-per-slot is traced too
+    rows2 = run_experiment_batch(cfgs2, wl, scheme, 6000.0,
+                                 trace_mode="metrics",
+                                 delay_pad=dp, history_slots=hs)
+    assert _run_traced_batch._cache_size() == before, \
+        "slot_us sweep recompiled — steps-per-slot must be traced"
+    assert len(rows2) == 4
+
+    # traced-slot batch vs the single-cell engine at matching values: the
+    # B=1 path builds its template FROM that slot value, so agreement here
+    # pins the traced wrap/boundary arithmetic against the static one
+    for s, row in zip(slots, rows):
+        ref = run_experiment(cfgs[slots.index(s)], wl, scheme, 6000.0,
+                             trace_mode="metrics",
+                             delay_pad=dp, history_slots=hs)
+        for k in ("throughput_gbps", "pause_ratio", "mean_buffer_mb"):
+            assert np.isclose(row[k], ref[k], rtol=1e-5, atol=1e-9), \
+                (s, k, row[k], ref[k])

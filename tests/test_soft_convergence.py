@@ -1,0 +1,106 @@
+"""The soft-step relaxation contract (docs/differentiable.md):
+
+  * ``soft_step=False`` is BIT-IDENTICAL to the hard engine no matter
+    what ``soft_temp`` says — the golden arrays pin this for all seven
+    schemes, sequential and batched (the relaxation must be gated out of
+    the jaxpr, not merely small);
+  * with ``soft_step=True`` the streamed metrics converge to the
+    hard-mode metrics as the temperature drops (the property test:
+    error at the coldest temperature is small, and no warmer temperature
+    is dramatically closer than the coldest — a temperature anneal
+    batches in ONE launch because ``soft_temp`` is a traced leaf).
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+from _hypo import given, settings, st
+
+from repro.config.base import NetConfig
+from repro.netsim import (
+    get_scheme, run_experiment_batch, simulate, simulate_batch,
+)
+from repro.netsim.schemes import ALL_SCHEMES
+from repro.netsim.workload import congestion_workload, throughput_workload
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "netsim_scheme_traces.npz")
+WL = throughput_workload(msg_size=1 << 20, concurrency=1, num_flows=4)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return np.load(GOLDEN)
+
+
+# ---------------------------------------------------------------------------
+# soft_step=False: bit-identity regardless of the temperature leaf
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_soft_off_bit_identical_sequential(golden, scheme):
+    # an absurd temperature: if ANY soft helper leaked into the hard
+    # program, this run could not reproduce the golden bits
+    cfg = NetConfig(distance_km=100.0, soft_step=False, soft_temp=777.0)
+    wl = congestion_workload(num_inter=4, num_intra=4,
+                             burst_start_us=3_000.0, burst_len_us=4_000.0,
+                             horizon_us=10_000.0)
+    final, traces = simulate(cfg, wl, get_scheme(scheme), 10_000.0)
+    for k, v in traces.items():
+        np.testing.assert_array_equal(
+            golden[f"seq/{scheme}/traces/{k}"], np.asarray(v),
+            err_msg=f"{scheme}/{k}: soft_step=False is not bit-identical")
+    np.testing.assert_array_equal(
+        golden[f"seq/{scheme}/final/delivered"],
+        np.asarray(final.delivered))
+
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_soft_off_bit_identical_batched(golden, scheme):
+    # per-cell DIFFERENT temperatures (soft_temp is a traced leaf): the
+    # hard batch engine must ignore all of them
+    cfgs = [NetConfig(distance_km=d, soft_step=False, soft_temp=t)
+            for d, t in ((1.0, 0.05), (300.0, 33.0))]
+    final, traces = simulate_batch(cfgs, WL, get_scheme(scheme), 8_000.0)
+    keys = [k.rsplit("/", 1)[1] for k in golden.files
+            if k.startswith(f"batch/{scheme}/traces/")]
+    for k in keys:
+        np.testing.assert_array_equal(
+            golden[f"batch/{scheme}/traces/{k}"], np.asarray(traces[k]),
+            err_msg=f"batched {scheme}/{k}: soft_step=False drifted")
+    np.testing.assert_array_equal(
+        golden[f"batch/{scheme}/final/delivered"],
+        np.asarray(final.delivered))
+
+
+# ---------------------------------------------------------------------------
+# soft -> hard convergence as temperature drops
+# ---------------------------------------------------------------------------
+TEMPS = (0.5, 0.2, 0.05)     # one batched launch: soft_temp is traced
+HORIZON = 6_000.0
+CONV_WL = throughput_workload(8e6, 4, num_flows=4)
+
+
+def _convergence_errors(scheme_name):
+    hard = run_experiment_batch(
+        [NetConfig(distance_km=96.0, horizon_us=HORIZON)],
+        CONV_WL, get_scheme(scheme_name), HORIZON,
+        trace_mode="metrics")[0]
+    cfgs = [NetConfig(distance_km=96.0, horizon_us=HORIZON,
+                      soft_step=True, soft_temp=t) for t in TEMPS]
+    soft = run_experiment_batch(cfgs, CONV_WL, get_scheme(scheme_name),
+                                HORIZON, trace_mode="metrics")
+    ref = max(abs(hard["throughput_gbps"]), 1e-6)
+    return [abs(r["throughput_gbps"] - hard["throughput_gbps"]) / ref
+            for r in soft]
+
+
+@settings(max_examples=7, deadline=None)
+@given(st.sampled_from(ALL_SCHEMES))
+def test_soft_converges_to_hard(scheme_name):
+    errs = _convergence_errors(scheme_name)
+    # cold relaxation lands on the hard metric (5%), and the coldest
+    # temperature is never much worse than the warmest (no divergence
+    # as the gates sharpen)
+    assert errs[-1] < 0.05, (scheme_name, errs)
+    assert errs[-1] <= errs[0] + 0.02, (scheme_name, errs)

@@ -31,6 +31,13 @@ Four checks, all against the live code so the docs cannot silently rot:
      every ``FailureSchedule`` constructor field in a table row of
      ``docs/failures.md``, so adding a fault-injection knob without
      documenting it breaks the build.
+  9. Soft/grad-knob coverage — every ``soft_*`` ``NetConfig`` field,
+     every tunable knob in ``grad_tune.KNOB_BOUNDS`` /
+     ``ADVERSARIAL_BOUNDS``, and every relaxation helper exported by
+     ``repro.netsim.soft`` must appear in ``docs/differentiable.md``
+     (knobs in a table row, helpers anywhere in the text), so growing
+     the differentiable surface without documenting it breaks the
+     build.
 
 Exit status is the error count (0 = clean).
 
@@ -49,6 +56,7 @@ CHANNEL_MD = os.path.join(ROOT, "docs", "channel-models.md")
 TOPOLOGY_MD = os.path.join(ROOT, "docs", "topology.md")
 SITES_MD = os.path.join(ROOT, "docs", "sites.md")
 FAILURES_MD = os.path.join(ROOT, "docs", "failures.md")
+DIFFERENTIABLE_MD = os.path.join(ROOT, "docs", "differentiable.md")
 
 # [text](target) — excluding images' inner brackets is unnecessary here;
 # nested ![alt](img) links resolve the same way
@@ -196,6 +204,33 @@ def check_failures_table(errors: list) -> None:
     _check_knob_table(errors, FAILURES_MD, knobs, "failure")
 
 
+def check_soft_grad_knobs(errors: list) -> None:
+    """Every ``soft_*`` ``NetConfig`` field and every tunable knob the
+    gradient tuner knows about must sit in a table row of
+    docs/differentiable.md, and every relaxation helper exported by
+    ``repro.netsim.soft`` must be mentioned there — all introspected, so
+    a new soft knob, tuner box, or helper fails the lint until written
+    up."""
+    import dataclasses
+
+    from repro.config.base import NetConfig
+    from repro.netsim import grad_tune, soft
+
+    knobs = sorted(f.name for f in dataclasses.fields(NetConfig)
+                   if f.name.startswith("soft_"))
+    knobs += sorted(set(grad_tune.KNOB_BOUNDS)
+                    | set(grad_tune.ADVERSARIAL_BOUNDS))
+    _check_knob_table(errors, DIFFERENTIABLE_MD, knobs, "soft/grad")
+
+    if os.path.exists(DIFFERENTIABLE_MD):
+        rel = os.path.relpath(DIFFERENTIABLE_MD, ROOT)
+        text = open(DIFFERENTIABLE_MD, encoding="utf-8").read()
+        for helper in soft.__all__:
+            if f"`{helper}" not in text:
+                errors.append(
+                    f"{rel}: soft helper {helper!r} undocumented")
+
+
 def main() -> int:
     errors: list = []
     check_links(errors)
@@ -205,13 +240,15 @@ def main() -> int:
     check_sites_table(errors)
     check_channel_knobs(errors)
     check_failures_table(errors)
+    check_soft_grad_knobs(errors)
     for e in errors:
         print(f"docs-check: {e}", file=sys.stderr)
     n_files = len(_md_files())
     if not errors:
         print(f"docs-check: OK ({n_files} markdown files, links + scheme "
               f"table + hook coverage + channel-model table + topology "
-              f"knobs + site-graph knobs + channel knobs + failure knobs)")
+              f"knobs + site-graph knobs + channel knobs + failure knobs "
+              f"+ soft/grad knobs)")
     return min(len(errors), 100)
 
 
