@@ -35,9 +35,18 @@
 #                               cell (seconds, no json append); asserts the
 #                               grad tuner matches the hillclimb objective
 #                               with fewer simulator evaluations
+#   make bench-obs-smoke      - observability round-trip on a tiny grid
+#                               (seconds, no json append): window-mode sweep
+#                               with event ring + JSONL run manifest, asserts
+#                               window rows == metrics rows, a loadable
+#                               Perfetto timeline containing PFC pause and
+#                               matchrdma brake events, and an obs_report
+#                               summarize/diff round-trip
 #   make docs-check           - docs lint: intra-repo links in README/docs,
 #                               scheme-table completeness, hook coverage,
-#                               soft/grad knob coverage in differentiable.md
+#                               soft/grad knob coverage in differentiable.md,
+#                               obs knob/event-kind coverage in
+#                               observability.md
 #   make ci                   - deps + test + smokes + docs-check
 #   make bench-netsim         - batched-vs-sequential + streaming-vs-full
 #                               sweep micro-bench; appends to
@@ -54,6 +63,9 @@
 #                               BENCH_netsim_sweep.json
 #   make bench-grad           - full grad-tuner-vs-hillclimb comparison;
 #                               appends to BENCH_netsim_sweep.json
+#   make bench-obs            - window-vs-metrics wall-clock overhead on a
+#                               wider grid; appends to
+#                               BENCH_netsim_sweep.json
 
 PYTHON ?= python
 
@@ -68,7 +80,7 @@ PYTEST_W = -W "error:passing a scheme name string:DeprecationWarning:repro\.nets
 	bench-topology bench-topology-smoke \
 	bench-sites bench-sites-smoke \
 	bench-failover bench-failover-smoke \
-	bench-grad bench-grad-smoke docs-check
+	bench-grad bench-grad-smoke bench-obs bench-obs-smoke docs-check
 
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt || \
@@ -98,12 +110,15 @@ bench-failover-smoke:
 bench-grad-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.grad_tune_bench --smoke
 
+bench-obs-smoke:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.obs_bench --smoke
+
 docs-check:
 	PYTHONPATH=src $(PYTHON) tools/docs_check.py
 
 ci: deps test bench-netsim-smoke bench-scheme-compare-smoke \
 	bench-impairment-smoke bench-topology-smoke bench-sites-smoke \
-	bench-failover-smoke bench-grad-smoke docs-check
+	bench-failover-smoke bench-grad-smoke bench-obs-smoke docs-check
 
 bench-netsim:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.netsim_sweep_bench
@@ -125,3 +140,6 @@ bench-failover:
 
 bench-grad:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.grad_tune_bench
+
+bench-obs:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.obs_bench --full

@@ -26,7 +26,7 @@ import time
 import jax
 
 from benchmarks.hillclimb import netsim_tune
-from benchmarks.netsim_sweep_bench import _append_record, _git_rev
+from benchmarks.record import append_record as _append_record, git_rev as _git_rev
 from repro.netsim import grad_tune
 
 SMOKE = dict(dists=(100.0,), horizon_us=6_000.0, hc_iters=2, grad_steps=4)

@@ -79,12 +79,11 @@ def analyse(lowered, multi_pod, model_flops, chips, label):
     print("top ops by HBM bytes:")
     for op, b in op_breakdown(txt, top=8):
         print(f"  {op:26s} {b / 1e9:10.2f} GB")
-    try:
-        ma = compiled.memory_analysis()
-        print(f"temp/device={ma.temp_size_in_bytes / 1e9:.2f}GB "
-              f"args={ma.argument_size_in_bytes / 1e9:.2f}GB")
-    except Exception:
-        pass
+    from benchmarks.record import memory_figures
+    figs = memory_figures(compiled)
+    if "temp_size_in_bytes" in figs:
+        print(f"temp/device={figs['temp_size_in_bytes'] / 1e9:.2f}GB "
+              f"args={figs.get('argument_size_in_bytes', 0) / 1e9:.2f}GB")
     return {"t_compute": t_c, "t_memory": t_m, "t_intra": t_i, "t_inter": t_x}
 
 

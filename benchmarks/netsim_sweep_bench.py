@@ -29,9 +29,7 @@ on every run.
 """
 from __future__ import annotations
 
-import json
 import os
-import subprocess
 import time
 
 import jax
@@ -42,21 +40,16 @@ from repro.netsim.runner import run_experiment_batch
 from repro.netsim.schemes import get_scheme
 from repro.netsim.workload import throughput_workload
 
-BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
-                          "BENCH_netsim_sweep.json")
+from benchmarks import record as _record
+
+BENCH_PATH = _record.BENCH_PATH
 
 
 def _git_rev() -> str:
     """Short HEAD rev, with a ``-dirty`` suffix when the worktree has
     uncommitted changes — a bench row must never attribute dirty-tree
-    results to the clean commit."""
-    try:
-        out = subprocess.run(
-            ["git", "describe", "--always", "--dirty"], capture_output=True,
-            text=True, timeout=10, cwd=os.path.dirname(BENCH_PATH) or ".")
-        return out.stdout.strip() or "unknown"
-    except (OSError, subprocess.SubprocessError):
-        return "unknown"
+    results to the clean commit (canonical impl: benchmarks.record)."""
+    return _record.git_rev(cwd=os.path.dirname(BENCH_PATH) or ".")
 
 
 def _block(tree):
@@ -220,23 +213,9 @@ def run(full: bool = False, smoke: bool = False):
 
 
 def _append_record(record: dict) -> None:
-    record = dict(record, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"))
-    history = []
-    if os.path.exists(BENCH_PATH):
-        try:
-            with open(BENCH_PATH) as f:
-                history = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            history = []
-    # one entry per (grid, backend, git_rev): re-running a bench at the
-    # same rev refreshes its row instead of stacking near-identical ones
-    key = (record["grid"], record.get("backend"), record.get("git_rev"))
-    history = [h for h in history
-               if (h.get("grid"), h.get("backend"), h.get("git_rev")) != key]
-    history.append(record)
-    with open(BENCH_PATH, "w") as f:
-        json.dump(history, f, indent=2)
-        f.write("\n")
+    # module-global BENCH_PATH read at CALL time: tests monkeypatch it to
+    # redirect the append (benchmarks.record holds the shared logic)
+    _record.append_record(record, BENCH_PATH)
 
 
 def main():

@@ -1,0 +1,192 @@
+"""Observability smoke bench: window-mode sweep -> run manifest +
+Perfetto timeline + ``tools/obs_report.py`` round-trip.
+
+The acceptance exercise of the obs layer (docs/observability.md), kept
+tiny so CI runs it in seconds:
+
+  1. a 2-distance × 2-scheme grid runs under ``trace_mode="window"`` with
+     the event ring enabled and ``manifest_path`` set — every launch goes
+     through the AOT profiling path;
+  2. the manifest must summarize AND diff (against itself) through
+     ``tools/obs_report.py``;
+  3. a direct ``simulate_batch`` of the same grid exports a Chrome
+     trace-event JSON that must be loadable and must contain PFC pause
+     events (dcqcn cell) and matchrdma brake events;
+  4. window-mode rows must equal metrics-mode rows exactly (same streamed
+     accumulators — the ring rides along for free).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.obs_bench --smoke
+
+``--full`` additionally appends a wall-clock comparison record (window vs
+metrics mode on a bigger grid) to ``BENCH_netsim_sweep.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import os
+import tempfile
+import time
+
+RING_SLOTS = 32
+HORIZON_US = 12_000.0
+
+
+def _grid():
+    from repro.config.base import NetConfig
+    from repro.netsim.workload import congestion_workload
+    cfgs = [dataclasses.replace(NetConfig(distance_km=d),
+                                event_ring_slots=RING_SLOTS)
+            for d in (100.0, 300.0)]
+    wl = congestion_workload(num_inter=8, num_intra=8,
+                             burst_start_us=2_000.0, burst_len_us=6_000.0,
+                             horizon_us=HORIZON_US)
+    return cfgs, wl
+
+
+def run_smoke(out_dir: str = None) -> dict:
+    """The manifest + timeline + report round-trip; returns a summary dict
+    (also the tested path — tests/test_obs.py calls this)."""
+    import numpy as np
+    from repro.netsim import (
+        decode_events, simulate_batch, sweep_grid, timeline_from_window,
+        export_timeline,
+    )
+    from tools import obs_report
+
+    out_dir = out_dir or tempfile.mkdtemp(prefix="obs_bench_")
+    os.makedirs(out_dir, exist_ok=True)
+    cfgs, wl = _grid()
+    manifest_path = os.path.join(out_dir, "manifest.jsonl")
+    timeline_path = os.path.join(out_dir, "timeline.json")
+
+    # 1. window-mode sweep with manifest emission
+    t0 = time.perf_counter()
+    rows_w = sweep_grid(cfgs, wl, ("dcqcn", "matchrdma"), HORIZON_US,
+                        trace_mode="window", manifest_path=manifest_path)
+    window_s = time.perf_counter() - t0
+    rows_m = sweep_grid(
+        [dataclasses.replace(c, event_ring_slots=0) for c in cfgs], wl,
+        ("dcqcn", "matchrdma"), HORIZON_US, trace_mode="metrics")
+    for a, b in zip(rows_w, rows_m):
+        for k in a:
+            same = a[k] == b[k] or (a[k] != a[k] and b[k] != b[k])
+            assert same, f"window/metrics row divergence at {k}: " \
+                         f"{a[k]} != {b[k]}"
+
+    # 2. manifest round-trip through the CLI
+    header, launches = obs_report.load_manifest(manifest_path)
+    assert header.get("record") == "header" and header.get("fingerprint")
+    # one launch per scheme (both cells fit one chunk on this tiny grid)
+    assert len(launches) == 2, launches
+    assert all("execute_s" in rec and "compile_s" in rec
+               for rec in launches)
+    buf = io.StringIO()
+    obs_report.summarize(manifest_path, out=buf)
+    assert "totals:" in buf.getvalue()
+    buf = io.StringIO()
+    obs_report.diff(manifest_path, manifest_path, out=buf)
+    assert f"matched launches: {len(launches)}" in buf.getvalue()
+
+    # 3. timeline export from a direct batched window run
+    from repro.netsim import get_scheme
+    kinds = set()
+    docs = []
+    for scheme in ("dcqcn", "matchrdma"):
+        final, aux = simulate_batch(cfgs, wl, get_scheme(scheme),
+                                    HORIZON_US, trace_mode="window")
+        for cell in range(len(cfgs)):
+            kinds |= {e["kind"] for e in
+                      decode_events(aux.events, RING_SLOTS, cell=cell)}
+        docs.append(timeline_from_window(
+            aux, dt_us=cfgs[0].dt_us,
+            steps=cfgs[0].horizon_steps(HORIZON_US),
+            window_steps=cfgs[0].trace_window_steps,
+            event_ring_slots=RING_SLOTS,
+            labels=[f"{scheme} @ {c.distance_km:.0f}km" for c in cfgs]))
+    merged = {"traceEvents": [], "displayTimeUnit": "ms"}
+    for i, doc in enumerate(docs):
+        for rec in doc["traceEvents"]:
+            merged["traceEvents"].append(dict(rec, pid=rec["pid"]
+                                              + i * len(cfgs)))
+    export_timeline(timeline_path, merged)
+    loaded = json.load(open(timeline_path))
+    assert loaded["traceEvents"], "empty timeline"
+    ev_names = {r["name"] for r in loaded["traceEvents"]
+                if r.get("ph") == "i"}
+    assert "pfc_xoff" in ev_names, f"no PFC pause events: {ev_names}"
+    assert "scheme_brake" in ev_names, f"no brake events: {ev_names}"
+    assert "pfc_xoff" in kinds and "scheme_brake" in kinds
+
+    n_counter = sum(1 for r in loaded["traceEvents"] if r.get("ph") == "C")
+    summary = {
+        "manifest": manifest_path,
+        "timeline": timeline_path,
+        "window_sweep_s": round(window_s, 3),
+        "total_compile_s": round(header.get("total_compile_s", 0.0), 3),
+        "total_execute_s": round(header.get("total_execute_s", 0.0), 3),
+        "event_kinds": sorted(kinds),
+        "timeline_counter_events": n_counter,
+        "timeline_instant_events":
+            sum(1 for r in loaded["traceEvents"] if r.get("ph") == "i"),
+        "rows": len(rows_w),
+    }
+    # np only used for asserting finite figures; keep the import honest
+    assert np.isfinite(summary["window_sweep_s"])
+    return summary
+
+
+def run_full() -> None:
+    """Window vs metrics wall-clock on a wider grid; appends a BENCH row."""
+    import jax
+    from repro.netsim import sweep_grid
+    from benchmarks.record import append_record, git_rev
+
+    cfgs, wl = _grid()
+    cfgs = [dataclasses.replace(c, distance_km=d)
+            for c in cfgs for d in (100.0, 400.0, 700.0, 1000.0)]
+    timings = {}
+    for mode in ("metrics", "window"):
+        t0 = time.perf_counter()
+        sweep_grid(cfgs, wl, ("dcqcn", "matchrdma"), HORIZON_US,
+                   trace_mode=mode)
+        timings[mode] = time.perf_counter() - t0
+    append_record({
+        "grid": "obs_window_vs_metrics",
+        "backend": jax.default_backend(),
+        "git_rev": git_rev(),
+        "n_cells": len(cfgs),
+        "metrics_s": round(timings["metrics"], 3),
+        "window_s": round(timings["window"], 3),
+        "window_overhead":
+            round(timings["window"] / max(timings["metrics"], 1e-9), 3),
+    })
+    print(f"window overhead vs metrics: "
+          f"{timings['window'] / max(timings['metrics'], 1e-9):.2f}x")
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid -> manifest + timeline + obs_report "
+                         "round-trip with hard asserts (CI)")
+    ap.add_argument("--full", action="store_true",
+                    help="wider grid; appends window-vs-metrics timings "
+                         "to BENCH_netsim_sweep.json")
+    ap.add_argument("--out-dir", default=None,
+                    help="artifact directory (default: a temp dir)")
+    args = ap.parse_args()
+    if args.full:
+        run_full()
+        return
+    summary = run_smoke(args.out_dir)
+    for k, v in summary.items():
+        print(f"{k}: {v}")
+    print("obs smoke: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Shared bench record-keeping: git-rev stamping, deduplicating appends to
+``BENCH_netsim_sweep.json``, and XLA memory-figure capture.
+
+Every bench used to carry its own copy of this logic
+(``netsim_sweep_bench._git_rev``/``_append_record``, an ad-hoc
+``memory_analysis()`` print in ``hillclimb.analyse``); this module is the
+one home. ``git_rev`` and ``memory_figures`` are re-exports of the
+canonical implementations in ``repro.netsim.obs.profile`` (src never
+imports benchmarks, so the dependency points this way only).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.netsim.obs.profile import git_rev, memory_figures  # noqa: F401
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_netsim_sweep.json")
+
+
+def append_record(record: dict, path: str = None) -> None:
+    """Timestamp ``record`` and append it to the bench history JSON,
+    replacing any prior entry with the same ``(grid, backend, git_rev)``
+    key — re-running a bench at the same rev refreshes its row instead of
+    stacking near-identical ones. The record should already carry a
+    ``git_rev`` field (stamp it with ``git_rev()``)."""
+    path = BENCH_PATH if path is None else path
+    record = dict(record, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"))
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    key = (record["grid"], record.get("backend"), record.get("git_rev"))
+    history = [h for h in history
+               if (h.get("grid"), h.get("backend"), h.get("git_rev")) != key]
+    history.append(record)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+        f.write("\n")

@@ -111,12 +111,51 @@ def export_sweep_rows(rows, csv_path=None, json_path=None):
     return written
 
 
-def netsim_demo_grid(out_dir: str, trace_mode: str = "metrics"):
+def export_demo_timeline(timeline_out: str, horizon_us: float = 40_000.0):
+    """Re-run the demo grid's congestion scenario per scheme under
+    ``trace_mode="window"`` with the event ring enabled and export a
+    Chrome trace-event / Perfetto JSON (one process per scheme, counter
+    tracks for the windowed traces, instant events from the ring —
+    docs/observability.md)."""
+    import dataclasses
+
+    from repro.config.base import NetConfig
+    from repro.netsim import (
+        congestion_workload, export_timeline, get_scheme, simulate,
+    )
+    from repro.netsim.obs import decode_events
+    from repro.netsim.obs.timeline import timeline_cell
+
+    slots = 64
+    cfg = dataclasses.replace(NetConfig(distance_km=100.0),
+                              event_ring_slots=slots)
+    wl = congestion_workload()
+    steps = cfg.horizon_steps(horizon_us)
+    recs = []
+    for pid, scheme in enumerate(("dcqcn", "matchrdma")):
+        _, aux = simulate(cfg, wl, get_scheme(scheme), horizon_us,
+                          trace_mode="window")
+        recs.extend(timeline_cell(
+            pid, label=f"{scheme} @ 100km congestion", dt_us=cfg.dt_us,
+            steps=steps, window_steps=cfg.trace_window_steps,
+            window={k: v for k, v in aux.window.items()},
+            events=decode_events(aux.events, slots)))
+    doc = {"traceEvents": recs, "displayTimeUnit": "ms"}
+    export_timeline(timeline_out, doc)
+    print(f"wrote {timeline_out} ({len(recs)} trace events)")
+    return timeline_out
+
+
+def netsim_demo_grid(out_dir: str, trace_mode: str = "metrics",
+                     timeline_out: str = None):
     """Run a small heterogeneous (config × workload) Scenario grid through
     ``sweep_grid`` and export the rows as CSV + JSON artifacts. The default
     ``trace_mode="metrics"`` streams all reductions in-scan (O(B) device
     memory) and adds the scheme-streamed columns (``mean_budget_gbps``,
-    ...) to the artifacts; pass ``full`` for the trace-materialized path."""
+    ...) to the artifacts; ``window`` additionally keeps the last-W-steps
+    trace ring; pass ``full`` for the trace-materialized path.
+    ``timeline_out`` additionally exports a Perfetto/Chrome-trace JSON of
+    the congestion scenario (window mode + event ring)."""
     from repro.config.base import NetConfig
     from repro.netsim import (
         Scenario, congestion_workload, sweep_grid, throughput_workload,
@@ -136,6 +175,8 @@ def netsim_demo_grid(out_dir: str, trace_mode: str = "metrics"):
         json_path=os.path.join(out_dir, "netsim_sweep.json"))
     for p in paths:
         print(f"wrote {p} ({len(rows)} rows)")
+    if timeline_out:
+        export_demo_timeline(timeline_out)
     return rows
 
 
@@ -149,12 +190,19 @@ def main():
                          "DIR/netsim_sweep.{csv,json} instead of the "
                          "dryrun tables")
     ap.add_argument("--trace-mode", default="metrics",
-                    choices=["full", "decimate", "metrics"],
+                    choices=["full", "decimate", "metrics", "window"],
                     help="execution mode of the --netsim-out demo grid "
-                         "(default: streaming in-scan metrics)")
+                         "(default: streaming in-scan metrics; 'window' "
+                         "also keeps the last-W-steps trace ring)")
+    ap.add_argument("--timeline-out", default=None, metavar="JSON",
+                    help="with --netsim-out: also export a Perfetto/"
+                         "Chrome-trace JSON of the congestion scenario "
+                         "(window mode + event ring; open in "
+                         "ui.perfetto.dev or chrome://tracing)")
     args = ap.parse_args()
     if args.netsim_out:
-        netsim_demo_grid(args.netsim_out, trace_mode=args.trace_mode)
+        netsim_demo_grid(args.netsim_out, trace_mode=args.trace_mode,
+                         timeline_out=args.timeline_out)
         return
     cells = load(args.dir)
     if args.which in ("dryrun", "both"):

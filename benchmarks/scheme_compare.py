@@ -76,7 +76,7 @@ from repro.netsim.schemes import ALL_SCHEMES
 from repro.netsim.topology import SiteEdge, SiteGraph
 from repro.netsim.workload import FlowSpec, Workload, congestion_workload
 
-from benchmarks.netsim_sweep_bench import _append_record, _git_rev
+from benchmarks.record import append_record as _append_record, git_rev as _git_rev
 
 # scheme-streamed columns that must appear in every scheme's rows on the
 # single-pipe distance grid. rdmacell's spraying machinery only exists at
@@ -518,7 +518,7 @@ def run_failover_grid(full: bool = False, smoke: bool = False,
     return rows, cells, summary, wall_s
 
 
-def run(full: bool = False, smoke: bool = False):
+def run(full: bool = False, smoke: bool = False, manifest_path=None):
     dists = (1.0, 10.0, 50.0, 100.0, 300.0, 500.0, 1000.0)
     if full:
         dists = dists + (30.0, 700.0, 2000.0)
@@ -534,7 +534,7 @@ def run(full: bool = False, smoke: bool = False):
 
     t0 = time.time()
     rows = sweep_grid(cfgs, wl, ALL_SCHEMES, horizon_us,
-                      trace_mode="metrics")
+                      trace_mode="metrics", manifest_path=manifest_path)
     wall_s = time.time() - t0
 
     by_scheme = {}
@@ -624,6 +624,11 @@ def main():
                     help="(failover grid) crash-injection hook: abort the "
                          "sweep after N executed launches (their "
                          "checkpoints are already on disk)")
+    ap.add_argument("--manifest-out", default=None, metavar="JSONL",
+                    help="(default grid) write a per-launch compile/"
+                         "execute profiling manifest — summarize/diff it "
+                         "with tools/obs_report.py "
+                         "(docs/observability.md)")
     args = ap.parse_args()
     if args.failover_grid:
         rows, cells, summary, wall_s = run_failover_grid(
@@ -720,7 +725,8 @@ def main():
         if args.smoke:
             print("SCHEME_COMPARE_IMPAIRMENT_SMOKE_OK")
         return
-    rows, summary, wall_s = run(full=args.full, smoke=args.smoke)
+    rows, summary, wall_s = run(full=args.full, smoke=args.smoke,
+                                manifest_path=args.manifest_out)
     cols = ("scheme", "distance_km", "throughput_gbps", "peak_buffer_mb",
             "mean_buffer_mb", "p99_buffer_mb", "pause_ratio",
             "intra_thr_gbps")

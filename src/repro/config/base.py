@@ -538,6 +538,18 @@ class NetConfig:
     soft_temp: float = 1.0
     remat_steps: int = 0
 
+    # Observability (docs/observability.md). Both STATIC — they size scan
+    # carries, so they key the compile and must match across a batch.
+    # ``event_ring_slots`` > 0 carries a bounded per-scenario event ring
+    # through the scan (``trace_mode="window"`` only): discrete events
+    # (PFC edges, threshold crossings, retx onset, failure entry/exit,
+    # ``Scheme.emit_events``) are timestamped in O(E) device memory; 0 (the
+    # default) emits the exact pre-obs jaxpr. ``trace_window_steps`` is the
+    # ring length W of the windowed trace carry — ``trace_mode="window"``
+    # keeps the LAST W steps of every trace key in O(W) memory.
+    event_ring_slots: int = 0
+    trace_window_steps: int = 256
+
     @property
     def one_way_delay_us(self) -> float:
         # 5 µs per km (paper: 1 km -> 5 µs ... 1000 km -> 5 ms)

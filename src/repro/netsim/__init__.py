@@ -32,9 +32,16 @@ Public surface:
                ``SchemeCtx.link_live``. Documented in
                ``docs/failures.md``.
   * fluid    — the scheme-agnostic engine (``simulate``, ``simulate_batch``;
-               execution modes ``TRACE_MODES`` = full / decimate / metrics,
-               streaming accumulators ``MetricAcc`` + ``hist_quantile``,
-               device sharding via ``shard_scenario_axis``).
+               execution modes ``TRACE_MODES`` = full / decimate / metrics
+               / window, streaming accumulators ``MetricAcc`` +
+               ``hist_quantile``, device sharding via
+               ``shard_scenario_axis``).
+  * obs      — the observability layer (``WindowAux``, ``EVENT_KINDS``,
+               ``decode_events``, ``unroll_window``, ``export_timeline``,
+               run manifests): in-scan event rings under
+               ``trace_mode="window"``, Perfetto timeline export, and
+               launch-plan compile/execute profiling. Documented in
+               ``docs/observability.md``.
   * runner   — metric extraction + grid sweeps (``Scenario``, ``sweep``,
                ``sweep_grid``, ``run_experiment_batch``) over chunked
                (``chunk_cells``), device-sharded launch plans.
@@ -49,8 +56,13 @@ from repro.netsim.failures import (
     FailureSchedule, load_failure_json, save_failure_json,
 )
 from repro.netsim.fluid import (
-    TRACE_MODES, MetricAcc, SimState, batch_padding, hist_quantile,
-    shard_scenario_axis, simulate, simulate_batch,
+    TRACE_MODES, MetricAcc, SimState, WindowAux, batch_padding,
+    hist_quantile, shard_scenario_axis, simulate, simulate_batch,
+)
+from repro.netsim.obs import (
+    EVENT_KINDS, EventRing, decode_events, event_count, export_timeline,
+    read_manifest, timeline_from_traces, timeline_from_window,
+    unroll_window, write_manifest,
 )
 from repro.netsim.runner import (
     Scenario, chunk_cells, run_experiment, run_experiment_batch, sweep,
@@ -70,11 +82,15 @@ from repro.netsim.workload import (
 )
 
 __all__ = [
-    "ALL_SCHEMES", "CHANNEL_MODELS", "ChannelModel", "FailureSchedule",
+    "ALL_SCHEMES", "CHANNEL_MODELS", "ChannelModel", "EVENT_KINDS",
+    "EventRing", "FailureSchedule",
     "MetricAcc",
     "RELATED_SCHEMES", "SCHEMES", "Scheme",
     "Scenario", "SimState", "SiteEdge", "SiteGraph", "TRACE_MODES",
-    "WorkloadParams", "compile_site_graph", "validate_site_endpoints",
+    "WindowAux", "WorkloadParams", "compile_site_graph",
+    "validate_site_endpoints", "decode_events", "event_count",
+    "export_timeline", "read_manifest", "timeline_from_traces",
+    "timeline_from_window", "unroll_window", "write_manifest",
     "available_channel_models", "available_schemes", "batch_padding",
     "chunk_cells", "get_channel_model", "get_scheme",
     "hist_quantile", "load_failure_json", "register_channel_model",

@@ -68,6 +68,15 @@ Execution modes (``trace_mode``):
                 stream their own reductions through the
                 ``Scheme.init_metric_acc``/``accumulate_metrics``/
                 ``finalize_metrics`` hooks (mirroring ``extra_traces``).
+  ``window``    ``metrics`` plus the LAST ``cfg.trace_window_steps`` steps
+                of every trace key kept in a ring carried through the scan
+                (O(B·W) memory, still no [B, T] array) and — when
+                ``cfg.event_ring_slots > 0`` — a bounded per-scenario ring
+                of timestamped discrete events (PFC edges, threshold
+                crossings, retx onset, failure entry/exit, and whatever a
+                scheme's ``emit_events`` hook contributes). Returns
+                ``(final, WindowAux)``; ``repro.netsim.obs`` decodes rings
+                and exports Perfetto timelines (docs/observability.md).
 
 Device sharding: ``shard_scenario_axis`` splits the stacked [B] scenario
 leaves across ``jax.devices()`` (jax.sharding over the vmapped axis), and
@@ -120,7 +129,7 @@ def is_unfinished(done_at_us):
 
 WARMUP_FRAC = 0.1   # fraction of the horizon discarded as startup transient
 
-TRACE_MODES = ("full", "decimate", "metrics")
+TRACE_MODES = ("full", "decimate", "metrics", "window")
 
 # engine-owned streaming reductions over the per-step trace dict: warm-step
 # sums (-> means) and all-step running maxes
@@ -157,6 +166,20 @@ class MetricAcc(NamedTuple):
     scheme: object    # scheme-private accumulator (Scheme.init_metric_acc)
     chan: object      # channel-private accumulator
                       # (ChannelModel.init_metric_acc; None when ideal)
+
+
+class WindowAux(NamedTuple):
+    """Aux output of ``trace_mode="window"`` (docs/observability.md).
+
+    Everything ``metrics`` mode streams, PLUS the last
+    ``cfg.trace_window_steps`` steps of every trace key and (optionally)
+    the event ring — all O(W + E) per scenario, never O(T). Under the
+    batched engine every leaf gains a leading [B] axis."""
+    acc: MetricAcc    # the same streamed Fig. 3 reductions as "metrics"
+    window: dict      # trace key -> [W, ...] ring; step t lives in row
+                      # t mod W (repro.netsim.obs.unroll_window reorders)
+    events: object    # obs.EventRing when cfg.event_ring_slots > 0,
+                      # else None
 
 
 def _failure_len(cfg, params) -> int:
@@ -890,10 +913,61 @@ def _scan_with_mode(step, scheme, channel, state0, steps: int, mode: str,
 
     Returns ``(final_state, aux)`` where ``aux`` is the [T]-stacked trace
     dict (``full``), the [T//decimate]-stacked trace dict of every
-    ``decimate``-th step (``decimate``), or a ``MetricAcc`` (``metrics`` —
-    no per-step array is ever allocated).
+    ``decimate``-th step (``decimate``), a ``MetricAcc`` (``metrics`` —
+    no per-step array is ever allocated), or a ``WindowAux`` (``window``
+    — the metrics accumulator plus the last-W-steps trace ring and the
+    optional event ring, still no [T]-sized array).
     """
     ts = jnp.arange(steps, dtype=jnp.int32)
+    if mode == "window":
+        # Observability path (docs/observability.md): the event/window
+        # machinery wraps AROUND ``step`` — the transition itself is the
+        # byte-identical function every other mode runs, so ring-off
+        # modes never see any of this code in their jaxpr.
+        from repro.netsim.obs.events import (
+            engine_event_candidates, init_event_ring, push_events,
+        )
+        ctx = step.ctx
+        w = max(int(ctx.cfg.trace_window_steps), 1)
+        slots = int(ctx.cfg.event_ring_slots)
+        acc0 = _init_metric_acc(scheme, channel, ctx, state0)
+        track_chan = _track_chan(channel, ctx.cfg, ctx.params)
+        out_spec = jax.eval_shape(lambda s, t: step(s, t)[1], state0,
+                                  jnp.int32(0))
+        ring0 = {k: jnp.zeros((w,) + tuple(v.shape), v.dtype)
+                 for k, v in out_spec.items()}
+        ering0 = init_event_ring(slots) if slots > 0 else None
+
+        def wstep(carry, t):
+            state, acc, ring, ev = carry
+            new_state, out = step(state, t)
+            inc = (t >= warm).astype(jnp.float32)
+            acc = _accumulate_engine(acc, out, inc)
+            acc = acc._replace(scheme=scheme.accumulate_metrics(
+                ctx, acc.scheme, new_state, out, inc))
+            if track_chan:
+                acc = acc._replace(chan=channel.accumulate_metrics(
+                    ctx, acc.chan, new_state, out, inc))
+            ring = {k: ring[k].at[jnp.mod(t, w)].set(out[k]) for k in ring}
+            if ev is not None:
+                cands = list(engine_event_candidates(ctx, state, new_state,
+                                                     t))
+                cands += list(scheme.emit_events(ctx, state, new_state,
+                                                 out))
+                if len(cands) > slots:
+                    raise ValueError(
+                        f"event_ring_slots={slots} is smaller than the "
+                        f"{len(cands)} per-step event candidates of this "
+                        f"run — raise NetConfig.event_ring_slots so one "
+                        f"step can never overflow the ring "
+                        f"(docs/observability.md)")
+                t_us = t.astype(jnp.float32) * ctx.dt_us
+                ev = push_events(ev, slots, t_us, cands)
+            return (new_state, acc, ring, ev), None
+
+        (final, acc, ring, ering), _ = jax.lax.scan(
+            wstep, (state0, acc0, ring0, ering0), ts)
+        return final, WindowAux(acc=acc, window=ring, events=ering)
     if mode == "metrics":
         acc0 = _init_metric_acc(scheme, channel, step.ctx, state0)
         track_chan = _track_chan(channel, step.ctx.cfg, step.ctx.params)
@@ -1078,7 +1152,8 @@ def simulate_batch(cfgs: Sequence[NetConfig], workload, scheme,
                    trace_mode: str = "full", decimate: int = 1,
                    delay_pad: int = 0, history_slots: int = 0,
                    devices: Optional[Sequence] = None,
-                   warm_steps: Optional[int] = None, channel=None):
+                   warm_steps: Optional[int] = None, channel=None,
+                   profile: Optional[dict] = None):
     """Run a whole scenario grid as ONE vmapped computation.
 
     ``cfgs``: the per-scenario configs (distance / capacity / buffer grids);
@@ -1099,7 +1174,11 @@ def simulate_batch(cfgs: Sequence[NetConfig], workload, scheme,
     reductions (default ``WARMUP_FRAC`` of the horizon); ``channel`` is a
     registered channel-model name or instance (None = ``"ideal"``) —
     impairment KNOBS are traced ``NetParams`` leaves, so a loss x jitter
-    grid still compiles once per scheme.
+    grid still compiles once per scheme. ``profile``: pass a dict to route
+    the launch through the AOT profiling path
+    (``repro.netsim.obs.profiled_traced_batch``) — it is filled in place
+    with the compile/execute wall-clock split and XLA memory figures
+    (docs/observability.md).
     """
     cfgs = list(cfgs)
     if not cfgs:
@@ -1139,9 +1218,18 @@ def simulate_batch(cfgs: Sequence[NetConfig], workload, scheme,
         wlp = jax.tree.map(rep, wlp)
     if len(devs) > 1:
         params, wlp = shard_scenario_axis(params, wlp, devs)
-    out = _run_traced_batch(tmpl, params, wlp, scheme, steps,
-                            period_slots, delay_pad, history_slots,
-                            trace_mode, decimate, warm, channel)
+    if profile is not None:
+        from repro.netsim.obs.profile import profiled_traced_batch
+        profile.update(n_cells=b, pad=pad, n_devices=len(devs),
+                       steps=steps, trace_mode=trace_mode)
+        out = profiled_traced_batch(tmpl, params, wlp, scheme, steps,
+                                    period_slots, delay_pad, history_slots,
+                                    trace_mode, decimate, warm, channel,
+                                    profile)
+    else:
+        out = _run_traced_batch(tmpl, params, wlp, scheme, steps,
+                                period_slots, delay_pad, history_slots,
+                                trace_mode, decimate, warm, channel)
     if pad:
         out = jax.tree.map(lambda x: x[:b], out)
     return out

@@ -299,9 +299,9 @@ def chunk_cells(steps: int, trace_mode: str = "full", decimate: int = 1,
     ``MAX_TRACE_FLOATS`` f32 values (~256 MB) — multi-link grids
     (``num_links > 1``) add per-link [L] trace keys, so their per-step
     float estimate grows with L and the chunk shrinks accordingly; in
-    ``metrics`` mode the launch is O(B) anyway and the flat
-    ``METRICS_CHUNK_CELLS`` ceiling only caps per-launch compile/host-row
-    cost. ``schedule_floats`` is the per-cell resident footprint of a
+    ``metrics`` (and ``window`` — O(B·W) with a small fixed W) mode the
+    launch is O(B) anyway and the flat ``METRICS_CHUNK_CELLS`` ceiling
+    only caps per-launch compile/host-row cost. ``schedule_floats`` is the per-cell resident footprint of a
     ``trace_replay`` schedule table (``num_paths * schedule_len * 3``
     f32 values — the stacked ``chan_schedule`` leaf rides along with
     every launch), folded into the per-cell budget in every mode so a
@@ -313,7 +313,7 @@ def chunk_cells(steps: int, trace_mode: str = "full", decimate: int = 1,
     shares one compiled program.)
     """
     if chunk_cells is None:
-        if trace_mode == "metrics":
+        if trace_mode in ("metrics", "window"):
             chunk_cells = METRICS_CHUNK_CELLS
             if schedule_floats > 0:
                 chunk_cells = min(
@@ -433,8 +433,9 @@ def _check_conservation(scheme_name: str, aux, lo: int, n_real: int,
     the engine value AT step ``(j+1)*decimate - 1``, so reported steps are
     exact at any decimation; metrics mode only streams the per-cell running
     max, so its step is ``None``."""
-    if trace_mode == "metrics":
-        m = np.asarray(aux.maxes["cons_err"])[:n_real]
+    if trace_mode in ("metrics", "window"):
+        maxes = aux.maxes if trace_mode == "metrics" else aux.acc.maxes
+        m = np.asarray(maxes["cons_err"])[:n_real]
         bad = m > tol
         if bad.any():
             i = int(np.argmax(bad))
@@ -554,14 +555,16 @@ def _is_oom_error(e: Exception) -> bool:
 
 def _run_launch(launch: _Launch, cfgs, wlp_np, grid_static, period_slots,
                 trace_mode, decimate, devices, channel, n_dev: int,
-                strict_conservation: bool, conservation_tol: float
-                ) -> List[dict]:
+                strict_conservation: bool, conservation_tol: float,
+                profile: Optional[dict] = None) -> List[dict]:
     """One launch -> its REAL cells' rows (grid order), with
     retry-with-smaller-chunk backoff: a device-OOM failure splits the
     launch into two half-size launches and recurses (each half still pads
     to a device multiple), down to single-cell launches before giving up.
     The conservation guard runs per launch so the raised coordinates are
-    the first violation of the first offending chunk."""
+    the first violation of the first offending chunk. ``profile``: a dict
+    routed to the AOT profiling path (filled in place with the launch's
+    compile/execute split and memory figures — docs/observability.md)."""
     horizon, steps, warm, delay_pad, history_slots = grid_static
     sub_cfgs = cfgs[launch.lo:launch.hi]
     sub_wlp = WorkloadParams(*(v[launch.lo:launch.hi] for v in wlp_np))
@@ -572,7 +575,8 @@ def _run_launch(launch: _Launch, cfgs, wlp_np, grid_static, period_slots,
             sub_cfgs, sub_wlp, launch.scheme, horizon, period_slots,
             trace_mode=trace_mode, decimate=decimate,
             delay_pad=delay_pad, history_slots=history_slots,
-            devices=devices, warm_steps=warm, channel=channel)
+            devices=devices, warm_steps=warm, channel=channel,
+            profile=profile)
     except Exception as e:  # noqa: BLE001 — filtered to OOM right below
         if not _is_oom_error(e) or n_real <= 1:
             raise
@@ -581,6 +585,8 @@ def _run_launch(launch: _Launch, cfgs, wlp_np, grid_static, period_slots,
             f"launch ({launch.scheme.name}, cells [{launch.lo}, "
             f"{launch.hi})) hit device OOM; retrying as two half-size "
             f"launches", RuntimeWarning, stacklevel=2)
+        if profile is not None:
+            profile["oom_split"] = True
         rows = []
         for lo, hi in ((launch.lo, mid), (mid, launch.hi)):
             pad = hi - lo
@@ -597,9 +603,10 @@ def _run_launch(launch: _Launch, cfgs, wlp_np, grid_static, period_slots,
     final_np = {"delivered": np.asarray(final.delivered),
                 "done_at_us": np.asarray(final.done_at_us)}
     wl_np = WorkloadParams(*(np.asarray(v) for v in sub_wlp))
-    if trace_mode == "metrics":
+    if trace_mode in ("metrics", "window"):
+        acc = aux if trace_mode == "metrics" else aux.acc
         sub_rows = _metrics_streaming(sub_cfgs, wl_np, launch.scheme,
-                                      channel, final_np, aux, steps, warm)
+                                      channel, final_np, acc, steps, warm)
     else:
         traces_np = {k: np.asarray(v) for k, v in aux.items()}
         sub_rows = _metrics_batch(
@@ -615,7 +622,8 @@ def _execute_plan(plan: Sequence[_Launch], cfgs, wlp: WorkloadParams,
                   on_nonfinite: str = "keep",
                   strict_conservation: bool = False,
                   conservation_tol: float = 1e-3,
-                  abort_after_launches: Optional[int] = None
+                  abort_after_launches: Optional[int] = None,
+                  manifest_path: Optional[str] = None
                   ) -> Dict[object, list]:
     """Run every launch; returns scheme -> full row list (grid order).
     ``grid_static`` is the shared ``_grid_static`` tuple, so all chunks
@@ -635,6 +643,12 @@ def _execute_plan(plan: Sequence[_Launch], cfgs, wlp: WorkloadParams,
       * ``abort_after_launches`` — deterministic crash-injection hook:
         raise after N launches have executed (checkpoints for those N are
         already on disk); the resume test kills sweeps with it.
+      * ``manifest_path`` — write a JSONL run manifest (one header record
+        with git rev + plan fingerprint + backend, one record per launch
+        with the compile/execute wall-clock split and XLA memory
+        figures). Every launch routes through the AOT profiling path;
+        ``tools/obs_report.py`` summarizes and diffs manifests
+        (docs/observability.md).
     """
     channel = get_channel_model(channel)
     if on_nonfinite not in ("keep", "quarantine", "raise"):
@@ -645,11 +659,13 @@ def _execute_plan(plan: Sequence[_Launch], cfgs, wlp: WorkloadParams,
     n_dev = len(devices) if devices is not None else len(jax.devices())
 
     fingerprint = None
-    if checkpoint_dir is not None:
-        os.makedirs(checkpoint_dir, exist_ok=True)
+    if checkpoint_dir is not None or manifest_path is not None:
         fingerprint = _plan_fingerprint(plan, cfgs, wlp_np, grid_static,
                                         period_slots, trace_mode, decimate,
                                         channel)
+    if checkpoint_dir is not None:
+        os.makedirs(checkpoint_dir, exist_ok=True)
+    manifest = [] if manifest_path is not None else None
 
     rows: Dict[object, list] = {}
     executed = 0
@@ -660,21 +676,54 @@ def _execute_plan(plan: Sequence[_Launch], cfgs, wlp: WorkloadParams,
             cached = _load_checkpoint(ckpt, fingerprint)
             if cached is not None:
                 rows.setdefault(launch.scheme, []).extend(cached)
+                if manifest is not None:
+                    manifest.append({"scheme": launch.scheme.name,
+                                     "lo": launch.lo, "hi": launch.hi,
+                                     "pad_to": launch.pad_to,
+                                     "resumed": True})
                 continue
         if abort_after_launches is not None \
                 and executed >= abort_after_launches:
             raise RuntimeError(
                 f"abort_after_launches: aborting sweep after {executed} "
                 f"executed launches (crash-injection hook)")
+        prof = {} if manifest is not None else None
         sub_rows = _guard_nonfinite(
             _run_launch(launch, cfgs, wlp_np, grid_static, period_slots,
                         trace_mode, decimate, devices, channel, n_dev,
-                        strict_conservation, conservation_tol),
+                        strict_conservation, conservation_tol, prof),
             launch.lo, on_nonfinite)
         if ckpt is not None:
             _write_checkpoint(ckpt, fingerprint, launch, sub_rows)
         executed += 1
+        if manifest is not None:
+            prof.update(scheme=launch.scheme.name, lo=launch.lo,
+                        hi=launch.hi, pad_to=launch.pad_to,
+                        n_real=launch.hi - launch.lo)
+            manifest.append(prof)
         rows.setdefault(launch.scheme, []).extend(sub_rows)
+    if manifest_path is not None:
+        from repro.netsim.obs.profile import write_manifest
+        executed_recs = [m for m in manifest if not m.get("resumed")]
+        header = {
+            "fingerprint": fingerprint,
+            "backend": jax.default_backend(),
+            "n_devices": n_dev,
+            "trace_mode": trace_mode,
+            "decimate": int(decimate),
+            "horizon_us": float(grid_static[0]),
+            "steps": int(grid_static[1]),
+            "warm_steps": int(grid_static[2]),
+            "n_cells": len(cfgs),
+            "schemes": sorted({ln.scheme.name for ln in plan}),
+            "n_launches": len(plan),
+            "n_resumed": len(manifest) - len(executed_recs),
+            "total_compile_s": sum(m.get("compile_s", 0.0)
+                                   for m in executed_recs),
+            "total_execute_s": sum(m.get("execute_s", 0.0)
+                                   for m in executed_recs),
+        }
+        write_manifest(manifest_path, header, manifest)
     return rows
 
 
@@ -719,7 +768,8 @@ def run_experiment_batch(cfgs: Sequence[NetConfig], workload, scheme,
                          resume: bool = False, on_nonfinite: str = "keep",
                          strict_conservation: bool = False,
                          conservation_tol: float = 1e-3,
-                         abort_after_launches: Optional[int] = None
+                         abort_after_launches: Optional[int] = None,
+                         manifest_path: Optional[str] = None
                          ) -> List[Dict[str, float]]:
     """Fig. 3 metrics for every scenario of a grid, from a chunked launch
     plan (one compiled program per scheme) and one vectorized metric pass
@@ -740,8 +790,10 @@ def run_experiment_batch(cfgs: Sequence[NetConfig], workload, scheme,
     ``checkpoint_dir`` + ``resume`` for crash-proof per-launch
     checkpointing, ``on_nonfinite`` for the per-cell finite guard,
     ``strict_conservation`` (+ ``conservation_tol``) to raise
-    ``ConservationError`` with (cell, step) coordinates, and
-    ``abort_after_launches`` as the deterministic crash-injection hook."""
+    ``ConservationError`` with (cell, step) coordinates,
+    ``abort_after_launches`` as the deterministic crash-injection hook,
+    and ``manifest_path`` to emit a JSONL run manifest with per-launch
+    compile/execute timings and memory figures (docs/observability.md)."""
     cfgs = list(cfgs)
     scheme = get_scheme(scheme)
     channel = get_channel_model(channel)
@@ -758,7 +810,8 @@ def run_experiment_batch(cfgs: Sequence[NetConfig], workload, scheme,
                          on_nonfinite=on_nonfinite,
                          strict_conservation=strict_conservation,
                          conservation_tol=conservation_tol,
-                         abort_after_launches=abort_after_launches)[scheme]
+                         abort_after_launches=abort_after_launches,
+                         manifest_path=manifest_path)[scheme]
 
 
 def convergence_horizon_us(cfgs: Sequence[NetConfig],
@@ -801,7 +854,8 @@ def sweep_grid(scenarios, workload=None, schemes=(),
                on_nonfinite: str = "keep",
                strict_conservation: bool = False,
                conservation_tol: float = 1e-3,
-               abort_after_launches: Optional[int] = None):
+               abort_after_launches: Optional[int] = None,
+               manifest_path: Optional[str] = None):
     """Heterogeneous scenario grids × schemes, executed as ONE launch plan:
     the grid is stacked once, chunked once, and every (scheme, chunk) pair
     is a device launch sharing the grid-wide static shapes. Returns rows in
@@ -829,7 +883,9 @@ def sweep_grid(scenarios, workload=None, schemes=(),
     bit-identical rows; ``on_nonfinite`` quarantines or raises on diverged
     cells; ``strict_conservation`` raises ``ConservationError`` naming the
     (cell, step) of the first violation; ``abort_after_launches`` is the
-    deterministic crash-injection hook the resume test kills sweeps with.
+    deterministic crash-injection hook the resume test kills sweeps with;
+    ``manifest_path`` emits a JSONL run manifest with per-launch
+    compile/execute timings and memory figures (docs/observability.md).
     """
     scenarios = list(scenarios)
     if not scenarios:
@@ -871,6 +927,7 @@ def sweep_grid(scenarios, workload=None, schemes=(),
                               on_nonfinite=on_nonfinite,
                               strict_conservation=strict_conservation,
                               conservation_tol=conservation_tol,
-                              abort_after_launches=abort_after_launches)
+                              abort_after_launches=abort_after_launches,
+                              manifest_path=manifest_path)
     return [by_scheme[s][i]
             for i in range(len(cfgs)) for s in scheme_objs]

@@ -277,6 +277,21 @@ class Scheme:
             }
         return {}
 
+    def emit_events(self, ctx: SchemeCtx, prev_state, state,
+                    out: dict) -> tuple:
+        """Scheme-owned event-ring candidates (docs/observability.md).
+
+        Called once per step AROUND the transition — ``prev_state`` /
+        ``state`` are the pre/post ``SimState`` — but ONLY under
+        ``trace_mode="window"`` with ``NetConfig.event_ring_slots > 0``,
+        so the default jaxpr never contains this code. Returns a tuple of
+        ``(kind_name, obj, value, fired)`` candidates: ``kind_name`` a
+        STATIC key of ``repro.netsim.obs.EVENT_KINDS``, ``obj`` a static
+        object index, ``value`` a traced scalar payload and ``fired`` a
+        traced scalar predicate. The candidate COUNT must be static (it
+        sizes the per-step scatter). Default: no scheme events."""
+        return ()
+
     # -- streaming-metric hooks (trace_mode="metrics") ---------------------
     def init_metric_acc(self, ctx: SchemeCtx, state) -> dict:
         """Scheme-private streaming accumulator (a dict pytree so subclass

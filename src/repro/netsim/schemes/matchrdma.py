@@ -55,6 +55,14 @@ class MatchRdmaScheme(Scheme):
             * 8.0 / 1e9)
         return cols
 
+    def emit_events(self, ctx: SchemeCtx, prev_state, state, out) -> tuple:
+        # the proxy brake fired iff some flow's brake timer was reset this
+        # step (both the hard where() and the soft reset_gate path only
+        # ever move the timer DOWN on a firing — it otherwise grows by
+        # dt_us); value = the deepest post-brake modulation level
+        fired = jnp.any(state.proxy_timer < prev_state.proxy_timer)
+        return (("scheme_brake", 0, jnp.min(state.proxy_mod), fired),)
+
     def ack_view(self, ctx: SchemeCtx, state, ack_arr):
         return state.extra.pseudo.packed
 

@@ -161,6 +161,17 @@ class SdrRdmaScheme(Scheme):
         return {"sr_ack_lag": lag,
                 "sr_retx_frac": self._retx_frac(ctx, state)}
 
+    def emit_events(self, ctx: SchemeCtx, prev_state, state, out) -> tuple:
+        # the repair-budget reservation engages/releases when the
+        # degradation EWMA crosses its midpoint; value = the engaged
+        # NIC-rate fraction after the crossing
+        e0 = prev_state.extra.cong_ewma
+        e1 = state.extra.cong_ewma
+        frac = (jnp.clip(ctx.params.sdr_retx_budget_frac, 0.0,
+                         MAX_RETX_FRAC) * e1)
+        return (("scheme_budget_on", 0, frac, (e0 < 0.5) & (e1 >= 0.5)),
+                ("scheme_budget_off", 0, frac, (e0 >= 0.5) & (e1 < 0.5)))
+
     # -- streaming metrics -------------------------------------------------
     def init_metric_acc(self, ctx: SchemeCtx, state) -> dict:
         return {"ack_lag_sum": jnp.float32(0.0),

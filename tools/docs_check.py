@@ -38,6 +38,13 @@ Four checks, all against the live code so the docs cannot silently rot:
      (knobs in a table row, helpers anywhere in the text), so growing
      the differentiable surface without documenting it breaks the
      build.
+ 10. Observability coverage — every obs ``NetConfig`` knob
+     (``event_ring_slots`` + ``trace_window_*``) and every event-kind
+     name in ``repro.netsim.obs.EVENT_KINDS`` in a table row of
+     ``docs/observability.md``, so adding an obs knob or an event kind
+     without documenting it breaks the build. (The ``emit_events`` hook
+     itself is covered by the introspected Scheme-hook check on
+     ``docs/scheme-api.md``.)
 
 Exit status is the error count (0 = clean).
 
@@ -57,6 +64,7 @@ TOPOLOGY_MD = os.path.join(ROOT, "docs", "topology.md")
 SITES_MD = os.path.join(ROOT, "docs", "sites.md")
 FAILURES_MD = os.path.join(ROOT, "docs", "failures.md")
 DIFFERENTIABLE_MD = os.path.join(ROOT, "docs", "differentiable.md")
+OBSERVABILITY_MD = os.path.join(ROOT, "docs", "observability.md")
 
 # [text](target) — excluding images' inner brackets is unnecessary here;
 # nested ![alt](img) links resolve the same way
@@ -231,6 +239,23 @@ def check_soft_grad_knobs(errors: list) -> None:
                     f"{rel}: soft helper {helper!r} undocumented")
 
 
+def check_obs_table(errors: list) -> None:
+    """Every observability knob — the ``event_*``/``trace_window_*``
+    ``NetConfig`` fields — and every event-kind name in
+    ``repro.netsim.obs.EVENT_KINDS`` must sit in a table row of
+    docs/observability.md. Both introspected, so a new obs knob or event
+    kind fails the lint until written up."""
+    import dataclasses
+
+    from repro.config.base import NetConfig
+    from repro.netsim.obs import EVENT_KINDS
+
+    knobs = sorted(f.name for f in dataclasses.fields(NetConfig)
+                   if f.name.startswith(("event_", "trace_window")))
+    knobs += sorted(EVENT_KINDS)
+    _check_knob_table(errors, OBSERVABILITY_MD, knobs, "observability")
+
+
 def main() -> int:
     errors: list = []
     check_links(errors)
@@ -241,6 +266,7 @@ def main() -> int:
     check_channel_knobs(errors)
     check_failures_table(errors)
     check_soft_grad_knobs(errors)
+    check_obs_table(errors)
     for e in errors:
         print(f"docs-check: {e}", file=sys.stderr)
     n_files = len(_md_files())
@@ -248,7 +274,7 @@ def main() -> int:
         print(f"docs-check: OK ({n_files} markdown files, links + scheme "
               f"table + hook coverage + channel-model table + topology "
               f"knobs + site-graph knobs + channel knobs + failure knobs "
-              f"+ soft/grad knobs)")
+              f"+ soft/grad knobs + obs knobs/event kinds)")
     return min(len(errors), 100)
 
 
